@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks (xla path on CPU; the Pallas path is the TPU
+target, validated in interpret mode — wall times here are CPU-relative
+but the *ratios* exact/synopsis transfer)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(f, *args, iters=5):
+  f(*args)  # compile + warm
+  jax.block_until_ready(f(*args))
+  t0 = time.perf_counter()
+  for _ in range(iters):
+    out = f(*args)
+  jax.block_until_ready(out)
+  return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def decode_attention_sweep() -> Dict[str, float]:
+  B, Hkv, G, D, C = 4, 8, 4, 128, 128
+  H = Hkv * G
+  out = {}
+  for S in (4096, 16384):
+    M = S // C
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    k_syn = k.reshape(B, Hkv, M, C, D).mean(3)
+    v_syn = v.reshape(B, Hkv, M, C, D).mean(3)
+    counts = jnp.full((B, M), float(C))
+    sm = float(1 / np.sqrt(D))
+
+    exact = jax.jit(lambda q, k, v: ops.exact_decode_attention(
+        q, k, v, sm_scale=sm, impl="xla"))
+    syn = jax.jit(lambda q, k, v, ks_, vs, c: ops.synopsis_attention(
+        q, k, v, ks_, vs, c, i_max=32, sm_scale=sm, impl="xla"))
+    t_e = _time(exact, q, k, v)
+    t_s = _time(syn, q, k, v, k_syn, v_syn, counts)
+    out[f"exact_S{S}_us"] = t_e
+    out[f"synopsis_S{S}_us"] = t_s
+    out[f"speedup_S{S}"] = t_e / t_s
+  return out

@@ -1,0 +1,86 @@
+"""Benchmarks mirroring the paper's tables/figures.
+
+table1 — p99.9 component latency (ms) by technique x arrival rate
+table2 — accuracy-loss % by technique x arrival rate
+fig3   — synopsis creation vs incremental update wall time
+fig4   — ranked-section concentration of accuracy-relevant data
+fig5   — hour-long Sogou-like trace: p99.9 per minute, 3 techniques
+fig6   — accuracy loss on the same trace
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import synopsis as syn_lib
+from repro.serving.apps import SearchEngine, movielens_like, webpages_like
+from repro.serving.service import ScatterGatherService, ServiceConfig
+from repro.serving.workload import CF_RATES, hour_trace
+
+
+def table1_table2(duration_s: float = 3.0) -> Dict[str, Dict[int, dict]]:
+  out: Dict[str, Dict[int, dict]] = {}
+  for tech in ("basic", "reissue", "partial", "accuracytrader"):
+    out[tech] = {}
+    for rate in CF_RATES:
+      svc = ScatterGatherService(ServiceConfig(
+          n_components=24, technique=tech, deadline_ms=100.0, seed=3))
+      out[tech][rate] = svc.run_open_loop(rate, duration_s)
+  return out
+
+
+def fig3_update_overheads() -> Dict[str, float]:
+  data, mask = movielens_like(2048, 256, density=0.15, seed=0)
+  t0 = time.perf_counter()
+  s = syn_lib.build(data, 32, mask=mask)
+  jax.block_until_ready(s.centroids)
+  t_create = time.perf_counter() - t0
+
+  res = {"create_s": t_create}
+  for pct in (1, 5, 10):
+    k = max(1, 2048 * pct // 100)
+    rows = jnp.arange(k)
+    d2 = data.at[rows].add(0.5)
+    f = jax.jit(lambda d, r: syn_lib.update_changed(s, d, mask, r))
+    f(d2, rows)  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(d2, rows).centroids)
+    res[f"update_changed_{pct}pct_s"] = time.perf_counter() - t0
+  return res
+
+
+def fig4_concentration(n_queries: int = 30) -> List[float]:
+  docs = webpages_like(4096, 512, seed=2)
+  se = SearchEngine(docs, num_clusters=64)
+  rng = np.random.default_rng(0)
+  sections = np.zeros(10)
+  for qi in range(n_queries):
+    qv = docs[rng.integers(0, 4096)]
+    scores = np.asarray(se.syn.centroids @ qv)
+    order = np.argsort(-scores)
+    rank = np.empty_like(order)
+    rank[order] = np.arange(len(order))
+    top = np.asarray(se.search_exact(qv))
+    sec = rank[np.asarray(se.syn.row_cluster)[top]] * 10 // 64
+    for x in sec:
+      sections[x] += 1
+  return (100.0 * sections / max(sections.sum(), 1)).tolist()
+
+
+def fig5_fig6_trace(hour: int = 9, sessions: int = 12) -> dict:
+  rates = hour_trace(hour, sessions=sessions)
+  out = {}
+  for tech in ("basic", "reissue", "accuracytrader"):
+    svc = ScatterGatherService(ServiceConfig(
+        n_components=24, technique=tech, deadline_ms=100.0, seed=hour))
+    p999, loss = [], []
+    for r in rates:
+      s = svc.run_open_loop(float(r), 1.0)
+      p999.append(s["p999"])
+      loss.append(s["accuracy_loss_pct"])
+    out[tech] = {"p999_per_min": p999, "loss_per_min": loss}
+  return out

@@ -1,0 +1,113 @@
+"""Benchmark harness: one function per paper table/figure + kernel bench.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline benchmark
+reads the dry-run artifacts (run ``python -m repro.launch.dryrun --all``
+first for the full 40-cell table; missing cells are skipped here).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+
+def _row(name, us, derived=""):
+  print(f"{name},{us:.1f},{derived}")
+
+
+def bench_table1_table2():
+  from benchmarks.paper_tables import table1_table2
+  t0 = time.perf_counter()
+  res = table1_table2(duration_s=2.0)
+  us = (time.perf_counter() - t0) * 1e6
+  for rate in (20, 60, 100):
+    basic = res["basic"][rate]["p999"]
+    reissue = res["reissue"][rate]["p999"]
+    at = res["accuracytrader"][rate]["p999"]
+    _row(f"table1_p999_rate{rate}", us,
+         f"basic={basic:.0f}ms reissue={reissue:.0f}ms at={at:.0f}ms "
+         f"speedup_vs_reissue={reissue / max(at, 1e-9):.1f}x")
+  for rate in (20, 60, 100):
+    pe = res["partial"][rate]["accuracy_loss_pct"]
+    at = res["accuracytrader"][rate]["accuracy_loss_pct"]
+    _row(f"table2_accloss_rate{rate}", us,
+         f"partial={pe:.2f}% at={at:.2f}% "
+         f"reduction={pe / max(at, 1e-3):.1f}x")
+
+
+def bench_fig3():
+  from benchmarks.paper_tables import fig3_update_overheads
+  t0 = time.perf_counter()
+  res = fig3_update_overheads()
+  us = (time.perf_counter() - t0) * 1e6
+  _row("fig3_synopsis_update", us,
+       " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in res.items()))
+
+
+def bench_fig4():
+  from benchmarks.paper_tables import fig4_concentration
+  t0 = time.perf_counter()
+  sections = fig4_concentration()
+  us = (time.perf_counter() - t0) * 1e6
+  _row("fig4_concentration", us,
+       "pct_per_decile=" + "/".join(f"{s:.0f}" for s in sections))
+
+
+def bench_fig5_fig6():
+  from benchmarks.paper_tables import fig5_fig6_trace
+  t0 = time.perf_counter()
+  res = fig5_fig6_trace(hour=9, sessions=6)
+  us = (time.perf_counter() - t0) * 1e6
+  for tech, d in res.items():
+    _row(f"fig5_hour9_{tech}", us,
+         f"max_p999={max(d['p999_per_min']):.0f}ms "
+         f"mean_loss={sum(d['loss_per_min']) / len(d['loss_per_min']):.2f}%")
+
+
+def bench_kernels():
+  from benchmarks.kernels_bench import decode_attention_sweep
+  t0 = time.perf_counter()
+  res = decode_attention_sweep()
+  us = (time.perf_counter() - t0) * 1e6
+  for S in (4096, 16384):
+    _row(f"kernel_decode_S{S}", res[f"synopsis_S{S}_us"],
+         f"exact={res[f'exact_S{S}_us']:.0f}us "
+         f"speedup={res[f'speedup_S{S}']:.2f}x")
+
+
+def bench_roofline():
+  art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+  files = sorted(glob.glob(os.path.join(art, "*__single__*.json")))
+  if not files:
+    _row("roofline", 0.0, "no dry-run artifacts (run repro.launch.dryrun)")
+    return
+  worst = None
+  for f in files:
+    d = json.load(open(f))
+    r = d["roofline"]
+    name = f"{d['arch']}|{d['shape']}|{d['mode']}"
+    _row(f"roofline_{name}", r["bound_s"] * 1e6,
+         f"dom={r['dominant']} comp={r['compute_s']:.2e} "
+         f"mem={r['memory_s']:.2e} coll={r['collective_s']:.2e} "
+         f"fits={d['fits_hbm']}")
+    frac = r["compute_s"] / max(r["bound_s"], 1e-30)
+    if worst is None or frac < worst[1]:
+      worst = (name, frac)
+  if worst:
+    _row("roofline_worst_compute_fraction", 0.0,
+         f"{worst[0]} compute/bound={worst[1]:.3f}")
+
+
+def main() -> None:
+  print("name,us_per_call,derived")
+  bench_table1_table2()
+  bench_fig3()
+  bench_fig4()
+  bench_fig5_fig6()
+  bench_kernels()
+  bench_roofline()
+
+
+if __name__ == "__main__":
+  main()

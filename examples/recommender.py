@@ -1,0 +1,97 @@
+"""Paper service 1: CF recommender with AccuracyTrader (paper §3.2, §4.3).
+
+Builds a MovieLens-scale user-item matrix, creates the per-component
+synopsis (aggregated users), and reproduces the accuracy side of Table 2:
+RMSE loss vs. refinement budget, compared against partial execution that
+processes the same fraction of data *unranked*.
+
+  PYTHONPATH=src python examples/recommender.py [--users 2048 --items 400]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.apps import CFRecommender, movielens_like
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--users", type=int, default=2048)
+  ap.add_argument("--items", type=int, default=400)
+  ap.add_argument("--density", type=float, default=0.15)
+  ap.add_argument("--clusters", type=int, default=32)
+  ap.add_argument("--active-users", type=int, default=40)
+  args = ap.parse_args()
+
+  ratings, mask = movielens_like(args.users, args.items,
+                                 density=args.density, seed=1)
+  rec = CFRecommender(ratings, mask, num_clusters=args.clusters)
+  print(f"matrix {args.users}x{args.items}, "
+        f"{int(mask.sum())} ratings, {args.clusters} aggregated users "
+        f"({args.users // args.clusters}x compression)")
+
+  rng = np.random.default_rng(0)
+  budgets = [0, 1, 2, 4, 8, 16, args.clusters]
+  sq_err = {b: [] for b in budgets}
+  sq_err["exact"] = []
+  sq_err["partial_25"] = []
+
+  for t in range(args.active_users):
+    uid = int(rng.integers(0, args.users))
+    q_full, qm_full = ratings[uid], mask[uid]
+    rated = np.where(np.asarray(qm_full) > 0)[0]
+    if len(rated) < 10:
+      continue
+    test = rng.choice(rated, size=min(10, len(rated) // 2), replace=False)
+    qm = qm_full.at[jnp.asarray(test)].set(0.0)   # 80/20 split (paper §4.2)
+    q = q_full * qm
+    truth = np.asarray(q_full)[test]
+    items = jnp.asarray(test)
+
+    ex = np.asarray(rec.predict_exact(q, qm, items))
+    sq_err["exact"].append((ex - truth) ** 2)
+    for b in budgets:
+      pr = np.asarray(rec.predict(q, qm, items, b))
+      sq_err[b].append((pr - truth) ** 2)
+    # partial execution analogue: an unranked 25% of users (no synopsis)
+    keep = rng.random(args.users) < 0.25
+    sub = CFRecommenderView(rec, keep)
+    pr = np.asarray(sub.predict_exact(q, qm, items))
+    sq_err["partial_25"].append((pr - truth) ** 2)
+
+  rmse = {k: float(np.sqrt(np.mean(np.concatenate(v))))
+          for k, v in sq_err.items()}
+  base = rmse["exact"]
+  print(f"\n{'variant':>14s}  {'RMSE':>7s}  {'accuracy loss':>13s}")
+  for k in ["exact", "partial_25"] + budgets:
+    name = f"budget={k}" if isinstance(k, int) else k
+    loss = 100.0 * (rmse[k] - base) / base
+    print(f"{name:>14s}  {rmse[k]:7.4f}  {loss:+12.2f}%")
+  print("\nAccuracyTrader refines the *most correlated* clusters first, so"
+        "\nsmall budgets recover most of the exact accuracy (paper Table 2).")
+
+
+class CFRecommenderView:
+  """Exact CF restricted to a random subset of users (partial execution)."""
+
+  def __init__(self, rec: CFRecommender, keep: np.ndarray):
+    import dataclasses
+    k = jnp.asarray(keep, jnp.float32)[:, None]
+    self.rec = CFRecommender.__new__(CFRecommender)
+    self.rec.ratings = rec.ratings * k
+    self.rec.mask = rec.mask * k
+    self.rec.num_clusters = rec.num_clusters
+    self.rec.syn = rec.syn
+
+  def predict_exact(self, q, qm, items):
+    return CFRecommender.predict_exact(self.rec, q, qm, items)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,186 @@
+"""Analytic FLOPs/bytes model per (arch x shape x mode) cell.
+
+``compiled.cost_analysis()`` on this host counts ``while``-loop bodies
+once, so scanned-layer models under-report by ~n_layers x.  Since every
+matmul in this framework is an einsum we wrote, the exact counts are
+derivable in closed form; EXPERIMENTS.md §Roofline uses these, with the
+raw cost_analysis kept in the artifacts for cross-checking (they agree on
+loop-free modules — see tests/test_costmodel.py).
+
+Conventions: flops = 2*M*N*K per matmul; train total = 4x forward
+(backward 2x + full-remat forward re-run 1x); bytes = weight traffic +
+optimizer state + activation/cache traffic (leading terms only).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import common as cm
+
+
+def _attn_layer_flops(cfg: cm.ModelConfig, s_q: int, s_kv: float,
+                      cross: bool = False) -> float:
+  """Per-sequence forward flops of one attention layer (GQA or MLA)."""
+  d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+  if cfg.mla and not cross:
+    m = cfg.mla
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    proj = (d * m.q_lora_rank + m.q_lora_rank * H * qk) * s_q
+    proj += d * (m.kv_lora_rank + m.qk_rope_dim) * s_q
+    proj += m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim) * s_q
+    proj += H * m.v_head_dim * d * s_q
+    quad = s_q * s_kv * H * 2 * qk          # scores + (padded) values
+  else:
+    proj = d * hd * (2 * H + 2 * Hkv) * s_q
+    quad = s_q * s_kv * H * 2 * hd
+  return 2.0 * (proj + quad)
+
+
+def _mlp_flops(cfg, s_q):
+  return 2.0 * 3 * cfg.d_model * cfg.d_ff * s_q if cfg.d_ff else 0.0
+
+
+def _moe_flops(cfg, s_q):
+  e = cfg.moe
+  per_tok = 2.0 * cfg.d_model * e.num_experts                 # router
+  per_tok += 2.0 * 3 * cfg.d_model * e.d_ff_expert * (
+      e.top_k * e.capacity_factor + e.num_shared)
+  if e.dense_parallel:
+    per_tok += 2.0 * 3 * cfg.d_model * cfg.d_ff
+  return per_tok * s_q
+
+
+def _ssm_flops(cfg, s_q):
+  s = cfg.ssm
+  d = cfg.d_model
+  d_in = s.expand * d
+  h = d_in // s.head_dim
+  n, p, L = s.d_state, s.head_dim, min(s.chunk, max(s_q, 1))
+  proj = 2.0 * d * (2 * d_in + 2 * n + h) + 2.0 * d_in * d
+  if s_q == 1:                               # decode recurrence
+    ssd = 2.0 * 2 * h * p * n
+  else:
+    ssd = 2.0 * (L * n + L * h * p + 2 * n * h * p)
+  return (proj + ssd) * s_q
+
+
+def _layer_flops(cfg, spec: cm.LayerSpec, s_q, s_kv) -> float:
+  f = 0.0
+  if spec.kind == "attn":
+    f += _attn_layer_flops(cfg, s_q, s_kv)
+    if spec.cross_attn:
+      f += _attn_layer_flops(cfg, s_q, cfg.encoder.source_len, cross=True)
+  else:
+    f += _ssm_flops(cfg, s_q)
+  if spec.use_moe and cfg.moe:
+    f += _moe_flops(cfg, s_q)
+  else:
+    f += _mlp_flops(cfg, s_q)
+  return f
+
+
+@dataclasses.dataclass
+class CellCost:
+  flops_global: float          # whole step, all chips
+  bytes_global: float
+
+
+def cell_cost(cfg: cm.ModelConfig, shape: ShapeSpec, mode: str,
+              i_max: int | None = None,
+              causal_skip: bool = False) -> CellCost:
+  B, S = shape.global_batch, shape.seq_len
+  kind = shape.kind
+  sc = cfg.synopsis
+  i_max = sc.i_max if i_max is None else i_max
+  text = S - (cfg.frontend_tokens if cfg.frontend == "vision_stub" else 0)
+
+  if kind in ("train", "prefill"):
+    s_q = S
+    # mean causal kv length: ~S/2 with causal_skip (each q-chunk touches
+    # only keys up to its position), else full S (masked-full baseline).
+    s_kv = S / 2 + 256 if causal_skip else S
+  else:
+    s_q = 1
+    if mode == "synopsis":
+      s_kv = S // sc.cluster_size + i_max * sc.cluster_size + sc.recent
+    else:
+      s_kv = S
+
+  per_seq = 0.0
+  for spec in cfg.block_pattern:
+    per_seq += _layer_flops(cfg, spec, s_q, s_kv) * cfg.n_blocks
+  # gemma2-style local layers: cap kv at the window.
+  if any(sp.local for sp in cfg.block_pattern) and kind == "decode":
+    # recompute local layers with windowed kv
+    per_seq = 0.0
+    for spec in cfg.block_pattern:
+      kv = min(cfg.sliding_window, S) if spec.local else s_kv
+      per_seq += _layer_flops(cfg, spec, s_q, kv) * cfg.n_blocks
+
+  if cfg.encoder is not None and kind in ("train", "prefill"):
+    T = cfg.encoder.source_len
+    enc_cfg = cfg
+    per_seq += cfg.encoder.n_layers * (
+        _attn_layer_flops(enc_cfg, T, T)
+        + 2.0 * 3 * cfg.d_model * cfg.encoder.d_ff * T)
+
+  # unembed (+ frontend proj)
+  tok_out = text if kind == "train" else (1 if kind == "decode" else 1)
+  per_seq += 2.0 * cfg.d_model * cfg.vocab * (
+      text if kind in ("train",) else 1)
+  if cfg.frontend:
+    per_seq += 2.0 * cfg.frontend_dim * cfg.d_model * (
+        cfg.frontend_tokens or (cfg.encoder.source_len if cfg.encoder else 0))
+
+  fwd = per_seq * B
+  mult = 4.0 if kind == "train" else 1.0       # bwd 2x + remat re-fwd 1x
+  flops = fwd * mult
+
+  # ---- bytes (leading terms) --------------------------------------------
+  n_params = cfg.param_count()
+  act_bytes = 2.0 * B * max(s_q, 1) * cfg.d_model * cfg.n_layers * 4
+  if kind == "train":
+    # bf16 weights read fwd+bwd+remat, f32 grads w, master+m+v rw.
+    w_bytes = n_params * (2 * 3 + 4 + 3 * 4 * 2)
+    byts = w_bytes + act_bytes * 3
+  elif kind == "prefill":
+    byts = n_params * 2 + act_bytes + 2.0 * B * S * cfg.n_layers * (
+        _cache_row_bytes(cfg))
+  else:
+    byts = n_params * 2 * min(1.0, B) + _decode_cache_bytes(cfg, B, S, mode,
+                                                            i_max)
+    byts += n_params * 2 if B >= 1 else 0
+  return CellCost(flops_global=flops, bytes_global=byts)
+
+
+def _cache_row_bytes(cfg) -> float:
+  Hkv, Dk, Dv = _kv_dims(cfg)
+  return Hkv * (Dk + Dv) * 2.0
+
+
+def _kv_dims(cfg):
+  if cfg.mla:
+    m = cfg.mla
+    return 1, m.kv_lora_rank + m.qk_rope_dim, m.kv_lora_rank + m.qk_rope_dim
+  return cfg.n_kv_heads, cfg.hd, cfg.hd
+
+
+def _decode_cache_bytes(cfg, B, S, mode, i_max) -> float:
+  na = sum(1 for s in cfg.block_pattern if s.kind == "attn")
+  layers_attn = na * cfg.n_blocks
+  row = _cache_row_bytes(cfg)
+  sc = cfg.synopsis
+  if mode == "synopsis":
+    rows = S // sc.cluster_size + i_max * sc.cluster_size + sc.recent
+  else:
+    rows = S
+  rd = B * layers_attn * rows * row
+  # ssm state read/write
+  ns = sum(1 for s in cfg.block_pattern if s.kind == "mamba")
+  if ns and cfg.ssm:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    rd += 2.0 * B * ns * cfg.n_blocks * h * s.head_dim * s.d_state * 4
+  return rd

@@ -1,0 +1,100 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.analysis.report artifacts/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_b(x):
+  for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+    if abs(x) >= div:
+      return f"{x / div:.2f}{unit}"
+  return f"{x:.0f}B"
+
+
+def fmt_s(x):
+  if x >= 1.0:
+    return f"{x:.2f}s"
+  if x >= 1e-3:
+    return f"{x * 1e3:.2f}ms"
+  return f"{x * 1e6:.1f}us"
+
+
+def load(art_dir):
+  cells = {}
+  for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+    d = json.load(open(f))
+    cells[(d["arch"], d["shape"], d["mesh"], d["mode"])] = d
+  return cells
+
+
+def dryrun_table(cells) -> str:
+  rows = ["| arch | shape | mesh | mode | compile | bytes/dev | peak/dev "
+          "| fits | coll bytes/dev |",
+          "|---|---|---|---|---|---|---|---|---|"]
+  for (arch, shape, mesh, mode), d in sorted(cells.items()):
+    m = d["memory"]
+    rows.append(
+        f"| {arch} | {shape} | {mesh} | {mode} | {d['compile_s']:.0f}s "
+        f"| {fmt_b(m['argument_size_in_bytes'])} "
+        f"| {fmt_b(m['peak_bytes_per_device'])} "
+        f"| {'Y' if d['fits_hbm'] else 'N'} "
+        f"| {fmt_b(d['collectives']['total'])} |")
+  return "\n".join(rows)
+
+
+def roofline_table(cells) -> str:
+  rows = ["| arch | shape | mode | compute | memory | collective | "
+          "dominant | bound | useful FLOPs |",
+          "|---|---|---|---|---|---|---|---|---|"]
+  for (arch, shape, mesh, mode), d in sorted(cells.items()):
+    if mesh != "single":
+      continue
+    r = d["roofline"]
+    uf = r.get("useful_flops_ratio")
+    rows.append(
+        f"| {arch} | {shape} | {mode} | {fmt_s(r['compute_s'])} "
+        f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+        f"| **{r['dominant']}** | {fmt_s(r['bound_s'])} "
+        f"| {uf:.2f} |" if uf else
+        f"| {arch} | {shape} | {mode} | - | - | - | - | - | - |")
+  return "\n".join(rows)
+
+
+def summary(cells) -> str:
+  total = len(cells)
+  fits = sum(1 for d in cells.values() if d["fits_hbm"])
+  single = sum(1 for k in cells if k[2] == "single")
+  multi = sum(1 for k in cells if k[2] == "multi")
+  lines = [f"- cells compiled: {total} (single-pod {single}, "
+           f"multi-pod {multi}); fit in 16GB HBM: {fits}/{total}"]
+  # dominant-term census (single-pod)
+  census = {}
+  for k, d in cells.items():
+    if k[2] != "single":
+      continue
+    census[d["roofline"]["dominant"]] = census.get(
+        d["roofline"]["dominant"], 0) + 1
+  lines.append(f"- dominant terms (single-pod): {census}")
+  return "\n".join(lines)
+
+
+def main():
+  art = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+  cells = load(art)
+  print("## Summary\n")
+  print(summary(cells))
+  print("\n## Roofline (single-pod, 256 chips)\n")
+  print(roofline_table(cells))
+  print("\n## Dry-run (all cells)\n")
+  print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+  main()

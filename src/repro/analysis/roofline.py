@@ -1,0 +1,252 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s ICI per link)
+
+``cost_analysis`` provides per-device FLOPs/bytes of the partitioned
+module; collective bytes are parsed from the compiled HLO text (operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), also per device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+  n = 1
+  for d in dims.split(","):
+    if d:
+      n *= int(d)
+  return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+  """name -> list of body lines (post-optimization HLO text)."""
+  comps: Dict[str, list] = {}
+  cur = None
+  for line in text.splitlines():
+    s = line.strip()
+    # Computation headers look like:  %name (args...) -> type {   — args
+    # may contain nested parens (tuple params), so match loosely.
+    if s.endswith("{") and " -> " in s and "(" in s:
+      m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", s)
+      if m:
+        cur = m.group(1)
+        comps[cur] = []
+        continue
+    if s == "}":
+      cur = None
+      continue
+    if cur is not None:
+      comps[cur].append(s)
+  return comps
+
+
+def _trip_count(cond_lines: list, comps: Optional[Dict[str, list]] = None,
+                ) -> int:
+  """Recover a scan's trip count from its while-condition computation.
+
+  The loop bound appears as an s32[] constant in the condition body (the
+  compare itself is often inside a fused computation, so we take the max
+  integer constant — scans count 0..N-1 with an LT bound)."""
+  consts = []
+  for s in cond_lines:
+    m = re.match(r"%?[\w\.\-]+\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)", s)
+    if m:
+      consts.append(int(m.group(1)))
+  if not consts and comps is not None:
+    for s in cond_lines:
+      mm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", s)
+      if mm and mm.group(1) in comps:
+        for s2 in comps[mm.group(1)]:
+          m = re.match(r"%?[\w\.\-]+\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)",
+                       s2)
+          if m:
+            consts.append(int(m.group(1)))
+  return max(consts) if consts else 1
+
+
+def _comp_multipliers(text: str) -> Dict[str, int]:
+  """Execution count of each computation (nested while bodies multiply)."""
+  comps = _split_computations(text)
+  calls: Dict[str, list] = {c: [] for c in comps}   # (callee, mult)
+  for cname, lines in comps.items():
+    for s in lines:
+      mw = re.search(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*"
+                     r"body=%?([\w\.\-]+)", s)
+      if mw:
+        cond, body = mw.group(1), mw.group(2)
+        trips = _trip_count(comps.get(cond, []), comps)
+        calls[cname].append((body, trips))
+        calls[cname].append((cond, trips))
+        continue
+      for mm in re.finditer(r"(?:calls|to_apply|condition|body)=%?"
+                            r"([\w\.\-]+)", s):
+        callee = mm.group(1)
+        if callee in comps:
+          calls[cname].append((callee, 1))
+
+  entry = None
+  for line in text.splitlines():
+    m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line.strip())
+    if m:
+      entry = m.group(1)
+      break
+  mult: Dict[str, int] = {c: 0 for c in comps}
+  if entry is None:
+    return {c: 1 for c in comps}
+
+  import collections
+  todo = collections.deque([(entry, 1)])
+  seen_depth = 0
+  while todo and seen_depth < 100000:
+    seen_depth += 1
+    cname, m_ = todo.popleft()
+    mult[cname] = mult.get(cname, 0) + m_
+    for callee, k in calls.get(cname, []):
+      todo.append((callee, m_ * k))
+  return mult
+
+
+def _group_size(line: str, default: int = 1) -> int:
+  m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+  if m:
+    return int(m.group(2))
+  m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+  if m:
+    return len(m.group(1).split(","))
+  return default
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+  """Per-device bytes moved by collectives, scan trip counts included.
+
+  Optimized HLO omits operand types, so operand bytes are reconstructed
+  from the result type: all-reduce/all-to-all/permute operand == result;
+  all-gather operand = result / group; reduce-scatter operand = result *
+  group.  Reported number is the *operand* byte sum (spec definition).
+  """
+  comps = _split_computations(hlo_text)
+  mults = _comp_multipliers(hlo_text)
+  out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+  for cname, lines in comps.items():
+    m_ = mults.get(cname, 1) or 1
+    for s in lines:
+      mm = re.search(r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES)
+                     + r")(-start)?\(", s)
+      if not mm:
+        continue
+      result_types, kind = mm.group(1), mm.group(2)
+      nbytes = 0
+      for dt, dims in _SHAPE_RE.findall(result_types):
+        if dt in _DTYPE_BYTES:
+          nbytes += _shape_bytes(dt, dims)
+      g = _group_size(s)
+      if kind == "all-gather":
+        nbytes //= max(g, 1)
+      elif kind == "reduce-scatter":
+        nbytes *= max(g, 1)
+      out[kind] += nbytes * m_
+  out["total"] = sum(out[k] for k in _COLLECTIVES)
+  return out
+
+
+@dataclasses.dataclass
+class Roofline:
+  flops_per_device: float
+  bytes_per_device: float
+  coll_bytes_per_device: float
+  chips: int
+  model_flops: Optional[float] = None    # 6*N(active)*D for the cell
+
+  @property
+  def compute_s(self) -> float:
+    return self.flops_per_device / PEAK_FLOPS
+
+  @property
+  def memory_s(self) -> float:
+    return self.bytes_per_device / HBM_BW
+
+  @property
+  def collective_s(self) -> float:
+    return self.coll_bytes_per_device / ICI_BW
+
+  @property
+  def dominant(self) -> str:
+    terms = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+    return max(terms, key=terms.get)
+
+  @property
+  def bound_s(self) -> float:
+    return max(self.compute_s, self.memory_s, self.collective_s)
+
+  @property
+  def useful_flops_ratio(self) -> Optional[float]:
+    if self.model_flops is None:
+      return None
+    total = self.flops_per_device * self.chips
+    return self.model_flops / total if total else None
+
+  def to_dict(self) -> dict:
+    return {
+        "flops_per_device": self.flops_per_device,
+        "bytes_per_device": self.bytes_per_device,
+        "coll_bytes_per_device": self.coll_bytes_per_device,
+        "chips": self.chips,
+        "compute_s": self.compute_s,
+        "memory_s": self.memory_s,
+        "collective_s": self.collective_s,
+        "dominant": self.dominant,
+        "bound_s": self.bound_s,
+        "model_flops": self.model_flops,
+        "useful_flops_ratio": self.useful_flops_ratio,
+    }
+
+
+def from_compiled(compiled, chips: int,
+                  model_flops: Optional[float] = None) -> Roofline:
+  cost = compiled.cost_analysis()
+  if isinstance(cost, list):          # older jax returns [dict]
+    cost = cost[0]
+  coll = collective_bytes(compiled.as_text())
+  return Roofline(
+      flops_per_device=float(cost.get("flops", 0.0)),
+      bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+      coll_bytes_per_device=float(coll["total"]),
+      chips=chips,
+      model_flops=model_flops,
+  )
+
+
+def memory_summary(compiled) -> dict:
+  ma = compiled.memory_analysis()
+  keys = ("argument_size_in_bytes", "output_size_in_bytes",
+          "temp_size_in_bytes", "alias_size_in_bytes",
+          "generated_code_size_in_bytes")
+  out = {}
+  for k in keys:
+    out[k] = int(getattr(ma, k, 0) or 0)
+  out["peak_bytes_per_device"] = (
+      out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+      + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+  return out

@@ -1,0 +1,28 @@
+"""arctic-480b [moe]: 35L d=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 in parallel with a dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base; hf]
+"""
+from repro.models.common import (LayerSpec, ModelConfig, MoEConfig,
+                                 SynopsisConfig)
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000, head_dim=128,
+    rope_theta=10000.0,
+    block_pattern=(LayerSpec(kind="attn", use_moe=True),),
+    moe=MoEConfig(num_experts=128, top_k=2, d_ff_expert=4864,
+                  dense_parallel=True),
+    synopsis=SynopsisConfig(cluster_size=128, i_max=32),
+)
+
+SMOKE = ModelConfig(
+    name="arctic-480b-smoke",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, head_dim=32,
+    rope_theta=10000.0,
+    block_pattern=(LayerSpec(kind="attn", use_moe=True),),
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128,
+                  dense_parallel=True),
+    synopsis=SynopsisConfig(cluster_size=16, i_max=2, recent=16),
+)

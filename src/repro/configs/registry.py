@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (full or smoke)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+}
+
+
+def list_archs() -> List[str]:
+  return list(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+  if arch not in _MODULES:
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+  mod = importlib.import_module(_MODULES[arch])
+  return mod.SMOKE if smoke else mod.CONFIG

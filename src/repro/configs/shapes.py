@@ -1,0 +1,66 @@
+"""Assigned input shapes and per-(arch x shape) input_specs.
+
+Four shapes per architecture (40 cells):
+  train_4k     seq=4096   global_batch=256   -> train_step
+  prefill_32k  seq=32768  global_batch=32    -> prefill_step
+  decode_32k   seq=32768  global_batch=128   -> serve_step (1 new token,
+                                                KV cache of seq_len)
+  long_500k    seq=524288 global_batch=1     -> serve_step, sub-quadratic
+                                                (synopsis attention / SSM)
+
+``input_specs`` returns ShapeDtypeStructs only — no allocation — matching
+the dry-run contract.  Modality frontends are stubs: whisper gets
+precomputed frame embeddings, pixtral gets patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+  name: str
+  seq_len: int
+  global_batch: int
+  kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def sds(shape, dtype):
+  return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+  """ShapeDtypeStruct stand-ins for every model input of this cell."""
+  B, S = shape.global_batch, shape.seq_len
+  specs: dict = {}
+  if shape.kind in ("train", "prefill"):
+    text = S
+    if cfg.frontend == "vision_stub":
+      text = S - cfg.frontend_tokens
+      specs["frontend_embeds"] = sds((B, cfg.frontend_tokens,
+                                      cfg.frontend_dim), jnp.bfloat16)
+    if cfg.encoder is not None:
+      specs["frontend_embeds"] = sds((B, cfg.encoder.source_len,
+                                      cfg.frontend_dim), jnp.bfloat16)
+    specs["tokens"] = sds((B, text), jnp.int32)
+    if shape.kind == "train":
+      specs["labels"] = sds((B, text), jnp.int32)
+  else:
+    # Decode: one new token per sequence + a KV cache of length S (built
+    # by repro.serve.kv_cache.cache_specs, model-dependent).
+    specs["tokens"] = sds((B, 1), jnp.int32)
+  return specs

@@ -1,0 +1,12 @@
+"""AccuracyTrader core: synopsis management + accuracy-aware processing."""
+from repro.core import cluster, deadline, engine, synopsis
+from repro.core.deadline import BudgetController, LatencyModel
+from repro.core.engine import ProcessResult, approximate_process, exact_process
+from repro.core.synopsis import Synopsis, build, insert, needs_rebuild, update_changed
+
+__all__ = [
+    "cluster", "deadline", "engine", "synopsis",
+    "BudgetController", "LatencyModel",
+    "ProcessResult", "approximate_process", "exact_process",
+    "Synopsis", "build", "insert", "needs_rebuild", "update_changed",
+]

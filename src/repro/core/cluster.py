@@ -1,0 +1,166 @@
+"""Similarity clustering for synopsis creation (paper §2.2 steps 1-2).
+
+The paper uses incremental SVD + R-tree. Neither maps to TPU (pointer
+trees, data-dependent shapes), so we adapt the *insight*:
+
+  step 1  (dimensionality reduction)  -> power-iteration PCA (MXU matmuls)
+  step 2  (balanced similarity groups) -> equal-size clusters, either by
+          Morton-order chunking of PCA coords (fast path) or by recursive
+          median splits on the widest dimension ("balanced kd", quality
+          path).  Equal-size clusters are the analogue of the R-tree's
+          depth-balance: every aggregated point covers the same number of
+          originals, i.e. the same approximation level — and they give XLA
+          the static shapes it needs.
+
+Everything here is pure JAX and jit-able.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Step 1: dimensionality reduction (paper: incremental SVD; here: PCA via
+# subspace power iteration — iteration count independent of dataset size,
+# matching the paper's "execution time independent of dataset size").
+# ---------------------------------------------------------------------------
+
+def pca_project(
+    data: jax.Array,
+    out_dim: int = 3,
+    num_iters: int = 8,
+    *,
+    key: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+  """Project ``data`` (n, v) to (n, out_dim) via top-``out_dim`` PCA.
+
+  Returns (coords (n, j), projection (v, j)).  float32 internally for
+  numerical stability of the orthogonalisation.
+  """
+  x = data.astype(jnp.float32)
+  n, v = x.shape
+  mean = jnp.mean(x, axis=0, keepdims=True)
+  xc = x - mean
+  if key is None:
+    key = jax.random.PRNGKey(0)
+  q = jax.random.normal(key, (v, out_dim), dtype=jnp.float32)
+  q, _ = jnp.linalg.qr(q)
+
+  def body(_, q):
+    # One subspace iteration:  q <- orth( Cov @ q )  without forming Cov.
+    z = xc.T @ (xc @ q)          # (v, j): two MXU matmuls, no (v, v) matrix
+    q, _ = jnp.linalg.qr(z)
+    return q
+
+  q = jax.lax.fori_loop(0, num_iters, body, q)
+  return xc @ q, q
+
+
+# ---------------------------------------------------------------------------
+# Step 2a: Morton (Z-order) balanced chunking — one sort, fully vectorised.
+# ---------------------------------------------------------------------------
+
+def morton_codes(coords: jax.Array, bits: int = 10) -> jax.Array:
+  """Interleave ``bits`` quantised bits per dimension into a Z-order code.
+
+  coords: (n, j) with j <= 5.  Returns uint64-ish codes packed in int64.
+  """
+  n, j = coords.shape
+  lo = jnp.min(coords, axis=0, keepdims=True)
+  hi = jnp.max(coords, axis=0, keepdims=True)
+  scale = jnp.where(hi > lo, hi - lo, 1.0)
+  q = jnp.clip(((coords - lo) / scale * (2**bits - 1)), 0, 2**bits - 1)
+  itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+  if bits * j > (62 if itype == jnp.int64 else 30):
+    bits = (62 if itype == jnp.int64 else 30) // j
+    q = jnp.clip(q, 0, 2**bits - 1)
+  q = q.astype(itype)                                         # (n, j)
+  code = jnp.zeros((n,), dtype=itype)
+  for b in range(bits):            # static python loop: bits is small
+    for d in range(j):
+      bit = (q[:, d] >> b) & 1
+      code = code | (bit << (b * j + d))
+  return code
+
+
+def morton_cluster(coords: jax.Array, num_clusters: int) -> jax.Array:
+  """Equal-size clusters by sorting on Morton codes and chunking.
+
+  Returns ``perm`` (n,): row indices in cluster-contiguous order — cluster c
+  owns ``perm[c*C:(c+1)*C]`` where C = ceil(n / num_clusters); the tail
+  cluster may be conceptually short but ``perm`` is always a full
+  permutation (callers mask by count).
+  """
+  codes = morton_codes(coords)
+  return jnp.argsort(codes)
+
+
+# ---------------------------------------------------------------------------
+# Step 2b: recursive median splits ("balanced kd-tree") — closer in spirit
+# to the R-tree: each split separates along the widest dimension, so leaf
+# clusters are tight bounding boxes.  log2(m) vectorised rounds.
+# ---------------------------------------------------------------------------
+
+def balanced_kd_cluster(coords: jax.Array, num_clusters: int) -> jax.Array:
+  """Equal-size clusters via recursive median splits.  num_clusters must be
+  a power of two.  Returns ``perm`` as in :func:`morton_cluster`.
+  """
+  n, j = coords.shape
+  levels = int(num_clusters).bit_length() - 1
+  if (1 << levels) != num_clusters:
+    raise ValueError(f"num_clusters={num_clusters} must be a power of two")
+
+  perm = jnp.arange(n)
+  x = coords.astype(jnp.float32)
+
+  for level in range(levels):
+    seg = 1 << level                 # current number of segments
+    seg_len = n // seg
+    # View rows in segment-major order and split each segment at its median
+    # along its own widest dimension.
+    xs = x[perm]                                         # (n, j)
+    xs = xs[: seg * seg_len].reshape(seg, seg_len, j)
+    var = jnp.var(xs, axis=1)                            # (seg, j)
+    dim = jnp.argmax(var, axis=1)                        # (seg,)
+    key_vals = jnp.take_along_axis(
+        xs, dim[:, None, None], axis=2)[..., 0]          # (seg, seg_len)
+    order = jnp.argsort(key_vals, axis=1)                # within-segment sort
+    head = perm[: seg * seg_len].reshape(seg, seg_len)
+    head = jnp.take_along_axis(head, order, axis=1).reshape(-1)
+    perm = jnp.concatenate([head, perm[seg * seg_len:]])
+  return perm
+
+
+def cluster(
+    coords: jax.Array,
+    num_clusters: int,
+    method: str = "kd",
+) -> jax.Array:
+  """Dispatch: 'kd' (quality, power-of-two clusters) or 'morton' (fast)."""
+  if method == "kd":
+    return balanced_kd_cluster(coords, num_clusters)
+  if method == "morton":
+    return morton_cluster(coords, num_clusters)
+  raise ValueError(f"unknown cluster method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Incremental assignment: place *new* points into existing clusters (paper:
+# "add new leaf nodes").  Nearest centroid in PCA space.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def assign_to_nearest(
+    new_coords: jax.Array,      # (b, j)  PCA coords of new points
+    cluster_centers: jax.Array,  # (m, j)  PCA-space cluster centers
+) -> jax.Array:
+  d2 = (
+      jnp.sum(new_coords**2, axis=1)[:, None]
+      - 2.0 * new_coords @ cluster_centers.T
+      + jnp.sum(cluster_centers**2, axis=1)[None, :]
+  )
+  return jnp.argmin(d2, axis=1)

@@ -1,0 +1,111 @@
+"""Online accuracy-aware approximate processing (paper §2.3, Algorithm 1).
+
+Generic two-stage engine:
+
+  stage 1  process the synopsis -> initial result ``ar`` and per-cluster
+           correlations ``c_i`` (line 1);
+  rank     descending correlation (lines 2-3);
+  stage 2  refine ``ar`` with the *original* members of the top-ranked
+           clusters (lines 4-10), bounded by a static budget ``i_max``.
+
+Hardware adaptation: the paper's in-loop wall-clock deadline check
+(``l_ela < l_spe``) becomes a *static* refinement budget chosen by the
+scheduler's calibrated latency model (core/deadline.py) — TPU programs need
+static shapes.  Two refinement modes are provided:
+
+  * ``iterative``  — ``lax.fori_loop`` over ranked clusters: the literal
+    Algorithm-1 structure (faithful baseline);
+  * ``vectorized`` — gather all selected clusters' members and refine in a
+    single batched call: TPU-idiomatic (MXU-dense), same result for any
+    order-insensitive ``refine_fn`` (beyond-paper optimisation).
+
+The engine is service-agnostic: CF recommendation, document search and
+synopsis attention (models/) all instantiate it with their own
+``score_fn`` / ``refine_fn``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.synopsis import Synopsis
+
+# score_fn(query, centroids, weight) -> (initial_result_carry, scores (m,))
+ScoreFn = Callable[[jax.Array, jax.Array, jax.Array], Tuple[jax.Array, jax.Array]]
+# refine_fn(carry, member_rows (cap, v), member_mask (cap, v)) -> carry
+RefineFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+class ProcessResult(NamedTuple):
+  result: jax.Array        # final carry (service-specific)
+  scores: jax.Array        # (m,) correlations c_i
+  selected: jax.Array      # (i_max,) cluster ids actually refined
+  initial: jax.Array       # stage-1 carry, pre-refinement (for diagnostics)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("score_fn", "refine_fn", "i_max", "mode"),
+)
+def approximate_process(
+    query: jax.Array,
+    syn: Synopsis,
+    data: jax.Array,
+    mask: jax.Array,
+    *,
+    score_fn: ScoreFn,
+    refine_fn: RefineFn,
+    i_max: int,
+    mode: str = "iterative",
+) -> ProcessResult:
+  """Run Algorithm 1 for one request against one component's subset."""
+  # Line 1: process the synopsis -> initial result + correlations.
+  initial, scores = score_fn(query, syn.centroids, syn.centroid_weight)
+
+  if i_max == 0:
+    return ProcessResult(initial, scores, jnp.zeros((0,), jnp.int32), initial)
+
+  # Lines 2-3: rank clusters by correlation.
+  _, selected = jax.lax.top_k(scores, i_max)
+  selected = selected.astype(jnp.int32)
+
+  def gather_members(c):
+    idx = syn.member_idx[c]                          # (cap,)
+    ok = (idx >= 0)
+    rows = data[jnp.maximum(idx, 0)]
+    msk = mask[jnp.maximum(idx, 0)] * ok[:, None].astype(mask.dtype)
+    return rows, msk
+
+  if mode == "iterative":
+    # Lines 4-10: sequential improvement, most-correlated set first.
+    def body(i, carry):
+      rows, msk = gather_members(selected[i])
+      return refine_fn(carry, rows, msk)
+    result = jax.lax.fori_loop(0, i_max, body, initial)
+  elif mode == "vectorized":
+    rows, msk = jax.vmap(gather_members)(selected)   # (i_max, cap, v)
+    v = rows.shape[-1]
+    result = refine_fn(initial, rows.reshape(-1, v), msk.reshape(-1, v))
+  else:
+    raise ValueError(f"unknown mode {mode!r}")
+
+  return ProcessResult(result, scores, selected, initial)
+
+
+# ---------------------------------------------------------------------------
+# Reference exact processing (the "Basic" technique in §4): full computation
+# over the entire input data — used to measure accuracy loss.
+# ---------------------------------------------------------------------------
+
+def exact_process(
+    query: jax.Array,
+    data: jax.Array,
+    mask: jax.Array,
+    *,
+    init: jax.Array,
+    refine_fn: RefineFn,
+) -> jax.Array:
+  return refine_fn(init, data, mask)

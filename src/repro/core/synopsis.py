@@ -1,0 +1,212 @@
+"""Offline synopsis management (paper §2.2): creation + incremental update.
+
+A synopsis holds one *aggregated data point* per cluster of similar
+original points (numeric aggregation = masked mean, exactly the paper's
+CF example: "the aggregated user's rating on item i is users' average
+rating on i in set U_i").  The index file becomes a static-shape
+``member_idx`` table (m clusters x cap members) plus the inverse
+``row_cluster`` map — pointer-free, gather/scatter friendly.
+
+Incremental updating covers the paper's two change situations:
+  * :func:`update_changed` — existing points changed: re-aggregate only the
+    affected clusters (the R-tree "delete + insert leaf" path).
+  * :func:`insert` — new points arrive: nearest-centroid assignment into the
+    slack capacity, running-mean centroid update (the "add leaf" path).
+``needs_rebuild`` signals slack exhaustion -> caller re-creates (the paper
+re-creates synopses periodically as well).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cluster as _cluster
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "centroids", "centroid_weight", "member_idx", "counts",
+        "row_cluster", "pca_centers", "proj", "mean",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class Synopsis:
+  """Aggregated data points + index for one component's data subset."""
+  centroids: jax.Array        # (m, v)   masked mean of members
+  centroid_weight: jax.Array  # (m, v)   #observed entries per attribute
+  member_idx: jax.Array       # (m, cap) int32 row ids, -1 padded
+  counts: jax.Array           # (m,)     valid members per cluster
+  row_cluster: jax.Array      # (n_cap,) int32 cluster of each row, -1 = free
+  pca_centers: jax.Array      # (m, j)   cluster centers in PCA space
+  proj: jax.Array             # (v, j)   PCA projection for new points
+  mean: jax.Array             # (1, v)   data mean used by the projection
+
+  @property
+  def num_clusters(self) -> int:
+    return self.centroids.shape[0]
+
+  @property
+  def capacity(self) -> int:
+    return self.member_idx.shape[1]
+
+
+def _masked_mean(rows: jax.Array, mask: jax.Array):
+  """Mean over axis 0 counting only mask==1 entries; 0 where none."""
+  w = jnp.sum(mask, axis=0)
+  s = jnp.sum(rows * mask, axis=0)
+  return jnp.where(w > 0, s / jnp.maximum(w, 1), 0.0), w
+
+
+def build(
+    data: jax.Array,
+    num_clusters: int,
+    *,
+    mask: Optional[jax.Array] = None,
+    method: str = "kd",
+    pca_dim: int = 3,
+    pca_iters: int = 8,
+    slack: float = 0.5,
+    key: Optional[jax.Array] = None,
+) -> Synopsis:
+  """Create a synopsis for ``data`` (n, v).  Steps 1-3 of paper §2.2."""
+  n, v = data.shape
+  if mask is None:
+    mask = jnp.ones_like(data, dtype=data.dtype)
+  coords, proj = _cluster.pca_project(data * mask, pca_dim, pca_iters, key=key)
+  mean = jnp.mean(data * mask, axis=0, keepdims=True)
+  perm = _cluster.cluster(coords, num_clusters, method=method)
+
+  base = n // num_clusters
+  cap = int(base + max(1, int(slack * base)))
+  m = num_clusters
+
+  # Cluster c owns perm[c*base:(c+1)*base]; leftovers (n % m) go to the last
+  # clusters one each so counts differ by at most 1.
+  counts = jnp.full((m,), base, dtype=jnp.int32)
+  extra = n - base * m
+  counts = counts.at[m - extra:].add(1) if extra else counts
+
+  # Build member_idx (m, cap) from the permutation.
+  starts = jnp.cumsum(counts) - counts
+  offs = jnp.arange(cap)[None, :]
+  take = starts[:, None] + offs                      # (m, cap)
+  valid = offs < counts[:, None]
+  member_idx = jnp.where(valid, perm[jnp.clip(take, 0, n - 1)], -1)
+  member_idx = member_idx.astype(jnp.int32)
+
+  row_cluster = _row_cluster_from_members(member_idx, n)
+
+  centroids, weight = _aggregate(data, mask, member_idx)
+  pca_centers = _segment_mean_coords(coords, member_idx)
+  return Synopsis(
+      centroids=centroids, centroid_weight=weight, member_idx=member_idx,
+      counts=counts, row_cluster=row_cluster, pca_centers=pca_centers,
+      proj=proj, mean=mean)
+
+
+def _row_cluster_from_members(member_idx: jax.Array, n: int) -> jax.Array:
+  m, cap = member_idx.shape
+  flat = member_idx.reshape(-1)
+  cids = jnp.repeat(jnp.arange(m, dtype=jnp.int32), cap)
+  safe = jnp.where(flat >= 0, flat, n)               # park -1 pads off-array
+  out = jnp.full((n + 1,), -1, jnp.int32).at[safe].set(cids, mode="drop")
+  return out[:n]
+
+
+def _aggregate(data, mask, member_idx):
+  """Step 3: per-cluster masked mean of *original* (un-reduced) points."""
+  def one(idx_row):
+    ok = (idx_row >= 0)
+    rows = data[jnp.maximum(idx_row, 0)]
+    msk = mask[jnp.maximum(idx_row, 0)] * ok[:, None].astype(data.dtype)
+    return _masked_mean(rows, msk)
+  cents, w = jax.vmap(one)(member_idx)
+  return cents, w
+
+
+def _segment_mean_coords(coords, member_idx):
+  def one(idx_row):
+    ok = (idx_row >= 0).astype(coords.dtype)[:, None]
+    rows = coords[jnp.maximum(idx_row, 0)] * ok
+    return jnp.sum(rows, axis=0) / jnp.maximum(jnp.sum(ok), 1.0)
+  return jax.vmap(one)(member_idx)
+
+
+# ---------------------------------------------------------------------------
+# Incremental updating (paper: two situations).
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def update_changed(syn: Synopsis, data: jax.Array, mask: jax.Array,
+                   changed_rows: jax.Array) -> Synopsis:
+  """Situation 2: attributes of existing rows changed (data already holds the
+  new values).  Re-aggregates only clusters containing ``changed_rows`` —
+  O(k * cap * v), independent of n."""
+  affected = syn.row_cluster[changed_rows]            # (k,), may repeat
+  idx_rows = syn.member_idx[affected]                 # (k, cap)
+
+  def one(idx_row):
+    ok = (idx_row >= 0)
+    rows = data[jnp.maximum(idx_row, 0)]
+    msk = mask[jnp.maximum(idx_row, 0)] * ok[:, None].astype(data.dtype)
+    return _masked_mean(rows, msk)
+
+  cents, w = jax.vmap(one)(idx_rows)                  # (k, v)
+  centroids = syn.centroids.at[affected].set(cents)
+  weight = syn.centroid_weight.at[affected].set(w)
+  return dataclasses.replace(syn, centroids=centroids, centroid_weight=weight)
+
+
+@jax.jit
+def insert(syn: Synopsis, data: jax.Array, mask: jax.Array,
+           new_rows: jax.Array) -> Synopsis:
+  """Situation 1: new rows appended to ``data``; place each in the nearest
+  cluster (PCA space) and update that cluster's aggregate incrementally."""
+  coords = (data[new_rows] * mask[new_rows] - syn.mean) @ syn.proj
+  assign = _cluster.assign_to_nearest(coords, syn.pca_centers)  # (b,)
+
+  # Per-cluster slot offsets for simultaneous inserts into the same cluster:
+  # rank of each new row within its assigned cluster.
+  order = jnp.argsort(assign)
+  sorted_assign = assign[order]
+  ranks_sorted = jnp.arange(assign.shape[0]) - jnp.searchsorted(
+      sorted_assign, sorted_assign, side="left")
+  ranks = jnp.zeros_like(ranks_sorted).at[order].set(ranks_sorted)
+  slots = syn.counts[assign] + ranks                  # target column per row
+
+  in_cap = slots < syn.capacity                       # drop on overflow
+  member_idx = syn.member_idx.at[
+      jnp.where(in_cap, assign, 0), jnp.where(in_cap, slots, 0)
+  ].set(jnp.where(in_cap, new_rows.astype(jnp.int32), syn.member_idx[0, 0]),
+        mode="drop")
+  member_idx = jnp.where(in_cap.any(), member_idx, syn.member_idx)
+
+  ones = jnp.where(in_cap, 1, 0)
+  counts = syn.counts.at[assign].add(ones)
+  row_cluster = syn.row_cluster.at[new_rows].set(
+      jnp.where(in_cap, assign.astype(jnp.int32), -1))
+
+  # Running-mean centroid update: new_w = w + mask; new_c = (c*w + x)/new_w.
+  x = data[new_rows] * mask[new_rows]
+  dw = jax.ops.segment_sum(mask[new_rows] * ones[:, None].astype(mask.dtype),
+                           assign, num_segments=syn.num_clusters)
+  dx = jax.ops.segment_sum(x * ones[:, None].astype(x.dtype),
+                           assign, num_segments=syn.num_clusters)
+  new_w = syn.centroid_weight + dw
+  new_c = jnp.where(new_w > 0,
+                    (syn.centroids * syn.centroid_weight + dx)
+                    / jnp.maximum(new_w, 1), 0.0)
+  return dataclasses.replace(
+      syn, centroids=new_c, centroid_weight=new_w, member_idx=member_idx,
+      counts=counts, row_cluster=row_cluster)
+
+
+def needs_rebuild(syn: Synopsis, headroom: int = 1) -> jax.Array:
+  """True when any cluster is within ``headroom`` slots of capacity."""
+  return jnp.any(syn.counts + headroom > syn.capacity)

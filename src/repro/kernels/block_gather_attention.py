@@ -1,0 +1,125 @@
+"""Block-gather (cluster-sparse) flash attention Pallas kernel.
+
+AccuracyTrader stage 2: exact attention over the *original* tokens of the
+top-``i_max`` ranked clusters only.  The KV cache is stored
+cluster-contiguous (cluster c = rows [c*C, (c+1)*C)), so "gather a
+cluster" is an aligned block dynamic-slice — this is the index-file
+adaptation that makes refinement TPU-friendly.
+
+The selected cluster ids are **scalar-prefetched** (SMEM) so the BlockSpec
+``index_map`` can steer each grid step's HBM->VMEM DMA to the right
+cluster block: grid (B, Hkv, I); step (b, h, i) pulls K/V block
+``selected[b, h, i]``.  Padded entries (id < 0) are clamped to block 0 and
+masked with -inf inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(sel_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc, m_s, l_s, *, sm_scale: float, num_i: int):
+  b, h, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+  @pl.when(i == 0)
+  def _init():
+    acc[...] = jnp.zeros_like(acc)
+    m_s[...] = jnp.full_like(m_s, NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s)
+
+  valid = sel_ref[b, h, i] >= 0
+
+  q = q_ref[0].astype(jnp.float32)                  # (G, D)
+  k = k_ref[0, 0].astype(jnp.float32)               # (C, D)
+  v = v_ref[0, 0].astype(jnp.float32)
+
+  logits = jax.lax.dot_general(
+      q, k, (((1,), (1,)), ((), ())),
+      preferred_element_type=jnp.float32) * sm_scale
+  logits = jnp.where(valid, logits, NEG_INF)        # mask padded clusters
+
+  m_prev = m_s[:, 0]
+  m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+  p = jnp.exp(logits - m_new[:, None])
+  alpha = jnp.exp(m_prev - m_new)
+  l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+  acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+      p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+  m_s[:, 0] = m_new
+  l_s[:, 0] = l_new
+
+  @pl.when(i == num_i - 1)
+  def _flush():
+    l_fin = l_s[:, 0]
+    o_ref[0] = (acc[...] / jnp.maximum(l_fin, 1e-30)[:, None]).astype(
+        o_ref.dtype)
+    m_ref[0] = m_s[:, 0]
+    l_ref[0] = l_fin
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cluster_size", "sm_scale", "interpret"))
+def block_gather_attention(
+    q: jax.Array,          # (B, H, D)
+    k: jax.Array,          # (B, Hkv, S, D) cluster-contiguous
+    v: jax.Array,          # (B, Hkv, S, D)
+    selected: jax.Array,   # (B, Hkv, I) int32, -1 padded
+    *,
+    cluster_size: int,
+    sm_scale: float = 1.0,
+    interpret: bool = False,
+):
+  """Returns partials (out (B,H,D), m (B,H), l (B,H)) over selected blocks."""
+  B, H, D = q.shape
+  _, Hkv, S, _ = k.shape
+  G = H // Hkv
+  C = cluster_size
+  assert S % C == 0
+  I = selected.shape[-1]
+
+  grid = (B, Hkv, I)
+
+  def _kv_index(b, h, i, sel):
+    # Padded ids (-1) are clamped to block 0; the kernel masks them with
+    # -inf using the raw (unclamped) scalar value.
+    return (b, h, jnp.maximum(sel[b, h, i], 0), 0)
+
+  grid_spec = pltpu.PrefetchScalarGridSpec(
+      num_scalar_prefetch=1,
+      grid=grid,
+      in_specs=[
+          pl.BlockSpec((1, G, D), lambda b, h, i, sel: (b, h, 0)),
+          pl.BlockSpec((1, 1, C, D), _kv_index),
+          pl.BlockSpec((1, 1, C, D), _kv_index),
+      ],
+      out_specs=[
+          pl.BlockSpec((1, G, D), lambda b, h, i, sel: (b, h, 0)),
+          pl.BlockSpec((1, G), lambda b, h, i, sel: (b, h)),
+          pl.BlockSpec((1, G), lambda b, h, i, sel: (b, h)),
+      ],
+      scratch_shapes=[
+          pltpu.VMEM((G, D), jnp.float32),
+          pltpu.VMEM((G, 1), jnp.float32),
+          pltpu.VMEM((G, 1), jnp.float32),
+      ],
+  )
+  fn = pl.pallas_call(
+      functools.partial(_kernel, sm_scale=sm_scale, num_i=I),
+      grid_spec=grid_spec,
+      out_shape=[
+          jax.ShapeDtypeStruct((B, H, D), q.dtype),
+          jax.ShapeDtypeStruct((B, H), jnp.float32),
+          jax.ShapeDtypeStruct((B, H), jnp.float32),
+      ],
+      interpret=interpret,
+      name="block_gather_attention",
+  )
+  out, m, l = fn(selected.astype(jnp.int32), q, k, v)
+  return out, m, l

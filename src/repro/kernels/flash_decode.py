@@ -1,0 +1,131 @@
+"""Flash-decode GQA attention Pallas kernel (TPU target).
+
+One new query token per sequence attends over a per-sequence key set of
+length S — either the full KV cache (exact baseline) or the synopsis
+centroid table (AccuracyTrader stage 1, with ``bias = log(count)`` for
+unselected clusters and ``-inf`` for selected ones).
+
+Tiling: grid (B, Hkv, S/block_s).  Per step the kernel holds in VMEM one
+query group (G, D), one KV tile (block_s, D) and f32 accumulators; the
+online-softmax state persists in scratch across the sequential S-dimension
+grid (TPU grids iterate the last axis innermost), flushing normalised
+output + (m, l) partials at the final step.  D and block_s should be
+multiples of 128 so the q @ k^T and p @ v contractions are MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, *rest, sm_scale: float, has_bias: bool,
+            num_s_blocks: int):
+  if has_bias:
+    bias_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
+  else:
+    o_ref, m_ref, l_ref, acc, m_s, l_s = rest
+    bias_ref = None
+  s_idx = pl.program_id(2)
+
+  @pl.when(s_idx == 0)
+  def _init():
+    acc[...] = jnp.zeros_like(acc)
+    m_s[...] = jnp.full_like(m_s, NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s)
+
+  q = q_ref[0].astype(jnp.float32)                  # (G, D)
+  k = k_ref[0, 0].astype(jnp.float32)               # (bs, D)
+  v = v_ref[0, 0].astype(jnp.float32)               # (bs, D)
+
+  logits = jax.lax.dot_general(                     # (G, bs) on the MXU
+      q, k, (((1,), (1,)), ((), ())),
+      preferred_element_type=jnp.float32) * sm_scale
+  if bias_ref is not None:
+    logits = logits + bias_ref[0, 0][None, :].astype(jnp.float32)
+
+  m_prev = m_s[:, 0]                                # (G,)
+  m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+  p = jnp.exp(logits - m_new[:, None])              # (G, bs)
+  alpha = jnp.exp(m_prev - m_new)                   # (G,)
+  l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+  acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+      p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+  m_s[:, 0] = m_new
+  l_s[:, 0] = l_new
+
+  @pl.when(s_idx == num_s_blocks - 1)
+  def _flush():
+    l_fin = l_s[:, 0]
+    o_ref[0] = (acc[...] / jnp.maximum(l_fin, 1e-30)[:, None]).astype(
+        o_ref.dtype)
+    m_ref[0] = m_s[:, 0]
+    l_ref[0] = l_fin
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "block_s", "interpret"))
+def flash_decode(
+    q: jax.Array,                 # (B, H, D)
+    k: jax.Array,                 # (B, Hkv, S, D)
+    v: jax.Array,                 # (B, Hkv, S, D)
+    bias: jax.Array | None = None,  # (B, Hkv, S) additive log-space bias
+    *,
+    sm_scale: float = 1.0,
+    block_s: int = 512,
+    interpret: bool = False,
+):
+  """Returns partials (out (B,H,D), m (B,H), l (B,H))."""
+  B, H, D = q.shape
+  _, Hkv, S, _ = k.shape
+  G = H // Hkv
+  assert H == Hkv * G and k.shape == v.shape
+  block_s = min(block_s, S)
+  assert S % block_s == 0, (S, block_s)
+  ns = S // block_s
+
+  grid = (B, Hkv, ns)
+  in_specs = [
+      pl.BlockSpec((1, G, D), lambda b, h, s: (b, h, 0)),
+      pl.BlockSpec((1, 1, block_s, D), lambda b, h, s: (b, h, s, 0)),
+      pl.BlockSpec((1, 1, block_s, D), lambda b, h, s: (b, h, s, 0)),
+  ]
+  args = [q.reshape(B, H, D), k, v]
+  if bias is not None:
+    in_specs.append(pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)))
+    args.append(bias)
+
+  out_shape = [
+      jax.ShapeDtypeStruct((B, H, D), q.dtype),
+      jax.ShapeDtypeStruct((B, H), jnp.float32),
+      jax.ShapeDtypeStruct((B, H), jnp.float32),
+  ]
+  out_specs = [
+      pl.BlockSpec((1, G, D), lambda b, h, s: (b, h, 0)),
+      pl.BlockSpec((1, G), lambda b, h, s: (b, h)),
+      pl.BlockSpec((1, G), lambda b, h, s: (b, h)),
+  ]
+  scratch = [
+      pltpu.VMEM((G, D), jnp.float32),
+      pltpu.VMEM((G, 1), jnp.float32),
+      pltpu.VMEM((G, 1), jnp.float32),
+  ]
+  fn = pl.pallas_call(
+      functools.partial(_kernel, sm_scale=sm_scale,
+                        has_bias=bias is not None, num_s_blocks=ns),
+      grid=grid,
+      in_specs=in_specs,
+      out_specs=out_specs,
+      out_shape=out_shape,
+      scratch_shapes=scratch,
+      interpret=interpret,
+      name="flash_decode",
+  )
+  out, m, l = fn(*args)
+  return out, m, l

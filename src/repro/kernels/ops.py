@@ -1,0 +1,107 @@
+"""Public jit'd ops over the Pallas kernels, with an ``impl`` switch:
+
+  * ``impl="pallas"``     — real TPU lowering (pl.pallas_call)
+  * ``impl="interpret"``  — Pallas interpreter (CPU validation)
+  * ``impl="xla"``        — pure-jnp reference path, mathematically
+    identical; used by the multi-pod dry-run and CPU tests (Pallas cannot
+    lower to the CPU backend, and inlining the interpreter into a
+    512-device SPMD program is not meaningful).
+
+``synopsis_attention`` is the end-to-end AccuracyTrader decode op:
+stage-1 centroid scoring + initial result, top-k ranking, stage-2
+block-gather refinement, exact online-softmax merge.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_gather_attention import block_gather_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.synopsis_score import synopsis_score
+
+NEG_INF = ref.NEG_INF
+merge_partials = ref.merge_partials
+
+
+def _scores(q, k_syn, sm_scale, impl):
+  if impl == "xla":
+    return ref.synopsis_score_ref(q, k_syn, sm_scale=sm_scale)
+  return synopsis_score(q, k_syn, sm_scale=sm_scale,
+                        interpret=(impl == "interpret"))
+
+
+def _decode(q, k, v, bias, sm_scale, impl, block_s=512):
+  if impl == "xla":
+    return ref.flash_decode_ref(q, k, v, bias, sm_scale=sm_scale)
+  return flash_decode(q, k, v, bias, sm_scale=sm_scale, block_s=block_s,
+                      interpret=(impl == "interpret"))
+
+
+def _gather(q, k, v, selected, cluster_size, sm_scale, impl):
+  if impl == "xla":
+    return ref.block_gather_attention_ref(
+        q, k, v, selected, cluster_size=cluster_size, sm_scale=sm_scale)
+  return block_gather_attention(
+      q, k, v, selected, cluster_size=cluster_size, sm_scale=sm_scale,
+      interpret=(impl == "interpret"))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("i_max", "sm_scale", "impl", "return_diag"))
+def synopsis_attention(
+    q: jax.Array,        # (B, H, D)   one decode step's queries
+    k: jax.Array,        # (B, Hkv, S, D) cluster-contiguous original keys
+    v: jax.Array,        # (B, Hkv, S, D)
+    k_syn: jax.Array,    # (B, Hkv, M, D) centroid keys
+    v_syn: jax.Array,    # (B, Hkv, M, D) centroid values
+    counts: jax.Array,   # (B, M)
+    *,
+    i_max: int,
+    sm_scale: float = 1.0,
+    impl: str = "pallas",
+    return_diag: bool = False,
+):
+  """AccuracyTrader attention: O(M + i_max*C) instead of O(S).
+
+  Unselected clusters contribute count-weighted centroid terms (stage 1);
+  the top-``i_max`` clusters contribute their original tokens exactly
+  (stage 2).  With ``i_max == M`` this equals exact attention.
+  """
+  M = k_syn.shape[2]
+  scores = _scores(q, k_syn, sm_scale, impl)            # (B, Hkv, M)
+  _, selected = jax.lax.top_k(scores, i_max)
+  selected = selected.astype(jnp.int32)
+
+  sel_onehot = jnp.any(jax.nn.one_hot(selected, M, dtype=jnp.bool_), axis=2)
+  syn_bias = jnp.where(
+      sel_onehot, NEG_INF,
+      jnp.log(jnp.maximum(counts, 1)).astype(jnp.float32)[:, None, :])
+
+  part_syn = _decode(q, k_syn, v_syn, syn_bias, sm_scale, impl,
+                     block_s=min(512, M))
+  C = k.shape[2] // M
+  part_ref = _gather(q, k, v, selected, C, sm_scale, impl)
+  out, m, l = merge_partials(part_syn, part_ref)
+  if return_diag:
+    return out, (scores, selected, m, l)
+  return out
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "impl"))
+def exact_decode_attention(q, k, v, bias=None, *, sm_scale: float = 1.0,
+                           impl: str = "pallas"):
+  """Exact GQA decode (baseline); returns normalised output only."""
+  out, _, _ = _decode(q, k, v, bias, sm_scale, impl)
+  return out
+
+
+def decode_partials(q, k, v, bias=None, *, sm_scale: float = 1.0,
+                    impl: str = "pallas") -> Tuple[jax.Array, ...]:
+  """Exact decode returning (out, m, l) — for cross-shard (SP) merging."""
+  return _decode(q, k, v, bias, sm_scale, impl)

@@ -1,0 +1,155 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+All attention kernels return *partials* ``(out, m, l)``:
+  out (B, H, D)  — softmax-normalised partial output
+  m   (B, H)     — running max logit
+  l   (B, H)     — sum of exp(logit - m)
+so that results from disjoint key sets (centroids vs. refined clusters vs.
+recent tokens vs. sequence shards) merge exactly via
+:func:`merge_partials` — this online-softmax algebra is what lets
+AccuracyTrader's stage-1 (synopsis) and stage-2 (refinement) results
+combine without double counting, and lets the KV cache shard over the
+`model` mesh axis (each shard = one paper "component").
+
+KV layout is batched: (B, Hkv, S, D) — every sequence has its own cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Partials = Tuple[jax.Array, jax.Array, jax.Array]
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(
+    q: jax.Array,            # (B, H, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    bias: Optional[jax.Array] = None,   # (B, Hkv, S) additive (log-space)
+    *,
+    sm_scale: float = 1.0,
+) -> Partials:
+  """Exact GQA decode attention over the whole key set."""
+  B, H, D = q.shape
+  _, Hkv, S, _ = k.shape
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+  logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * sm_scale
+  if bias is not None:
+    logits = logits + bias[:, :, None, :].astype(jnp.float32)
+  m = jnp.max(logits, axis=-1)                               # (B,Hkv,G)
+  m_safe = jnp.maximum(m, NEG_INF)
+  p = jnp.exp(logits - m_safe[..., None])
+  l = jnp.sum(p, axis=-1)
+  out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+  out = out / jnp.maximum(l, 1e-30)[..., None]
+  return (out.reshape(B, H, D), m_safe.reshape(B, H), l.reshape(B, H))
+
+
+def synopsis_score_ref(
+    q: jax.Array,            # (B, H, D)
+    k_syn: jax.Array,        # (B, Hkv, M, D) centroid keys
+    *,
+    sm_scale: float = 1.0,
+) -> jax.Array:
+  """Correlation c_i of every aggregated point to the query (paper line 1):
+  max over the GQA group's query heads of the centroid logit.  (B, Hkv, M).
+  """
+  B, H, D = q.shape
+  _, Hkv, M, _ = k_syn.shape
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+  logits = jnp.einsum("bhgd,bhmd->bhgm", qg, k_syn.astype(jnp.float32))
+  return jnp.max(logits, axis=2) * sm_scale                  # (B, Hkv, M)
+
+
+def block_gather_attention_ref(
+    q: jax.Array,            # (B, H, D)
+    k: jax.Array,            # (B, Hkv, S, D) cluster-contiguous originals
+    v: jax.Array,            # (B, Hkv, S, D)
+    selected: jax.Array,     # (B, Hkv, I) int32 cluster ids (pad: -1)
+    *,
+    cluster_size: int,
+    sm_scale: float = 1.0,
+) -> Partials:
+  """Stage-2 refinement: exact attention over the selected clusters only."""
+  B, H, D = q.shape
+  _, Hkv, S, _ = k.shape
+  C = cluster_size
+
+  def one_bh(qb, kh, vh, sel_row):
+    # qb (G, D); kh/vh (S, D); sel_row (I,)
+    starts = jnp.maximum(sel_row, 0) * C
+    idx = (starts[:, None] + jnp.arange(C)[None, :]).reshape(-1)   # (I*C,)
+    kk = kh[idx]
+    vv = vh[idx]
+    valid = jnp.repeat(sel_row >= 0, C)
+    bias = jnp.where(valid, 0.0, NEG_INF)
+    logits = (qb.astype(jnp.float32) @ kk.astype(jnp.float32).T) * sm_scale
+    logits = logits + bias[None, :]
+    m = jnp.maximum(jnp.max(logits, axis=-1), NEG_INF)
+    p = jnp.exp(logits - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    out = (p @ vv.astype(jnp.float32)) / jnp.maximum(l, 1e-30)[:, None]
+    return out, m, l
+
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, D)
+  out, m, l = jax.vmap(jax.vmap(one_bh))(qg, k, v, selected)
+  return (out.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def merge_partials(a: Partials, b: Partials) -> Partials:
+  """Exact online-softmax merge of two disjoint-key partials."""
+  oa, ma, la = a
+  ob, mb, lb = b
+  m = jnp.maximum(ma, mb)
+  wa = la * jnp.exp(ma - m)
+  wb = lb * jnp.exp(mb - m)
+  l = wa + wb
+  o = (oa * wa[..., None] + ob * wb[..., None]) / jnp.maximum(l, 1e-30)[..., None]
+  return (o.astype(oa.dtype), m, l)
+
+
+def synopsis_attention_ref(
+    q: jax.Array,            # (B, H, D)
+    k: jax.Array,            # (B, Hkv, S, D) cluster-contiguous originals
+    v: jax.Array,
+    k_syn: jax.Array,        # (B, Hkv, M, D) centroid keys  (M = S / C)
+    v_syn: jax.Array,        # (B, Hkv, M, D) centroid values
+    counts: jax.Array,       # (B, M) members per cluster
+    *,
+    i_max: int,
+    sm_scale: float = 1.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+  """End-to-end AccuracyTrader decode attention oracle.
+
+  stage 1: score centroids; each *unselected* centroid stands in for its
+  cluster with weight count*exp(logit) (log-space bias log(count));
+  stage 2: the top-``i_max`` clusters contribute their original tokens
+  exactly.  Returns (out (B,H,D), scores (B,Hkv,M), selected (B,Hkv,I)).
+  """
+  scores = synopsis_score_ref(q, k_syn, sm_scale=sm_scale)
+  _, selected = jax.lax.top_k(scores, i_max)
+  selected = selected.astype(jnp.int32)
+
+  M = k_syn.shape[2]
+  sel_onehot = jnp.any(
+      jax.nn.one_hot(selected, M, dtype=jnp.bool_), axis=2)   # (B,Hkv,M)
+  syn_bias = jnp.where(sel_onehot, NEG_INF,
+                       jnp.log(jnp.maximum(counts, 1))[:, None, :])
+  part_syn = flash_decode_ref(q, k_syn, v_syn, syn_bias, sm_scale=sm_scale)
+  C = k.shape[2] // M
+  part_ref = block_gather_attention_ref(
+      q, k, v, selected, cluster_size=C, sm_scale=sm_scale)
+  out, _, _ = merge_partials(part_syn, part_ref)
+  return out, scores, selected
+
+
+def exact_attention_ref(q, k, v, *, sm_scale: float = 1.0) -> jax.Array:
+  out, _, _ = flash_decode_ref(q, k, v, sm_scale=sm_scale)
+  return out

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_MIXED_DOTS"] = "1"   # TPU-target bf16 collectives
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves on placeholder devices that the distribution
+config is coherent: shardings compose, the compiled module fits HBM
+(memory_analysis) and yields the FLOP/byte/collective numbers the
+roofline analysis (EXPERIMENTS.md §Roofline) reads.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape decode_32k --mesh single --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+``--all`` runs each cell in a subprocess (isolation against OOM; fresh
+compile cache).  Artifacts: one JSON per cell with memory analysis, cost
+analysis, collective-byte breakdown and roofline terms.
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+import subprocess      # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+  """MODEL_FLOPS = 6*N(active)*D train / 2*N*D inference (roofline spec)."""
+  n = cfg.param_count(active=True)
+  n -= cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)  # non-matmul embeds
+  if shape.kind == "train":
+    return 6.0 * n * shape.global_batch * shape.seq_len
+  if shape.kind == "prefill":
+    return 2.0 * n * shape.global_batch * shape.seq_len
+  return 2.0 * n * shape.global_batch           # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
+             out_dir: str, causal_skip: bool = False) -> dict:
+  import jax  # noqa: PLC0415
+  import jax.numpy as jnp  # noqa: PLC0415
+
+  from repro.analysis import roofline as rl  # noqa: PLC0415
+  from repro.configs import shapes as shp  # noqa: PLC0415
+  from repro.configs.registry import get_config  # noqa: PLC0415
+  from repro.dist import sharding as shd  # noqa: PLC0415
+  from repro.launch.mesh import make_production_mesh  # noqa: PLC0415
+  from repro.models import common as cm  # noqa: PLC0415
+  from repro.models import transformer as tf  # noqa: PLC0415
+  from repro.serve import kv_cache as kvc  # noqa: PLC0415
+  from repro.serve.prefill import make_prefill_step  # noqa: PLC0415
+  from repro.serve.serve_step import make_serve_step  # noqa: PLC0415
+  from repro.train.optimizer import OptConfig  # noqa: PLC0415
+  from repro.train.train_step import make_train_step  # noqa: PLC0415
+
+  cfg = get_config(arch)
+  shape = shp.SHAPES[shape_name]
+  mesh = make_production_mesh(multi_pod=multi_pod)
+  chips = mesh.devices.size
+
+  # Memory-driven weight-sharding policy: big models FSDP their weights
+  # over `data` even when serving (a v5e chip has 16 GB).
+  big = cfg.param_count() * 2 / shd.tp_size(mesh) > 10e9
+  if shape.kind == "train":
+    # FSDP only pays when replicated f32 master+Adam state would not fit
+    # comfortably (~12 B/param); small models replicate weights and avoid
+    # per-layer gather/reshard collectives entirely (§Perf cell 3).
+    rules = dict(shd.TRAIN_RULES)
+    if cfg.param_count() * 12 < 2e9:
+      rules["embed"] = None
+  elif shape_name == "long_500k":
+    rules = dict(shd.LONG_RULES)
+    if big:
+      rules["embed"] = ("data",)
+  else:
+    rules = dict(shd.SERVE_RULES)
+    if big:
+      rules["embed"] = ("data",)
+
+  # Resolve mode per cell.
+  has_attn = kvc.n_attn_positions(cfg) > 0
+  if mode == "auto":
+    if shape.kind == "decode":
+      mode = "synopsis" if has_attn else "exact"
+      if shape_name == "decode_32k":
+        mode = "exact"              # baseline cell; synopsis via --mode
+    else:
+      mode = "n/a"
+  if mode == "synopsis" and not has_attn:
+    mode = "exact"                  # technique inapplicable (DESIGN.md §5)
+
+  t0 = time.time()
+  # --- abstract params + axes (eval_shape: no 100B allocations) ----------
+  captured = {}
+
+  def init_fn(key):
+    boxed = tf.init_model(key, cfg)
+    params, axes = cm.split(boxed)
+    captured["axes"] = axes
+    return params
+
+  params_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+  axes = captured["axes"]
+
+  with shd.use_mesh(mesh, rules):
+    if shape.kind == "train":
+      opt_cfg = OptConfig()
+      state_sds = {
+          "params": jax.tree.map(
+              lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+              params_sds),
+      }
+      state_sds["opt"] = {
+          "m": state_sds["params"], "v": state_sds["params"],
+          "step": jax.ShapeDtypeStruct((), jnp.int32),
+      }
+      state_axes = {"params": axes,
+                    "opt": {"m": axes, "v": axes, "step": ()}}
+      compress = multi_pod
+      if compress:
+        state_sds["err"] = state_sds["params"]
+        state_axes["err"] = axes
+      batch_sds = shp.input_specs(cfg, shape)
+      batch_axes = {k: ("batch",) + (None,) * (len(v.shape) - 1)
+                    for k, v in batch_sds.items()}
+      in_sh = (shd.tree_shardings(state_axes, mesh, rules, state_sds),
+               shd.tree_shardings(batch_axes, mesh, rules, batch_sds))
+      # Adaptive microbatching (§Perf cell 3 side-finding): collectives
+      # scale with microbatch count (weight re-gathers + activation
+      # reductions per microbatch), so use the smallest count whose
+      # activation residuals fit: est = B_local*S*d*2B*L against a ~6 GB
+      # budget, rounded to a power of two.
+      b_local = shape.global_batch // max(shd.dp_size(mesh), 1)
+      est = b_local * shape.seq_len * cfg.d_model * 2 * cfg.n_layers
+      mb = 1
+      while mb < 16 and est / mb > 6e9:
+        mb *= 2
+      while shape.global_batch % (mb * shd.dp_size(mesh)) != 0 and mb > 1:
+        mb //= 2
+      step = make_train_step(cfg, opt_cfg, microbatches=mb,
+                             compress_pods=compress, mesh=mesh,
+                             param_axes=axes, causal_skip=causal_skip)
+      jitted = jax.jit(step, in_shardings=in_sh,
+                       out_shardings=(in_sh[0], None), donate_argnums=0)
+      lowered = jitted.lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+      batch_sds = shp.input_specs(cfg, shape)
+      batch_axes = {k: ("batch",) + (None,) * (len(v.shape) - 1)
+                    for k, v in batch_sds.items()}
+      p_bf16 = jax.tree.map(
+          lambda s: jax.ShapeDtypeStruct(s.shape, cfg.dtype), params_sds)
+      p_sh = shd.tree_shardings(axes, mesh, rules, p_bf16)
+      b_sh = shd.tree_shardings(batch_axes, mesh, rules, batch_sds)
+      step = make_prefill_step(cfg)
+      arg_names = ["tokens"] + (["frontend_embeds"]
+                                if "frontend_embeds" in batch_sds else [])
+      jitted = jax.jit(
+          lambda p, t, f=None: step(p, t, f),
+          in_shardings=(p_sh,) + tuple(b_sh[k] for k in arg_names))
+      lowered = jitted.lower(p_bf16, *[batch_sds[k] for k in arg_names])
+    else:  # decode
+      B, S = shape.global_batch, shape.seq_len
+      syn = (mode == "synopsis")
+      cache_sds = kvc.cache_specs(cfg, B, S, synopsis=syn)
+      c_axes = kvc.cache_axes(cfg, B, S, synopsis=syn)
+      tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+      p_bf16 = jax.tree.map(
+          lambda s: jax.ShapeDtypeStruct(s.shape, cfg.dtype), params_sds)
+      in_sh = (shd.tree_shardings(axes, mesh, rules, p_bf16),
+               shd.tree_shardings(c_axes, mesh, rules, cache_sds),
+               shd.named_sharding(("batch", None), mesh, rules, (B, 1)))
+      step = make_serve_step(cfg, mode="synopsis" if syn else "exact")
+      jitted = jax.jit(step, in_shardings=in_sh)
+      lowered = jitted.lower(p_bf16, cache_sds, tok_sds)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+  mem = rl.memory_summary(compiled)
+  coll = rl.collective_bytes(compiled.as_text())
+  # FLOPs/bytes from the analytic cost model (cost_analysis counts scan
+  # bodies once — see analysis/costmodel.py); raw numbers kept below.
+  from repro.analysis import costmodel as cmod  # noqa: PLC0415
+  cost = cmod.cell_cost(cfg, shape, mode, causal_skip=causal_skip)
+  raw_ca = compiled.cost_analysis()
+  if isinstance(raw_ca, list):
+    raw_ca = raw_ca[0]
+  roof = rl.Roofline(
+      flops_per_device=cost.flops_global / chips,
+      bytes_per_device=cost.bytes_global / chips,
+      coll_bytes_per_device=float(coll["total"]),
+      chips=chips,
+      model_flops=model_flops(cfg, shape, mode),
+  )
+
+  result = {
+      "arch": arch, "shape": shape_name,
+      "mesh": "multi" if multi_pod else "single", "chips": chips,
+      "mode": mode,
+      "microbatches": locals().get("mb"),
+      "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+      "memory": mem,
+      "fits_hbm": mem["peak_bytes_per_device"] < 16e9,
+      "collectives": coll,
+      "roofline": roof.to_dict(),
+      "raw_cost_analysis": {
+          "flops_per_device_scan_body_once": float(raw_ca.get("flops", 0)),
+          "bytes_accessed_scan_body_once":
+              float(raw_ca.get("bytes accessed", 0)),
+      },
+  }
+  print(compiled.memory_analysis())
+  if out_dir:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{result['mesh']}__{mode.replace('/', '_')}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+      json.dump(result, f, indent=1)
+  return result
+
+
+CELLS_MODES = {          # decode cells run baseline AND synopsis variants
+    "decode_32k": ["exact", "synopsis"],
+    "long_500k": ["auto"],
+    "train_4k": ["auto"],
+    "prefill_32k": ["auto"],
+}
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default=None)
+  ap.add_argument("--shape", default=None)
+  ap.add_argument("--mesh", default="single",
+                  choices=["single", "multi", "both"])
+  ap.add_argument("--mode", default="auto")
+  ap.add_argument("--out", default="artifacts/dryrun")
+  ap.add_argument("--all", action="store_true")
+  ap.add_argument("--timeout", type=int, default=1800)
+  ap.add_argument("--causal-skip", action="store_true",
+                  help="beyond-paper: restrict each q-chunk's KV range")
+  args = ap.parse_args()
+
+  if not args.all:
+    res = run_cell(args.arch, args.shape, args.mesh == "multi", args.mode,
+                   args.out, causal_skip=args.causal_skip)
+    r = res["roofline"]
+    print(json.dumps({k: v for k, v in res.items() if k != "memory"},
+                     indent=1))
+    print(f"DOMINANT={r['dominant']} bound={r['bound_s']:.4e}s "
+          f"fits={res['fits_hbm']}")
+    return
+
+  from repro.configs.registry import list_archs  # noqa: PLC0415
+  meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+  failures = []
+  for arch in list_archs():
+    for shape, modes in CELLS_MODES.items():
+      for mode in modes:
+        for m in meshes:
+          tag = f"{arch} {shape} {m} {mode}"
+          out_file = os.path.join(
+              args.out, f"{arch}__{shape}__{m}__{mode}.json")
+          cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", arch, "--shape", shape, "--mesh", m,
+                 "--mode", mode, "--out", args.out]
+          t0 = time.time()
+          try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            ok = p.returncode == 0
+          except subprocess.TimeoutExpired:
+            ok, p = False, None
+          dt = time.time() - t0
+          status = "OK" if ok else "FAIL"
+          print(f"[{status}] {tag} ({dt:.0f}s)", flush=True)
+          if not ok:
+            failures.append(tag)
+            if p is not None:
+              print((p.stderr or "")[-2000:])
+  print(f"\n{'ALL CELLS PASS' if not failures else failures}")
+  sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+  main()

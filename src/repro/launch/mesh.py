@@ -1,0 +1,40 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (jax locks the backend on first device query).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 topology).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+pure DP + the compressed cross-pod gradient reduction.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+  import jax  # noqa: PLC0415 — deferred so module import is device-free
+
+  shape = (2, 16, 16) if multi_pod else (16, 16)
+  axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+  n = math.prod(shape)
+  devs = jax.devices()
+  if len(devs) == n:
+    return jax.make_mesh(shape, axes)
+  if len(devs) < n:
+    raise RuntimeError(
+        f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
+        f"{len(devs)} — run under XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={n} (see launch/dryrun.py)")
+  # More devices than the mesh needs (e.g. 512-device dry-run host building
+  # the single-pod mesh): use the first n.
+  from jax.sharding import Mesh  # noqa: PLC0415
+  return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+  """Small mesh for tests (requires matching host device count)."""
+  import jax  # noqa: PLC0415
+  from jax.sharding import Mesh  # noqa: PLC0415
+  n = math.prod(shape)
+  return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,91 @@
+"""Serving driver: prefill -> synopsis build -> deadline-budgeted decode.
+
+The AccuracyTrader loop: each decode batch picks its refinement budget
+from the calibrated latency model and the configured deadline; new tokens
+accumulate in the recent buffer and are absorbed into the synopsis when
+it fills (the paper's low-priority incremental update).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --prompt-len 256 --tokens 32 --deadline-ms 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default="llama3-8b")
+  ap.add_argument("--smoke", action="store_true", default=True)
+  ap.add_argument("--batch", type=int, default=2)
+  ap.add_argument("--prompt-len", type=int, default=256)
+  ap.add_argument("--tokens", type=int, default=32)
+  ap.add_argument("--mode", default="synopsis",
+                  choices=["exact", "synopsis"])
+  ap.add_argument("--deadline-ms", type=float, default=50.0)
+  args = ap.parse_args()
+
+  import jax
+  import jax.numpy as jnp
+
+  from repro.configs.registry import get_config
+  from repro.core.deadline import BudgetController, LatencyModel
+  from repro.models import common as cm
+  from repro.models import transformer as tf
+  from repro.serve import synopsis_kv as skv
+  from repro.serve.kv_cache import n_attn_positions
+  from repro.serve.prefill import make_prefill_step
+  from repro.serve.serve_step import make_serve_step
+
+  cfg = get_config(args.arch, smoke=args.smoke)
+  key = jax.random.PRNGKey(0)
+  params, _ = cm.split(tf.init_model(key, cfg))
+  params = jax.tree.map(lambda p: p.astype(cfg.dtype), params)
+
+  B, S = args.batch, args.prompt_len
+  prompt = jax.random.randint(key, (B, S), 0, cfg.vocab)
+  t0 = time.time()
+  logits, cache = jax.jit(make_prefill_step(cfg))(params, prompt)
+  jax.block_until_ready(logits)
+  print(f"[prefill] {S} tokens in {time.time() - t0:.2f}s")
+
+  mode = args.mode if n_attn_positions(cfg) else "exact"
+  if mode == "synopsis":
+    cache = jax.jit(lambda c: skv.build(c, cfg))(cache)
+    M = S // cfg.synopsis.cluster_size
+    print(f"[synopsis] M={M} clusters of C={cfg.synopsis.cluster_size}")
+  ctrl = BudgetController(LatencyModel(base=5.0, slope=1.0, alpha=0.1),
+                          buckets=(0, 1, 2, 4, 8, 16, 32),
+                          i_max_cap=cfg.synopsis.i_max or 32)
+
+  steps = {}
+  tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+  out_tokens = [tok]
+  for i in range(args.tokens):
+    budget = ctrl.budget_for(args.deadline_ms) if mode == "synopsis" else 0
+    if (mode, budget) not in steps:
+      steps[(mode, budget)] = jax.jit(
+          make_serve_step(cfg, mode=mode, i_max=budget))
+    t0 = time.time()
+    logits, st = steps[(mode, budget)](params, cache, tok)
+    jax.block_until_ready(logits)
+    dt = (time.time() - t0) * 1e3
+    if mode == "synopsis":
+      ctrl.observe(budget, dt)
+      cache = skv.append_recent(cache, st["k_delta"], st["v_delta"])
+      cache["pos"] = st["pos"]
+      if int(cache["recent_len"][0]) >= cfg.synopsis.recent:
+        cache = jax.jit(lambda c: skv.absorb_recent(c, cfg))(cache)
+        print(f"[update] absorbed recent buffer -> "
+              f"M={cache['k_syn'].shape[4]}")
+    else:
+      cache["pos"] = st["pos"]
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out_tokens.append(tok)
+    print(f"[decode {i:3d}] budget={budget:3d} {dt:7.1f}ms")
+  print("generated:", jnp.concatenate(out_tokens, 1)[0].tolist())
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,199 @@
+"""Attention blocks: GQA (+rope, softcap, sliding window) and MLA.
+
+Train/prefill paths produce full-sequence outputs (chunked causal
+attention).  Decode paths live in ``repro.serve`` (they need KV caches);
+this module also exposes the projection helpers they reuse.
+
+MLA (deepseek-v2): the latent KV cache *is itself a learned synopsis* —
+decode uses the absorbed form where the per-token cache is just
+(kv_lora + rope) dims shared by all 128 heads, i.e. attention becomes GQA
+with one 576-wide "kv head"; AccuracyTrader's cluster synopsis then stacks
+on top of the latent cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import common as cm
+from repro.models.layers import causal_attention, einsum, proj_pe, rope
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: cm.ModelConfig, cross: bool = False) -> dict:
+  d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+  ks = jax.random.split(key, 4)
+  p = {
+      "wq": cm.param(ks[0], (d, H, hd), ("embed", "heads", None)),
+      "wk": cm.param(ks[1], (d, Hkv, hd), ("embed", "kv_heads", None)),
+      "wv": cm.param(ks[2], (d, Hkv, hd), ("embed", "kv_heads", None)),
+      "wo": cm.param(ks[3], (H, hd, d), ("heads", None, "embed"),
+                     scale=(H * hd) ** -0.5),
+  }
+  if cfg.attn_bias:
+    p["bq"] = cm.zeros((H, hd), ("heads", None))
+    p["bo"] = cm.zeros((d,), ("embed",))
+  return p
+
+
+def qkv(x, p, cfg: cm.ModelConfig, positions, *, use_rope=True):
+  # bf16-out projections: keeps fwd partial-sum ARs *and* their backward
+  # dx all-reduces in bf16 (cotangent dtype follows the primal output).
+  pe = dict(preferred_element_type=proj_pe(x))
+  q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype),
+                 **pe).astype(x.dtype)
+  k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype),
+                 **pe).astype(x.dtype)
+  v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype),
+                 **pe).astype(x.dtype)
+  if "bq" in p:
+    q = q + p["bq"][None, None].astype(x.dtype)
+  if use_rope:
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+  q = constrain(q, ("batch", None, "heads", None))
+  k = constrain(k, ("batch", None, "kv_heads", None))
+  return q, k, v
+
+
+def out_proj(o, p, x_dtype):
+  # bf16 output so the TP (heads-sharded) all-reduce moves bf16.
+  y = jnp.einsum("bshk,hkd->bsd", o.astype(x_dtype),
+                 p["wo"].astype(x_dtype),
+                 preferred_element_type=proj_pe(o)
+                 if o.dtype == x_dtype else jnp.float32)
+  if "bo" in p:
+    y = y + p["bo"][None, None].astype(x_dtype)
+  return y.astype(x_dtype)
+
+
+def attention_train(
+    x: jax.Array,              # (B, S, d)
+    p: dict,
+    cfg: cm.ModelConfig,
+    positions: jax.Array,      # (S,)
+    *,
+    local: bool = False,
+    enc_out: Optional[jax.Array] = None,   # cross-attention source (B,T,d)
+    causal_skip: bool = False,
+    return_kv: bool = False,
+):
+  sm_scale = cfg.hd ** -0.5
+  if enc_out is not None:
+    # Cross attention (whisper decoder): full, non-causal, no rope.
+    q = einsum("bsd,dhk->bshk", x, p["wq"]).astype(x.dtype)
+    k = einsum("btd,dhk->bthk", enc_out, p["wk"]).astype(x.dtype)
+    v = einsum("btd,dhk->bthk", enc_out, p["wv"]).astype(x.dtype)
+    B, S, H, D = q.shape
+    G = H // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, G, D)
+    logits = einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * sm_scale
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = einsum("bhgst,bthd->bshgd", pr, v.astype(jnp.float32))
+    o = o.reshape(B, S, H, D).astype(x.dtype)
+  else:
+    q, k, v = qkv(x, p, cfg, positions)
+    o = causal_attention(
+        q, k, v, sm_scale=sm_scale,
+        window=cfg.sliding_window if local else None,
+        attn_softcap=cfg.attn_softcap,
+        causal_skip=causal_skip)
+  y = out_proj(o, p, x.dtype)
+  if return_kv:
+    # (B, Hkv, S, D) decode-cache layout.
+    return y, (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+  return y
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: cm.ModelConfig) -> dict:
+  m = cfg.mla
+  d, H = cfg.d_model, cfg.n_heads
+  ks = jax.random.split(key, 8)
+  return {
+      "wq_a": cm.param(ks[0], (d, m.q_lora_rank), ("embed", "qlora")),
+      "q_norm": cm.zeros((m.q_lora_rank,), ("qlora",)),
+      "wq_b": cm.param(ks[1], (m.q_lora_rank, H, m.qk_nope_dim + m.qk_rope_dim),
+                       ("qlora", "heads", None)),
+      "wkv_a": cm.param(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim),
+                        ("embed", "kvlora")),
+      "kv_norm": cm.zeros((m.kv_lora_rank,), ("kvlora",)),
+      "wk_b": cm.param(ks[3], (m.kv_lora_rank, H, m.qk_nope_dim),
+                       ("kvlora", "heads", None)),
+      "wv_b": cm.param(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                       ("kvlora", "heads", None)),
+      "wo": cm.param(ks[5], (H, m.v_head_dim, d), ("heads", None, "embed"),
+                     scale=(H * m.v_head_dim) ** -0.5),
+  }
+
+
+def mla_latent(x, p, cfg, positions):
+  """Compute the latent KV cache entries: (c_kv (B,S,r), k_pe (B,S,dr))."""
+  m = cfg.mla
+  kv = jnp.einsum("bsd,dk->bsk", x, p["wkv_a"].astype(x.dtype),
+                  preferred_element_type=proj_pe(x)).astype(x.dtype)
+  c_kv, k_pe = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+  from repro.models.layers import rms_norm  # noqa: PLC0415
+  c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+  k_pe = rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+  return c_kv, k_pe
+
+
+def mla_queries(x, p, cfg, positions):
+  """(q_nope (B,S,H,dn), q_pe (B,S,H,dr))."""
+  m = cfg.mla
+  from repro.models.layers import rms_norm  # noqa: PLC0415
+  ql = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype),
+                  preferred_element_type=proj_pe(x)).astype(x.dtype)
+  ql = rms_norm(ql, p["q_norm"], cfg.norm_eps)
+  q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(x.dtype),
+                 preferred_element_type=proj_pe(x)).astype(x.dtype)
+  q_nope, q_pe = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+  q_pe = rope(q_pe, positions, cfg.rope_theta)
+  return q_nope, q_pe
+
+
+def mla_train(x, p, cfg: cm.ModelConfig, positions,
+              causal_skip: bool = False, return_kv: bool = False):
+  """Naive (non-absorbed) MLA for training: materialise per-head k/v."""
+  m = cfg.mla
+  q_nope, q_pe = mla_queries(x, p, cfg, positions)
+  c_kv, k_pe = mla_latent(x, p, cfg, positions)
+  k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype),
+                      preferred_element_type=proj_pe(x)).astype(x.dtype)
+  v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype),
+                 preferred_element_type=proj_pe(x)).astype(x.dtype)
+  q = jnp.concatenate([q_nope, q_pe], axis=-1)
+  k = jnp.concatenate(
+      [k_nope, jnp.broadcast_to(k_pe[:, :, None], q_pe.shape[:2]
+                                + (cfg.n_heads, m.qk_rope_dim))], axis=-1)
+  sm_scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+  # Pad v to q/k head dim for the shared kernel, then slice back.
+  o = causal_attention(q, k, v_pad(v, q.shape[-1]), sm_scale=sm_scale,
+                       causal_skip=causal_skip)[..., :m.v_head_dim]
+  y = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
+                 p["wo"].astype(x.dtype),
+                 preferred_element_type=proj_pe(x)).astype(x.dtype)
+  if return_kv:
+    # MLA latent cache: one 'kv head' of width kv_lora + rope.
+    lat = jnp.transpose(jnp.concatenate([c_kv, k_pe], axis=-1)[:, :, None],
+                        (0, 2, 1, 3))                      # (B,1,S,Dk)
+    return y, (lat, lat)
+  return y
+
+
+def v_pad(v, dim):
+  if v.shape[-1] == dim:
+    return v
+  pad = [(0, 0)] * (v.ndim - 1) + [(0, dim - v.shape[-1])]
+  return jnp.pad(v, pad)

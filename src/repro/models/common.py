@@ -1,0 +1,191 @@
+"""Model substrate: configs, parameter trees with logical sharding axes.
+
+Parameters are plain nested dicts of arrays.  Every init function builds a
+tree whose leaves are :class:`Box` (value + logical axes); ``split`` turns
+it into (params, axes) twin trees.  The axes tree drives NamedShardings
+(dist/sharding.py) and mesh-agnostic checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Box:
+  value: Any                      # jax.Array | ShapeDtypeStruct
+  axes: Tuple[Optional[str], ...]
+
+
+def is_box(x) -> bool:
+  return isinstance(x, Box)
+
+
+def split(tree):
+  params = jax.tree.map(lambda b: b.value, tree, is_leaf=is_box)
+  axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_box)
+  return params, axes
+
+
+def box_like(params, axes):
+  return jax.tree.map(Box, params, axes,
+                      is_leaf=lambda x: not isinstance(x, dict))
+
+
+def param(key, shape, axes, scale=None, dtype=jnp.float32):
+  """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+  if scale is None:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = fan_in ** -0.5
+  return Box(scale * jax.random.truncated_normal(key, -2, 2, shape, dtype),
+             axes)
+
+
+def zeros(shape, axes, dtype=jnp.float32):
+  return Box(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, axes, dtype=jnp.float32):
+  return Box(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+  kind: str = "attn"              # "attn" | "mamba"
+  local: bool = False             # sliding-window attention (gemma2)
+  use_moe: bool = False
+  cross_attn: bool = False        # whisper decoder
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+  num_experts: int
+  top_k: int
+  d_ff_expert: int
+  num_shared: int = 0             # always-on shared experts (deepseek)
+  dense_parallel: bool = False    # dense MLP residual in parallel (arctic)
+  capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+  q_lora_rank: int = 1536
+  kv_lora_rank: int = 512
+  qk_nope_dim: int = 128
+  qk_rope_dim: int = 64
+  v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+  d_state: int = 128
+  d_conv: int = 4
+  expand: int = 2
+  head_dim: int = 64
+  chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SynopsisConfig:
+  """AccuracyTrader serving config for this model."""
+  cluster_size: int = 128         # C: original tokens per aggregated point
+  i_max: int = 32                 # default refinement budget (clusters)
+  recent: int = 128               # exact-attention ring buffer (new tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+  n_layers: int
+  n_heads: int
+  d_ff: int
+  source_len: int = 1500          # whisper: 30 s of 20 ms frames
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+  name: str
+  n_layers: int
+  d_model: int
+  n_heads: int
+  n_kv_heads: int
+  d_ff: int
+  vocab: int
+  head_dim: int = 0               # 0 -> d_model // n_heads
+  rope_theta: float = 1e4
+  norm_eps: float = 1e-6
+  block_pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+  sliding_window: int = 4096
+  logit_softcap: Optional[float] = None   # gemma2 final-logit softcap
+  attn_softcap: Optional[float] = None    # gemma2 attention softcap
+  parallel_block: bool = False            # attn + ffn in parallel (command-r)
+  sandwich_norm: bool = False             # post-block norms (gemma2)
+  scale_embed: bool = False               # sqrt(d) embedding scale (gemma2/whisper-style)
+  mlp_type: str = "swiglu"                # "swiglu" | "gelu" (whisper)
+  tie_embeddings: bool = False
+  attn_bias: bool = False
+  moe: Optional[MoEConfig] = None
+  mla: Optional[MLAConfig] = None
+  ssm: Optional[SSMConfig] = None
+  encoder: Optional[EncoderConfig] = None  # whisper
+  frontend: Optional[str] = None           # "audio_stub" | "vision_stub"
+  frontend_tokens: int = 0                 # prefix tokens from the frontend
+  frontend_dim: int = 0                    # stub embedding dim
+  synopsis: SynopsisConfig = SynopsisConfig()
+  dtype: Any = jnp.bfloat16
+
+  @property
+  def hd(self) -> int:
+    return self.head_dim or self.d_model // self.n_heads
+
+  @property
+  def n_blocks(self) -> int:
+    assert self.n_layers % len(self.block_pattern) == 0, (
+        self.name, self.n_layers, len(self.block_pattern))
+    return self.n_layers // len(self.block_pattern)
+
+  def param_count(self, active: bool = False) -> int:
+    """Approximate parameters; ``active=True`` counts only routed-active
+    experts (for the MoE 6*N_active*D roofline MODEL_FLOPS)."""
+    c = self
+    total = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+    for spec in c.block_pattern:
+      per = 0
+      if spec.kind == "attn":
+        if c.mla:
+          m = c.mla
+          qk = m.qk_nope_dim + m.qk_rope_dim
+          per += c.d_model * m.q_lora_rank + m.q_lora_rank * c.n_heads * qk
+          per += c.d_model * (m.kv_lora_rank + m.qk_rope_dim)
+          per += m.kv_lora_rank * c.n_heads * (m.qk_nope_dim + m.v_head_dim)
+          per += c.n_heads * m.v_head_dim * c.d_model
+        else:
+          per += c.d_model * c.hd * (c.n_heads * 2 + c.n_kv_heads * 2)
+        if spec.cross_attn:
+          per += c.d_model * c.hd * (c.n_heads * 2 + c.n_kv_heads * 2)
+      else:
+        s = c.ssm
+        d_in = s.expand * c.d_model
+        per += c.d_model * (2 * d_in + 2 * s.d_state) + d_in * c.d_model
+      if spec.use_moe and c.moe:
+        e = c.moe
+        per += c.d_model * e.num_experts  # router
+        n_ffn = (e.top_k if active else e.num_experts) + e.num_shared
+        per += 3 * c.d_model * e.d_ff_expert * n_ffn
+        if e.dense_parallel:
+          per += 3 * c.d_model * c.d_ff
+      elif c.d_ff:
+        per += 3 * c.d_model * c.d_ff
+      total += per * c.n_blocks
+    if c.encoder:
+      e = c.encoder
+      per = c.d_model * (c.d_model // max(c.n_heads, 1)) * e.n_heads * 4
+      per += 3 * c.d_model * e.d_ff
+      total += per * e.n_layers
+    return total

@@ -1,0 +1,175 @@
+"""Shared neural building blocks (pure JAX, GSPMD-partitionable).
+
+All matmuls go through einsum with f32 accumulation
+(``preferred_element_type``); activations carry logical sharding
+constraints so pjit can partition train/prefill without shard_map.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import common as cm
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+  dt = x.dtype
+  x = x.astype(jnp.float32)
+  x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+  return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+  """Rotary embedding.  x (..., S, H, D), positions (..., S)."""
+  d = x.shape[-1]
+  half = d // 2
+  freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+  ang = positions[..., None].astype(jnp.float32) * freq        # (..., S, half)
+  cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+  x1, x2 = x[..., :half], x[..., half:]
+  out = jnp.concatenate(
+      [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+  return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+  if cap is None:
+    return x
+  return cap * jnp.tanh(x / cap)
+
+
+def einsum(eq: str, *args) -> jax.Array:
+  return jnp.einsum(eq, *args, preferred_element_type=jnp.float32)
+
+
+def proj_pe(x) -> "jnp.dtype":
+  """Output dtype for projection einsums.  bf16 keeps the TP all-reduces
+  (and their backward cotangents) in bf16 — the TPU-target lowering used
+  by the dry-run (REPRO_MIXED_DOTS=1).  The CPU runtime cannot execute
+  mixed bf16 dots (DotThunk limitation), so tests/examples default to
+  f32 accumulation; the math is identical up to rounding."""
+  import os  # noqa: PLC0415
+  if os.environ.get("REPRO_MIXED_DOTS") == "1":
+    return x.dtype
+  return jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill): chunked causal, memory O(S * q_chunk).
+# ---------------------------------------------------------------------------
+
+def causal_attention(
+    q: jax.Array,              # (B, S, H, D)
+    k: jax.Array,              # (B, S, Hkv, D)
+    v: jax.Array,              # (B, S, Hkv, D)
+    *,
+    sm_scale: float,
+    window: Optional[int] = None,      # sliding window (gemma2 local)
+    attn_softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    causal_skip: bool = False,          # skip fully-masked KV chunks
+) -> jax.Array:
+  """Blockwise causal attention: scan over query chunks, never materialise
+  the full S x S matrix.  ``causal_skip`` additionally restricts each query
+  chunk's KV range to [lo, hi) — the beyond-paper compute optimisation
+  (halves attention FLOPs; see EXPERIMENTS.md §Perf)."""
+  B, S, H, D = q.shape
+  Hkv = k.shape[2]
+  G = H // Hkv
+  q_chunk = min(q_chunk, S)
+  assert S % q_chunk == 0
+  nq = S // q_chunk
+
+  qg = q.reshape(B, S, Hkv, G, D)
+  pos = jnp.arange(S)
+
+  def one_chunk(i):
+    qi = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=1)
+    qpos = i * q_chunk + jnp.arange(q_chunk)
+    if causal_skip:
+      # keys in [lo, hi): hi = (i+1)*q_chunk; lo = window clip (static size).
+      hi = (i + 1) * q_chunk
+      if window is not None:
+        span = min(S, ((window + q_chunk - 1) // q_chunk + 1) * q_chunk)
+      else:
+        span = S
+      lo = jnp.maximum(hi - span, 0)
+      ki = jax.lax.dynamic_slice_in_dim(k, lo, span, axis=1)
+      vi = jax.lax.dynamic_slice_in_dim(v, lo, span, axis=1)
+      kpos = lo + jnp.arange(span)
+    else:
+      ki, vi, kpos = k, v, pos
+    logits = einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                    ki.astype(jnp.float32)) * sm_scale
+    logits = softcap(logits, attn_softcap)
+    mask = qpos[:, None] >= kpos[None, :]
+    if window is not None:
+      mask &= (qpos[:, None] - kpos[None, :]) < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    oi = einsum("bhgqk,bkhd->bqhgd", p, vi.astype(jnp.float32))
+    return oi.reshape(B, q_chunk, H, D).astype(q.dtype)
+
+  if nq == 1:
+    return one_chunk(0)
+  # Remat per q-chunk: the backward pass re-derives each chunk's softmax
+  # instead of keeping (B, H, S, S)-worth of residuals live.
+  chunks = jax.lax.map(jax.checkpoint(one_chunk),
+                       jnp.arange(nq))              # (nq, B, qc, H, D)
+  return jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, D)
+
+
+def decode_attention(
+    q: jax.Array,              # (B, 1, H, D) new-token queries
+    k_cache: jax.Array,        # (B, S, Hkv, D)
+    v_cache: jax.Array,        # (B, S, Hkv, D)
+    *,
+    sm_scale: float,
+    length_bias: Optional[jax.Array] = None,   # (B, S) 0/-inf valid mask
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+  """Exact decode attention (GSPMD path: XLA partitions the S reduction
+  when the cache is kv_seq-sharded; the softmax max/sum become
+  all-reduces — the paper's n-component scatter-gather merge)."""
+  B, _, H, D = q.shape
+  Hkv = k_cache.shape[2]
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, D)
+  logits = einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                  k_cache.astype(jnp.float32)) * sm_scale
+  logits = softcap(logits, attn_softcap)
+  if length_bias is not None:
+    logits = logits + length_bias[:, None, None, :]
+  p = jax.nn.softmax(logits, axis=-1)
+  o = einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+  return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w1, w3, w2) -> jax.Array:
+  pe = dict(preferred_element_type=proj_pe(x))
+  h = jnp.einsum("bsd,df->bsf", x, w1.astype(x.dtype), **pe)
+  g = jnp.einsum("bsd,df->bsf", x, w3.astype(x.dtype), **pe)
+  h = (jax.nn.silu(h.astype(jnp.float32)) * g.astype(jnp.float32))
+  h = constrain(h.astype(x.dtype), ("batch", None, "ff"))
+  # Row-parallel projection: emit in the activation dtype so the TP
+  # partial-sum all-reduce moves bf16, not f32 (halves collective bytes;
+  # EXPERIMENTS.md §Perf).
+  return jnp.einsum("bsf,fd->bsd", h, w2.astype(x.dtype),
+                    preferred_element_type=proj_pe(x)).astype(x.dtype)
+
+
+def gelu_mlp(x: jax.Array, w1, b1, w2, b2) -> jax.Array:
+  h = jnp.einsum("bsd,df->bsf", x, w1.astype(x.dtype),
+                 preferred_element_type=proj_pe(x)).astype(x.dtype) \
+      + b1.astype(x.dtype)
+  h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+  return (jnp.einsum("bsf,fd->bsd", h, w2.astype(x.dtype),
+                     preferred_element_type=proj_pe(x)).astype(x.dtype)
+          + b2.astype(x.dtype)).astype(x.dtype)

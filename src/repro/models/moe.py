@@ -1,0 +1,127 @@
+"""Mixture-of-Experts with token-choice routing + per-expert capacity.
+
+Routing semantics: every token picks its top-k experts; every expert then
+keeps its top-``capacity`` routed tokens (standard dropping), selected
+*per data-parallel shard*.  The DP-locality is expressed by reshaping the
+token stream to an explicit leading ``(dp, tokens/dp)`` dim that carries
+the (pod, data) sharding: routing, top-C selection, gather and combine
+all become batched ops over that parallel dim, so GSPMD never needs to
+all-gather the token stream; expert weights/compute shard over `model`
+(EP) and the combine scatter-add is the layer's model-axis all-reduce.
+
+(An earlier shard_map formulation hit an XLA:CPU partial-auto bug inside
+scanned layers; this reshape formulation is equivalent and pure GSPMD.)
+
+Shared experts (deepseek-v2) and a parallel dense MLP (arctic) are folded
+in at the call site.  Decode works with S=1 (capacity >= 1 guaranteed).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models import common as cm
+from repro.models.layers import einsum, proj_pe, swiglu
+
+
+def init_moe(key, cfg: cm.ModelConfig) -> dict:
+  m = cfg.moe
+  d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+  ks = jax.random.split(key, 8)
+  p = {
+      "router": cm.param(ks[0], (d, e), ("embed", "expert")),
+      "w1": cm.param(ks[1], (e, d, f), ("expert", "embed", "ff"), d ** -0.5),
+      "w3": cm.param(ks[2], (e, d, f), ("expert", "embed", "ff"), d ** -0.5),
+      "w2": cm.param(ks[3], (e, f, d), ("expert", "ff", "embed"), f ** -0.5),
+  }
+  if m.num_shared:
+    fs = f * m.num_shared
+    p["shared"] = {
+        "w1": cm.param(ks[4], (d, fs), ("embed", "ff")),
+        "w3": cm.param(ks[5], (d, fs), ("embed", "ff")),
+        "w2": cm.param(ks[6], (fs, d), ("ff", "embed")),
+    }
+  return p
+
+
+def _dp_size(B: int) -> int:
+  from repro.dist import sharding as shd  # noqa: PLC0415
+  mesh = shd.current_mesh()
+  if mesh is None:
+    return 1
+  n = 1
+  for a in ("pod", "data"):
+    n *= mesh.shape.get(a, 1)
+  return n if n > 1 and B % n == 0 else 1
+
+
+def moe_ffn(x: jax.Array, p: dict,
+            cfg: cm.ModelConfig) -> Tuple[jax.Array, jax.Array]:
+  """Returns (output (B,S,d), aux load-balance loss)."""
+  m = cfg.moe
+  B, S, d = x.shape
+  T = B * S
+  E, K = m.num_experts, m.top_k
+  g = _dp_size(B)                                # DP shards
+  Tl = T // g                                    # local tokens per shard
+  xf = x.reshape(g, Tl, d)
+  xf = constrain(xf, ("batch", None, None))
+
+  logits = einsum("gtd,de->gte", xf, p["router"])          # f32
+  probs = jax.nn.softmax(logits, axis=-1)
+  topv, topi = jax.lax.top_k(probs, K)                     # (g,Tl,K)
+  topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+  in_topk = jnp.zeros((g, Tl, E), topv.dtype)
+  gi = jnp.arange(g)[:, None, None]
+  ti = jnp.arange(Tl)[None, :, None]
+  in_topk = in_topk.at[gi, ti, topi].set(topv)             # gate or 0
+
+  # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+  frac_routed = jnp.mean((in_topk > 0).astype(jnp.float32), axis=(0, 1))
+  mean_prob = jnp.mean(probs, axis=(0, 1))
+  aux = E * jnp.sum(frac_routed * mean_prob)
+
+  cap = max(1, int(Tl * K / E * m.capacity_factor))
+  # Expert-side top-C token selection per DP shard.
+  masked = jnp.where(in_topk > 0, in_topk, -1.0)
+  masked = jnp.swapaxes(masked, 1, 2)                      # (g,E,Tl)
+  masked = constrain(masked, ("batch", "expert", None))
+  gate_ec, tok_ec = jax.lax.top_k(masked, cap)             # (g,E,C)
+  keep = gate_ec > 0
+  gate_ec = jnp.where(keep, gate_ec, 0.0)
+
+  xg = jnp.take_along_axis(
+      xf[:, None], tok_ec[..., None], axis=2)              # (g,E,C,d)
+  xg = constrain(xg, ("batch", "expert", None, None))
+  # proj_pe: bf16 batched dots on TPU (mixed mode); f32 on the CPU
+  # runtime, whose DotThunk lacks batched bf16->f32.
+  pe = proj_pe(x)
+  xg = xg.astype(pe)
+  h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xg, p["w1"].astype(pe),
+                             preferred_element_type=pe))
+  h = h * jnp.einsum("gecd,edf->gecf", xg, p["w3"].astype(pe),
+                     preferred_element_type=pe)
+  h = constrain(h, ("batch", "expert", None, "ff"))
+  y_ec = jnp.einsum("gecf,efd->gecd", h.astype(pe), p["w2"].astype(pe),
+                    preferred_element_type=pe
+                    ).astype(x.dtype)                        # (g,E,C,d)
+  y_ec = y_ec * gate_ec[..., None].astype(x.dtype)
+
+  def combine(tok, y):
+    # tok (E,C) indices into Tl; y (E,C,d) — bf16 combine so the EP
+    # all-reduce moves bf16
+    return jnp.zeros((Tl, d), x.dtype).at[tok.reshape(-1)].add(
+        y.reshape(-1, d))
+
+  yf = jax.vmap(combine)(tok_ec, y_ec)                     # (g,Tl,d)
+  y = yf.reshape(B, S, d).astype(x.dtype)
+  y = constrain(y, ("batch", None, None))
+
+  if m.num_shared:
+    s = p["shared"]
+    y = y + swiglu(x, s["w1"], s["w3"], s["w2"])
+  return y, aux

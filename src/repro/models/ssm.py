@@ -1,0 +1,163 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) sequence mixer.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within chunks of
+length ``chunk``, linear state passing between chunks — MXU-dense einsums
+plus one small scan).  Decode is the O(1)-state recurrence, which is what
+makes `long_500k` native for mamba2/jamba.
+
+Layout: d_inner = expand * d_model; h = d_inner/head_dim heads ("ssm_heads"
+sharded over `model`), state n per head.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import common as cm
+from repro.models.layers import einsum, rms_norm
+
+
+def init_ssm(key, cfg: cm.ModelConfig) -> dict:
+  s = cfg.ssm
+  d = cfg.d_model
+  d_in = s.expand * d
+  h = d_in // s.head_dim
+  ks = jax.random.split(key, 8)
+  conv_dim = d_in + 2 * s.d_state
+  return {
+      # projections: [z, x, B, C, dt]
+      "in_proj": cm.param(ks[0], (d, 2 * d_in + 2 * s.d_state + h),
+                          ("embed", "ssm_heads")),
+      "conv_w": cm.param(ks[1], (s.d_conv, conv_dim), (None, "ssm_heads"),
+                         scale=0.5),
+      "conv_b": cm.zeros((conv_dim,), ("ssm_heads",)),
+      "A_log": cm.Box(jnp.log(jnp.linspace(1.0, 16.0, h)), ("ssm_heads",)),
+      "D": cm.ones((h,), ("ssm_heads",)),
+      "dt_bias": cm.zeros((h,), ("ssm_heads",)),
+      "norm": cm.zeros((d_in,), ("ssm_heads",)),
+      "out_proj": cm.param(ks[2], (d_in, d), ("ssm_heads", "embed")),
+  }
+
+
+def _split_proj(zxbcdt, cfg):
+  s = cfg.ssm
+  d_in = s.expand * cfg.d_model
+  h = d_in // s.head_dim
+  z, x, Bs, Cs, dt = jnp.split(
+      zxbcdt, [d_in, 2 * d_in, 2 * d_in + s.d_state,
+               2 * d_in + 2 * s.d_state], axis=-1)
+  return z, x, Bs, Cs, dt, d_in, h
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+  """Depthwise causal conv1d.  u (B,S,C), w (K,C).  Returns (y, new_state)
+  where state is the last K-1 inputs (for decode)."""
+  K = w.shape[0]
+  if state is None:
+    pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+  else:
+    pad = state
+  ext = jnp.concatenate([pad, u], axis=1)                  # (B, S+K-1, C)
+  y = sum(ext[:, i:i + u.shape[1]] * w[i][None, None] for i in range(K))
+  y = y + b[None, None]
+  new_state = ext[:, -(K - 1):]
+  return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, A, Bs, Cs, chunk: int):
+  """Chunked SSD scan.  x (b,s,h,p), dt (b,s,h) [post-softplus],
+  A (h,) [negative], Bs/Cs (b,s,n).  Returns y (b,s,h,p), final state
+  (b,h,p,n)."""
+  b, s, h, p = x.shape
+  n = Bs.shape[-1]
+  L = min(chunk, s)
+  assert s % L == 0
+  nc = s // L
+  xc = x.reshape(b, nc, L, h, p)
+  dtc = dt.reshape(b, nc, L, h)
+  Bc = Bs.reshape(b, nc, L, n)
+  Cc = Cs.reshape(b, nc, L, n)
+
+  dA = dtc * A[None, None, None]                           # (b,nc,L,h) <= 0
+  cum = jnp.cumsum(dA, axis=2)                             # within-chunk
+  total = cum[:, :, -1]                                    # (b,nc,h)
+
+  # Intra-chunk (quadratic in L): y_ij = C_i . B_j * exp(cum_i - cum_j) dt_j
+  # Mask INSIDE the exponent: future pairs have positive exponents whose
+  # exp() overflows and poisons the backward through the where (NaN grads).
+  diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b,nc,L,L,h)
+  mask = jnp.tril(jnp.ones((L, L), bool))
+  decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+  cb = einsum("bcin,bcjn->bcij", Cc, Bc)                   # (b,nc,L,L)
+  w = cb[..., None] * decay * dtc[:, :, None]              # (b,nc,L,L,h)
+  y_intra = einsum("bcijh,bcjhp->bcihp", w, xc)
+
+  # Chunk states: S_c = sum_j exp(total - cum_j) dt_j B_j x_j
+  sdec = jnp.exp(total[:, :, None] - cum)                  # (b,nc,L,h)
+  states = einsum("bcln,bclh,bclhp->bchpn",
+                  Bc, sdec * dtc, xc)                      # (b,nc,h,p,n)
+
+  # Inter-chunk recurrence: S_prev[c] = sum_{c'<c} exp(sum totals) S_{c'}
+  def scan_fn(carry, inp):
+    st, tot = inp                                          # (b,h,p,n),(b,h)
+    prev = carry
+    new = prev * jnp.exp(tot)[:, :, None, None] + st
+    return new, prev
+  init = jnp.zeros((b, h, p, n), jnp.float32)
+  final, prevs = jax.lax.scan(
+      scan_fn, init,
+      (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+  prevs = jnp.moveaxis(prevs, 0, 1)                        # (b,nc,h,p,n)
+
+  y_inter = einsum("bcln,bclh,bchpn->bclhp", Cc, jnp.exp(cum), prevs)
+  y = (y_intra + y_inter).reshape(b, s, h, p)
+  return y, final
+
+
+def ssm_forward(
+    x: jax.Array,              # (B, S, d)
+    p: dict,
+    cfg: cm.ModelConfig,
+    *,
+    decode_state: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+  """Returns (y (B,S,d), new_decode_state).  decode_state = (conv_state,
+  ssd_state); pass it for S==1 incremental decoding."""
+  s = cfg.ssm
+  zxbcdt = einsum("bsd,dk->bsk", x, p["in_proj"]).astype(x.dtype)
+  z, xin, Bs, Cs, dt, d_in, h = _split_proj(zxbcdt, cfg)
+
+  conv_in = jnp.concatenate([xin, Bs, Cs], axis=-1)
+  conv_state = decode_state[0] if decode_state else None
+  conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(jnp.float32),
+                                    p["conv_b"].astype(jnp.float32),
+                                    conv_state)
+  xin, Bs, Cs = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+
+  B_, S_, _ = x.shape
+  xh = xin.reshape(B_, S_, h, s.head_dim)
+  A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (h,)
+  dt = jax.nn.softplus(dt.astype(jnp.float32)
+                       + p["dt_bias"].astype(jnp.float32))  # (B,S,h)
+
+  if decode_state is None:
+    y, ssd_state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                               Bs.astype(jnp.float32), Cs.astype(jnp.float32),
+                               s.chunk)
+  else:
+    st = decode_state[1]                                   # (B,h,p,n)
+    dA = jnp.exp(dt[:, 0] * A[None])                       # (B,h)
+    dBx = einsum("bn,bh,bhp->bhpn", Bs[:, 0], dt[:, 0], xh[:, 0])
+    ssd_state = st * dA[:, :, None, None] + dBx
+    y = einsum("bn,bhpn->bhp", Cs[:, 0], ssd_state)[:, None]  # (B,1,h,p)
+
+  y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+  y = y.reshape(B_, S_, d_in)
+  y = y * jax.nn.silu(z.astype(jnp.float32))
+  y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+  out = einsum("bsk,kd->bsd", y, p["out_proj"]).astype(x.dtype)
+  return out, (new_conv, ssd_state)

@@ -1,0 +1,145 @@
+"""Decode caches for all architectures + the synopsis KV structure.
+
+Three cache families (all leading-stacked over super-blocks so serve_step
+scans them exactly like the parameters):
+
+  * ExactKV     — (nb, npos, B, Hkv, S, D) keys/values (GQA archs) or the
+                  MLA latent cache (nb, npos, B, 1, S, r+rope).
+  * SynopsisKV  — AccuracyTrader: cluster-contiguous originals + centroid
+                  tables + counts + a small exact "recent" ring buffer for
+                  tokens generated since the last synopsis update.
+  * SSMState    — (conv_state, ssd_state) for mamba blocks.
+
+``cache_specs`` returns ShapeDtypeStructs (dry-run contract) and
+``init_cache`` real zeros (tests).  Sharding axes follow the same logical
+names as params; under SERVE_RULES the sequence axis of caches/synopses
+shards over `model` — each shard is one paper "component" and the
+online-softmax merge is the result composer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+# Logical axes per cache leaf (leading 'layers' for the scan stack).
+KV_AXES = ("layers", None, "batch", "kv_heads", "kv_seq", None)
+SYN_AXES = KV_AXES
+COUNT_AXES = ("layers", None, "batch", "kv_seq")
+RECENT_AXES = ("layers", None, "batch", "kv_heads", None, None)
+SSM_CONV_AXES = ("layers", None, "batch", None, "ssm_heads")
+SSM_STATE_AXES = ("layers", None, "batch", "ssm_heads", None, "ssm_state")
+CROSS_AXES = ("layers", None, "batch", "kv_heads", None, None)
+
+
+def _kv_dims(cfg: cm.ModelConfig) -> Tuple[int, int, int]:
+  """(Hkv, key_dim, value_dim) of the decode cache entries."""
+  if cfg.mla:
+    m = cfg.mla
+    return 1, m.kv_lora_rank + m.qk_rope_dim, m.kv_lora_rank + m.qk_rope_dim
+  return cfg.n_kv_heads, cfg.hd, cfg.hd
+
+
+def n_attn_positions(cfg: cm.ModelConfig) -> int:
+  return sum(1 for s in cfg.block_pattern if s.kind == "attn")
+
+
+def n_ssm_positions(cfg: cm.ModelConfig) -> int:
+  return sum(1 for s in cfg.block_pattern if s.kind == "mamba")
+
+
+def cache_struct(cfg: cm.ModelConfig, B: int, S: int, *,
+                 synopsis: bool) -> Dict[str, Any]:
+  """Shapes + logical axes of the decode cache for (cfg, batch, seq)."""
+  nb = cfg.n_blocks
+  na = n_attn_positions(cfg)
+  ns = n_ssm_positions(cfg)
+  Hkv, Dk, _ = _kv_dims(cfg)
+  out: Dict[str, Any] = {}
+  dt = cfg.dtype
+
+  if na:
+    if synopsis:
+      sc = cfg.synopsis
+      C = sc.cluster_size
+      assert S % C == 0, (S, C)
+      M = S // C
+      R = sc.recent
+      out["k"] = ((nb, na, B, Hkv, S, Dk), dt, KV_AXES)
+      out["v"] = ((nb, na, B, Hkv, S, Dk), dt, KV_AXES)
+      out["k_syn"] = ((nb, na, B, Hkv, M, Dk), dt, SYN_AXES)
+      out["v_syn"] = ((nb, na, B, Hkv, M, Dk), dt, SYN_AXES)
+      out["counts"] = ((nb, na, B, M), jnp.float32, COUNT_AXES)
+      out["recent_k"] = ((nb, na, B, Hkv, R, Dk), dt, RECENT_AXES)
+      out["recent_v"] = ((nb, na, B, Hkv, R, Dk), dt, RECENT_AXES)
+      out["recent_len"] = ((B,), jnp.int32, ("batch",))
+    else:
+      out["k"] = ((nb, na, B, Hkv, S, Dk), dt, KV_AXES)
+      out["v"] = ((nb, na, B, Hkv, S, Dk), dt, KV_AXES)
+  if ns:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    out["conv_state"] = ((nb, ns, B, s.d_conv - 1, conv_dim), dt,
+                         SSM_CONV_AXES)
+    out["ssd_state"] = ((nb, ns, B, h, s.head_dim, s.d_state), jnp.float32,
+                        SSM_STATE_AXES)
+  if cfg.encoder is not None:
+    T = cfg.encoder.source_len
+    out["cross_k"] = ((nb, na, B, cfg.n_kv_heads, T, cfg.hd), dt, CROSS_AXES)
+    out["cross_v"] = ((nb, na, B, cfg.n_kv_heads, T, cfg.hd), dt, CROSS_AXES)
+  out["pos"] = ((B,), jnp.int32, ("batch",))
+  return out
+
+
+def cache_specs(cfg, B, S, *, synopsis: bool):
+  """ShapeDtypeStruct tree (no allocation) for the dry-run."""
+  return {k: jax.ShapeDtypeStruct(sh, dt)
+          for k, (sh, dt, _) in cache_struct(cfg, B, S,
+                                             synopsis=synopsis).items()}
+
+
+def cache_axes(cfg, B, S, *, synopsis: bool):
+  return {k: ax
+          for k, (sh, dt, ax) in cache_struct(cfg, B, S,
+                                              synopsis=synopsis).items()}
+
+
+def init_cache(cfg, B, S, *, synopsis: bool, key=None):
+  """Real cache (randomised contents for tests/benchmarks)."""
+  key = key if key is not None else jax.random.PRNGKey(0)
+  out = {}
+  for name, (sh, dt, _) in cache_struct(cfg, B, S, synopsis=synopsis).items():
+    if name in ("pos",):
+      out[name] = jnp.full(sh, S, dt)
+    elif name == "recent_len":
+      out[name] = jnp.zeros(sh, dt)
+    elif name == "counts":
+      C = cfg.synopsis.cluster_size
+      out[name] = jnp.full(sh, C, dt)
+    elif dt in (jnp.float32, cfg.dtype, jnp.bfloat16):
+      key, sub = jax.random.split(key)
+      out[name] = 0.1 * jax.random.normal(sub, sh, jnp.float32)
+      out[name] = out[name].astype(dt)
+    else:
+      out[name] = jnp.zeros(sh, dt)
+  return out
+
+
+def build_synopsis_from_cache(k_cache: jax.Array, v_cache: jax.Array,
+                              cluster_size: int):
+  """Aggregate a (.., S, D) exact cache into centroid tables (paper step 3:
+  mean aggregation).  Contiguous C-token clusters — the permutation to
+  similarity order is applied upstream by repro.serve.synopsis_kv."""
+  *lead, S, D = k_cache.shape
+  M = S // cluster_size
+  ks = k_cache.reshape(*lead, M, cluster_size, D)
+  vs = v_cache.reshape(*lead, M, cluster_size, D)
+  return (ks.mean(axis=-2).astype(k_cache.dtype),
+          vs.mean(axis=-2).astype(v_cache.dtype),
+          jnp.full((*k_cache.shape[:-3], M), cluster_size, jnp.float32))

@@ -1,0 +1,41 @@
+"""Prefill step: run the full prompt, emit (last-token logits, decode cache).
+
+The cache comes out in the decode layout (nb, na, B, Hkv, S, D); for
+AccuracyTrader serving, ``repro.serve.synopsis_kv.build`` then clusters it
+into the synopsis structure (offline module of the paper — runs once per
+sequence after prefill and incrementally thereafter).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.models.layers import softcap
+
+
+def make_prefill_step(cfg: cm.ModelConfig):
+  def prefill_step(params, tokens, frontend_embeds=None):
+    h, _, kv = tf.hidden_states(params, cfg, tokens, frontend_embeds,
+                                collect_kv=True)
+    last = h[:, -1]                                           # (B, d)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    logits = softcap(logits, cfg.logit_softcap)
+    logits = constrain(logits, ("batch", "vocab"))
+
+    cache: Dict[str, jax.Array] = {}
+    B = tokens.shape[0]
+    S = h.shape[1]
+    for name in ("k", "v", "cross_k", "cross_v", "conv_state", "ssd_state"):
+      if kv and name in kv:
+        cache[name] = kv[name]
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+  return prefill_step

@@ -1,0 +1,455 @@
+"""Decode (serve) step: one new token against a KV cache of length S.
+
+``mode="exact"``    — full attention over the cache (baseline; O(S)).
+``mode="synopsis"`` — AccuracyTrader: stage-1 centroid scoring + initial
+result, top-``i_max`` cluster refinement, exact attention over the recent
+ring buffer and the new token, all merged by online-softmax partials
+(O(S/C + i_max*C + R)).  This is what makes `long_500k` runnable for
+attention architectures.
+
+The layer loop mirrors training: one ``lax.scan`` over super-blocks whose
+xs are (stacked params, stacked cache slices); only *changed* state (SSM
+states, per-layer KV deltas) is emitted as ys, so the big caches are
+read-only inside the step (no 2x cache live range at compile).
+
+Sharding (SERVE_RULES / LONG_RULES): cache seq axes shard over `model`
+(and `data` for long_500k) — each shard is one paper "component"; the
+partial-merge all-reduces are the result composer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models import common as cm
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tf
+from repro.models.layers import einsum, rms_norm, rope, softcap
+
+NEG_INF = -1e30
+
+
+def _seq_axes():
+  """Mesh axes the KV cache sequence dim is sharded over (rule table)."""
+  from repro.dist import sharding as shd  # noqa: PLC0415
+  rules = shd.current_rules() or dict(shd.DEFAULT_RULES)
+  t = rules.get("kv_seq")
+  if t is None:
+    return ()
+  return (t,) if isinstance(t, str) else tuple(t)
+
+
+# ---------------------------------------------------------------------------
+# Partial-attention algebra (softcap-aware; decode shapes: q (B,H,Dk)).
+# ---------------------------------------------------------------------------
+
+def _partials(q, k, v, *, sm_scale, bias=None, cap=None):
+  """q (B,H,Dk), k (B,Hkv,S,Dk), v (B,Hkv,S,Dv), bias (B,Hkv,S)."""
+  B, H, _ = q.shape
+  Hkv = k.shape[1]
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, -1).astype(jnp.float32)
+  logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                      k.astype(jnp.float32)) * sm_scale
+  logits = softcap(logits, cap)
+  if bias is not None:
+    logits = logits + bias[:, :, None, :].astype(jnp.float32)
+  m = jnp.maximum(jnp.max(logits, axis=-1), NEG_INF)
+  p = jnp.exp(logits - m[..., None])
+  l = jnp.sum(p, axis=-1)
+  o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+  o = o / jnp.maximum(l, 1e-30)[..., None]
+  Dv = v.shape[-1]
+  return (o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H))
+
+
+def _merge(a, b):
+  oa, ma, la = a
+  ob, mb, lb = b
+  m = jnp.maximum(ma, mb)
+  wa = la * jnp.exp(ma - m)
+  wb = lb * jnp.exp(mb - m)
+  l = jnp.maximum(wa + wb, 1e-30)
+  o = (oa * wa[..., None] + ob * wb[..., None]) / l[..., None]
+  return (o, m, l)
+
+
+def _gather_clusters(kv, selected, C):
+  """kv (B,Hkv,S,D), selected (B,Hkv,I) -> (B,Hkv,I*C,D)."""
+  B, Hkv, S, D = kv.shape
+  I = selected.shape[-1]
+  starts = jnp.maximum(selected, 0) * C                       # (B,Hkv,I)
+  idx = starts[..., None] + jnp.arange(C)[None, None, None]   # (B,Hkv,I,C)
+  idx = idx.reshape(B, Hkv, I * C)
+  return jnp.take_along_axis(kv, idx[..., None], axis=2)
+
+
+def synopsis_decode_attention(
+    q: jax.Array,            # (B, H, Dk) rope'd new-token queries
+    cache: Dict[str, jax.Array],   # slice for this layer (no nb/na dims)
+    *,
+    i_max: int,
+    cluster_size: int,
+    sm_scale: float,
+    cap: Optional[float] = None,
+    self_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+  """AccuracyTrader Algorithm 1 on a KV cache; returns (B, H, Dv)."""
+  k_syn, v_syn = cache["k_syn"], cache["v_syn"]
+  counts = cache["counts"]
+  M = k_syn.shape[2]
+  B, H, _ = q.shape
+  Hkv = k_syn.shape[1]
+  G = H // Hkv
+
+  # Stage 1 (line 1): correlations c_i from the synopsis.
+  qg = q.reshape(B, Hkv, G, -1).astype(jnp.float32)
+  scores = jnp.einsum("bhgd,bhmd->bhgm", qg,
+                      k_syn.astype(jnp.float32)).max(axis=2) * sm_scale
+
+  parts = None
+  if i_max > 0:
+    # Lines 2-3: rank and select.
+    _, selected = jax.lax.top_k(scores, min(i_max, M))
+    selected = selected.astype(jnp.int32)
+    sel_onehot = jnp.any(jax.nn.one_hot(selected, M, dtype=jnp.bool_),
+                         axis=2)                              # (B,Hkv,M)
+    syn_bias = jnp.where(sel_onehot, NEG_INF,
+                         jnp.log(jnp.maximum(counts, 1.0))[:, None, :])
+    # Stage 2 (lines 4-10): exact attention over the selected clusters.
+    kg = _gather_clusters(cache["k"], selected, cluster_size)
+    vg = _gather_clusters(cache["v"], selected, cluster_size)
+    parts = _partials(q, kg, vg, sm_scale=sm_scale, cap=cap)
+    p_syn = _partials(q, k_syn, v_syn, sm_scale=sm_scale, bias=syn_bias,
+                      cap=cap)
+  else:
+    syn_bias = jnp.log(jnp.maximum(counts, 1.0))[:, None, :] * jnp.ones(
+        (B, Hkv, M), jnp.float32)
+    p_syn = _partials(q, k_syn, v_syn, sm_scale=sm_scale, bias=syn_bias,
+                      cap=cap)
+  out = _merge(p_syn, parts) if parts is not None else p_syn
+
+  # Recent ring buffer (tokens since last synopsis update) — exact.
+  if "recent_k" in cache:
+    R = cache["recent_k"].shape[2]
+    rl = cache["recent_len"]                                  # (B,)
+    rbias = jnp.where(jnp.arange(R)[None, :] < rl[:, None], 0.0, NEG_INF)
+    rbias = jnp.broadcast_to(rbias[:, None], (B, Hkv, R))
+    p_rec = _partials(q, cache["recent_k"], cache["recent_v"],
+                      sm_scale=sm_scale, bias=rbias, cap=cap)
+    out = _merge(out, p_rec)
+
+  if self_kv is not None:
+    k1, v1 = self_kv                                          # (B,Hkv,1,D)
+    p_self = _partials(q, k1, v1, sm_scale=sm_scale, cap=cap)
+    out = _merge(out, p_self)
+  return out[0]
+
+
+def sharded_synopsis_attention(
+    q, cache, *, i_max, cluster_size, sm_scale, cap=None, self_kv=None,
+    seq_axes=("model",),
+):
+  """AccuracyTrader decode attention with the KV cache + synopsis sharded
+  over ``seq_axes`` — the paper's n-component scatter-gather, made
+  explicit: every shard ("component") scores its own centroids, the
+  *global* ranking comes from one small score all-gather, each shard
+  refines only the selected clusters it owns, and the online-softmax merge
+  of shard partials is the result composer.  Collectives per layer: one
+  (B,Hkv,M) f32 all-gather + one (B,H,D+2) partials all-gather — vs. the
+  GSPMD fallback which all-gathers the whole cache shard (see
+  EXPERIMENTS.md §Perf iteration 1)."""
+  from repro.dist import sharding as shd  # noqa: PLC0415
+  from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+  mesh = shd.current_mesh()
+  axes = tuple(a for a in seq_axes if mesh is not None and a in mesh.shape)
+  M = cache["k_syn"].shape[2]
+  B = q.shape[0]
+  nshards = 1
+  for a in axes:
+    nshards *= mesh.shape[a]
+  if not axes or M % nshards != 0 or nshards == 1:
+    return synopsis_decode_attention(
+        q, cache, i_max=i_max, cluster_size=cluster_size,
+        sm_scale=sm_scale, cap=cap, self_kv=self_kv)
+
+  # The batch dim stays DP-sharded: it must be *manual* too, else the
+  # shard_map boundary would force-replicate it (a (B,Hkv,S/16,D) gather).
+  dp = tuple(a for a in ("pod", "data")
+             if a in mesh.shape and a not in axes)
+  dp_n = 1
+  for a in dp:
+    dp_n *= mesh.shape[a]
+  if B % max(dp_n, 1) != 0:
+    dp, dp_n = (), 1
+  bspec = dp if dp else None
+
+  kv_spec = P(bspec, None, axes, None)
+  specs = {"k": kv_spec, "v": kv_spec, "k_syn": kv_spec, "v_syn": kv_spec,
+           "counts": P(bspec, axes)}
+  for name in ("recent_k", "recent_v"):
+    if name in cache:
+      specs[name] = P(bspec, None, None, None)
+  if "recent_len" in cache:
+    specs["recent_len"] = P(bspec)
+  cache = {k_: cache[k_] for k_ in specs}
+  M_local = M // nshards
+  q_spec = P(bspec, None, None)
+  self_spec = (P(bspec, None, None, None),) * 2 if self_kv is not None \
+      else P()
+  manual = set(axes) | set(dp)
+
+  def body(q, cache, self_kv):
+    with shd.manual_axes(manual):
+      # Combined shard index along the sequence axes.
+      sid = jnp.int32(0)
+      for a in axes:
+        sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
+      k_syn = cache["k_syn"]
+      B, Hkv = k_syn.shape[0], k_syn.shape[1]
+      H = q.shape[1]
+      G = H // Hkv
+
+      # Stage 1 local scores, then one small all-gather for global rank.
+      qg = q.reshape(B, Hkv, G, -1).astype(jnp.float32)
+      sc_local = jnp.einsum("bhgd,bhmd->bhgm", qg,
+                            k_syn.astype(jnp.float32)).max(2) * sm_scale
+      sc = sc_local
+      for a in reversed(axes):
+        sc = jax.lax.all_gather(sc, a, axis=2, tiled=True)   # (B,Hkv,M)
+      _, selected = jax.lax.top_k(sc, min(i_max, M))
+      selected = selected.astype(jnp.int32)
+
+      # Stage 2: refine only the clusters this shard owns.
+      lo = sid * M_local
+      sel_rel = selected - lo
+      mine = (sel_rel >= 0) & (sel_rel < M_local)
+      sel_local = jnp.where(mine, sel_rel, -1)
+      kg = _gather_clusters(cache["k"], jnp.maximum(sel_local, 0),
+                            cluster_size)
+      vg = _gather_clusters(cache["v"], jnp.maximum(sel_local, 0),
+                            cluster_size)
+      gbias = jnp.where(jnp.repeat(mine, cluster_size, axis=-1), 0.0,
+                        NEG_INF)
+      p_ref = _partials(q, kg, vg, sm_scale=sm_scale, bias=gbias, cap=cap)
+
+      sel_onehot = jnp.any(
+          jax.nn.one_hot(sel_local, M_local, dtype=jnp.bool_)
+          & mine[..., None], axis=2)
+      syn_bias = jnp.where(
+          sel_onehot, NEG_INF,
+          jnp.log(jnp.maximum(cache["counts"], 1.0))[:, None, :])
+      p_syn = _partials(q, k_syn, cache["v_syn"], sm_scale=sm_scale,
+                        bias=syn_bias, cap=cap)
+      part = _merge(p_syn, p_ref)
+
+      # Compose shard partials (the paper's result composer).
+      o, m_, l_ = part
+      gathered = [o[None], m_[None], l_[None]]
+      for a in reversed(axes):
+        gathered = [jax.lax.all_gather(g, a, axis=0, tiled=True)
+                    for g in gathered]
+      og, mg, lg = gathered
+      acc = (og[0], mg[0], lg[0])
+      for i in range(1, og.shape[0]):
+        acc = _merge(acc, (og[i], mg[i], lg[i]))
+
+      if "recent_k" in cache:
+        R = cache["recent_k"].shape[2]
+        rl = cache["recent_len"]
+        rbias = jnp.where(jnp.arange(R)[None, :] < rl[:, None], 0.0,
+                          NEG_INF)
+        rbias = jnp.broadcast_to(rbias[:, None], (B, Hkv, R))
+        acc = _merge(acc, _partials(q, cache["recent_k"],
+                                    cache["recent_v"], sm_scale=sm_scale,
+                                    bias=rbias, cap=cap))
+      if self_kv is not None:
+        acc = _merge(acc, _partials(q, self_kv[0], self_kv[1],
+                                    sm_scale=sm_scale, cap=cap))
+      return acc[0]
+
+  return jax.shard_map(
+      body, mesh=mesh, in_specs=(q_spec, specs, self_spec),
+      out_specs=q_spec if dp else P(),
+      axis_names=manual, check_vma=False,
+  )(q, cache, self_kv)
+
+
+def exact_decode_attention(q, k, v, *, sm_scale, cap=None, self_kv=None,
+                           window: Optional[int] = None):
+  if window is not None and window < k.shape[2]:
+    k = k[:, :, -window:]
+    v = v[:, :, -window:]
+  out = _partials(q, k, v, sm_scale=sm_scale, cap=cap)
+  if self_kv is not None:
+    out = _merge(out, _partials(q, self_kv[0], self_kv[1],
+                                sm_scale=sm_scale, cap=cap))
+  return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode
+# ---------------------------------------------------------------------------
+
+def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
+                       mode, i_max):
+  """x (B,1,d); cache_sl: this layer's cache slice.  Returns (y, delta)."""
+  B = x.shape[0]
+  positions = pos[:, None]                                    # (B,1)
+  if cfg.mla:
+    m = cfg.mla
+    q_nope, q_pe = attn_lib.mla_queries(x, lp, cfg, positions)
+    c_kv, k_pe = attn_lib.mla_latent(x, lp, cfg, positions)
+    # Absorbed: q_lat[h] = q_nope[h] @ wk_b[:,h,:]^T  -> latent space.
+    q_lat = einsum("bshk,rhk->bshr", q_nope, lp["wk_b"])[:, 0]  # (B,H,r)
+    q_eff = jnp.concatenate([q_lat, q_pe[:, 0]], axis=-1)     # (B,H,r+rope)
+    lat_new = jnp.concatenate([c_kv, k_pe], axis=-1)          # (B,1,Dk)
+    self_kv = (lat_new[:, None], lat_new[:, None])            # (B,1,1,Dk)
+    sm_scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    if mode == "synopsis":
+      ctx = sharded_synopsis_attention(
+          q_eff, cache_sl, i_max=i_max,
+          cluster_size=cfg.synopsis.cluster_size, sm_scale=sm_scale,
+          self_kv=self_kv, seq_axes=_seq_axes())
+    else:
+      ctx = exact_decode_attention(q_eff, cache_sl["k"], cache_sl["v"],
+                                   sm_scale=sm_scale, self_kv=self_kv)
+    # ctx is a latent-space context (B, H, r+rope); drop the rope part and
+    # decompress per head via wv_b.
+    ctx_lat = ctx[..., :m.kv_lora_rank]
+    o = einsum("bhr,rhk->bhk", ctx_lat, lp["wv_b"])           # (B,H,v_dim)
+    y = einsum("bhk,hkd->bd", o, lp["wo"])[:, None].astype(x.dtype)
+    delta = (lat_new[:, None], lat_new[:, None])
+  else:
+    q, k_new, v_new = attn_lib.qkv(x, lp, cfg, positions)
+    q = q[:, 0]                                               # (B,H,D)
+    kd = jnp.moveaxis(k_new, 1, 2)                            # (B,Hkv,1,D)
+    vd = jnp.moveaxis(v_new, 1, 2)
+    sm_scale = cfg.hd ** -0.5
+    if spec.local:
+      ctx = exact_decode_attention(
+          q, cache_sl["k"], cache_sl["v"], sm_scale=sm_scale,
+          cap=cfg.attn_softcap, self_kv=(kd, vd),
+          window=cfg.sliding_window)
+    elif mode == "synopsis":
+      ctx = sharded_synopsis_attention(
+          q, cache_sl, i_max=i_max, cluster_size=cfg.synopsis.cluster_size,
+          sm_scale=sm_scale, cap=cfg.attn_softcap, self_kv=(kd, vd),
+          seq_axes=_seq_axes())
+    else:
+      ctx = exact_decode_attention(
+          q, cache_sl["k"], cache_sl["v"], sm_scale=sm_scale,
+          cap=cfg.attn_softcap, self_kv=(kd, vd))
+    y = attn_lib.out_proj(ctx[:, None].astype(x.dtype), lp, x.dtype)
+    delta = (kd, vd)
+  return y, delta
+
+
+def _cross_decode_layer(x, lp, cfg, cache_sl):
+  q = einsum("bsd,dhk->bshk", x, lp["wq"]).astype(x.dtype)
+  if "bq" in lp:
+    q = q + lp["bq"][None, None].astype(x.dtype)
+  ctx = exact_decode_attention(q[:, 0], cache_sl["cross_k"],
+                               cache_sl["cross_v"],
+                               sm_scale=cfg.hd ** -0.5)
+  return attn_lib.out_proj(ctx[:, None].astype(x.dtype), lp, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full serve step
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
+                    i_max: Optional[int] = None):
+  """Returns serve_step(params, cache, tokens) ->
+  (logits (B, vocab), new_state dict with ssm/kv deltas)."""
+  i_max = cfg.synopsis.i_max if i_max is None else i_max
+  pattern = cfg.block_pattern
+
+  def serve_step(params, cache, tokens):
+    B = tokens.shape[0]
+    x = params["embed"][tokens[:, 0]][:, None].astype(cfg.dtype)   # (B,1,d)
+    if cfg.scale_embed:
+      x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    pos = cache["pos"]
+
+    attn_i = [i for i, s in enumerate(pattern) if s.kind == "attn"]
+    ssm_i = [i for i, s in enumerate(pattern) if s.kind == "mamba"]
+
+    def superblock(carry, xs):
+      x, = carry
+      blk, csl = xs
+      deltas: Dict[str, Any] = {}
+      ai = si = 0
+      for i, spec in enumerate(pattern):
+        lp = blk[f"pos{i}"]
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if spec.kind == "attn":
+          layer_cache = {kk: csl[kk][ai] for kk in csl
+                         if kk not in ("conv_state", "ssd_state",
+                                       "recent_len")}
+          if "recent_len" in csl:
+            layer_cache["recent_len"] = csl["recent_len"]
+          mix, delta = _attn_decode_layer(h, lp["attn"], cfg, spec,
+                                          layer_cache, pos, mode, i_max)
+          deltas.setdefault("k_delta", []).append(delta[0])
+          deltas.setdefault("v_delta", []).append(delta[1])
+          ai += 1
+        else:
+          st = (csl["conv_state"][si], csl["ssd_state"][si])
+          mix, new_st = ssm_lib.ssm_forward(h, lp["ssm"], cfg,
+                                            decode_state=st)
+          deltas.setdefault("conv_state", []).append(new_st[0])
+          deltas.setdefault("ssd_state", []).append(new_st[1])
+          si += 1
+        if cfg.sandwich_norm:
+          mix = rms_norm(mix, lp["ln1_post"], cfg.norm_eps)
+        if cfg.parallel_block:
+          f, _ = tf._ffn(h, lp, cfg, spec)
+          x = x + mix + f
+        else:
+          x = x + mix
+          if spec.cross_attn:
+            hc = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            ccache = {"cross_k": csl["cross_k"][ai - 1],
+                      "cross_v": csl["cross_v"][ai - 1]}
+            x = x + _cross_decode_layer(hc, lp["cross"], cfg, ccache)
+          if "ln2" in lp:
+            h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            f, _ = tf._ffn(h2, lp, cfg, spec)
+            if cfg.sandwich_norm:
+              f = rms_norm(f, lp["ln2_post"], cfg.norm_eps)
+            x = x + f
+      ys = {kk: jnp.stack(vv) for kk, vv in deltas.items()}
+      return (x,), ys
+
+    cache_xs = {kk: vv for kk, vv in cache.items()
+                if kk not in ("pos", "recent_len")}
+    (x,), ys = jax.lax.scan(
+        functools.partial(_scan_body, superblock, cache, cfg),
+        (x,), (params["blocks"], cache_xs))
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)[:, 0]   # (B,d)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    logits = softcap(logits, cfg.logit_softcap)
+    logits = constrain(logits, ("batch", "vocab"))
+    new_state = dict(ys)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+  return serve_step
+
+
+def _scan_body(superblock, cache, cfg, carry, xs):
+  blk, csl = xs
+  if "recent_len" in cache:
+    csl = dict(csl)
+    csl["recent_len"] = cache["recent_len"]
+  return superblock(carry, (blk, csl))

@@ -1,0 +1,113 @@
+"""Synopsis construction/update over decode KV caches — the paper's
+offline module specialised to attention memories.
+
+* ``build``: cluster each (block, sequence)'s S cached tokens into M = S/C
+  equal-size similarity clusters (PCA -> balanced kd / Morton over the
+  concatenated kv-head key features), permute the cache cluster-contiguous,
+  and aggregate per-cluster mean keys/values (centroids) — steps 1-3 of
+  paper §2.2 with the R-tree replaced by balanced splits (DESIGN.md §3).
+
+* ``absorb_recent``: the incremental update (paper "situation 1"): tokens
+  accumulated in the recent ring buffer become *new* clusters appended to
+  the originals + centroid tables, recent buffer resets.  Runs as its own
+  jitted program between serving batches (the paper's low-priority
+  updating).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cluster as cl
+from repro.models import common as cm
+
+
+def _cluster_perm(keys_flat: jax.Array, num_clusters: int,
+                  method: str = "kd") -> jax.Array:
+  """keys_flat (S, F) -> permutation (S,) in cluster-contiguous order."""
+  coords, _ = cl.pca_project(keys_flat, out_dim=3, num_iters=4)
+  return cl.cluster(coords, num_clusters, method=method)
+
+
+def build(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
+          method: str = "kd") -> Dict[str, jax.Array]:
+  """Exact-cache -> synopsis-cache.  cache: k/v (nb, na, B, Hkv, S, D)."""
+  k, v = cache["k"], cache["v"]
+  nb, na, B, Hkv, S, D = k.shape
+  C = cfg.synopsis.cluster_size
+  assert S % C == 0
+  M = S // C
+
+  # One permutation per (block, layer, sequence): tokens are the data
+  # points; features concat all kv heads (paper: one R-tree per subset).
+  feats = jnp.moveaxis(k, 3, 4).reshape(nb * na * B, S, Hkv * D)
+  perms = jax.vmap(lambda f: _cluster_perm(f.astype(jnp.float32), M,
+                                           method))(feats)
+  perms = perms.reshape(nb, na, B, S)
+
+  def permute(x):
+    # x (nb,na,B,Hkv,S,D); gather along S with per-(nb,na,B) perm.
+    idx = perms[:, :, :, None, :, None]
+    return jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, x.shape[:4] + (S, 1)), axis=4)
+
+  k_sorted, v_sorted = permute(k), permute(v)
+  k_syn = k_sorted.reshape(nb, na, B, Hkv, M, C, D).mean(5).astype(k.dtype)
+  v_syn = v_sorted.reshape(nb, na, B, Hkv, M, C, D).mean(5).astype(v.dtype)
+  R = cfg.synopsis.recent
+
+  out = {
+      "k": k_sorted, "v": v_sorted,
+      "k_syn": k_syn, "v_syn": v_syn,
+      "counts": jnp.full((nb, na, B, M), C, jnp.float32),
+      "recent_k": jnp.zeros((nb, na, B, Hkv, R, D), k.dtype),
+      "recent_v": jnp.zeros((nb, na, B, Hkv, R, D), v.dtype),
+      "recent_len": jnp.zeros((B,), jnp.int32),
+      "pos": cache["pos"],
+  }
+  for extra in ("cross_k", "cross_v", "conv_state", "ssd_state"):
+    if extra in cache:
+      out[extra] = cache[extra]
+  return out
+
+
+def append_recent(cache: Dict[str, jax.Array], k_delta, v_delta):
+  """Write one decode step's new kv (nb,na,B,Hkv,1,D) into the recent ring
+  buffer at recent_len (same position for every sequence in the batch —
+  batched serving steps advance in lockstep)."""
+  rl = cache["recent_len"][0]
+  rk = jax.lax.dynamic_update_slice_in_dim(cache["recent_k"], k_delta, rl,
+                                           axis=4)
+  rv = jax.lax.dynamic_update_slice_in_dim(cache["recent_v"], v_delta, rl,
+                                           axis=4)
+  return {**cache, "recent_k": rk, "recent_v": rv,
+          "recent_len": cache["recent_len"] + 1}
+
+
+def absorb_recent(cache: Dict[str, jax.Array],
+                  cfg: cm.ModelConfig) -> Dict[str, jax.Array]:
+  """Incremental synopsis update: recent tokens -> new clusters appended
+  to the originals and centroid tables (paper situation 1: new data points
+  -> new leaf nodes).  Shapes grow by R tokens / R/C clusters; this is the
+  offline-module program, re-jitted per growth step."""
+  R = cache["recent_k"].shape[4]
+  C = cfg.synopsis.cluster_size
+  assert R % C == 0
+  newM = R // C
+  nb, na, B, Hkv, _, D = cache["recent_k"].shape
+
+  rk, rv = cache["recent_k"], cache["recent_v"]
+  k = jnp.concatenate([cache["k"], rk], axis=4)
+  v = jnp.concatenate([cache["v"], rv], axis=4)
+  k_new = rk.reshape(nb, na, B, Hkv, newM, C, D).mean(5).astype(rk.dtype)
+  v_new = rv.reshape(nb, na, B, Hkv, newM, C, D).mean(5).astype(rv.dtype)
+  k_syn = jnp.concatenate([cache["k_syn"], k_new], axis=4)
+  v_syn = jnp.concatenate([cache["v_syn"], v_new], axis=4)
+  counts = jnp.concatenate(
+      [cache["counts"], jnp.full((nb, na, B, newM), C, jnp.float32)], axis=3)
+  return {**cache, "k": k, "v": v, "k_syn": k_syn, "v_syn": v_syn,
+          "counts": counts,
+          "recent_k": jnp.zeros_like(rk), "recent_v": jnp.zeros_like(rv),
+          "recent_len": jnp.zeros_like(cache["recent_len"])}

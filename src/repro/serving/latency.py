@@ -1,0 +1,79 @@
+"""Latency bookkeeping: percentile tracking + component behaviour model.
+
+The paper's testbed (110 Xen VMs, Storm, co-located MapReduce) is modelled
+as a discrete-event simulation whose *component service times* follow the
+calibrated two-part form the deadline controller assumes:
+
+    t_service = base + per_item * items_processed
+
+with multiplicative performance-interference noise (lognormal, heavy
+tail) standing in for the co-located MapReduce jobs, plus an M/G/1-style
+FIFO queue per component.  The synopsis/refinement *compute costs* fed in
+come from real measured timings of the JAX engine (benchmarks/) so the
+simulation's accuracy numbers are real, only the wall clock is modelled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+  if len(xs) == 0:
+    return 0.0
+  return float(np.percentile(np.asarray(xs), p))
+
+
+class TailTracker:
+  """Streaming latency percentiles per window (p50/p99/p99.9)."""
+
+  def __init__(self):
+    self.samples: List[float] = []
+
+  def observe(self, latency: float) -> None:
+    self.samples.append(latency)
+
+  def p(self, q: float) -> float:
+    return percentile(self.samples, q)
+
+  def summary(self) -> dict:
+    return {"p50": self.p(50), "p99": self.p(99), "p999": self.p(99.9),
+            "mean": float(np.mean(self.samples)) if self.samples else 0.0,
+            "n": len(self.samples)}
+
+
+@dataclasses.dataclass
+class ComponentModel:
+  """Service-time model of one parallel component."""
+  base_ms: float = 2.0            # synopsis / fixed overhead
+  per_item_ms: float = 0.15       # per refined cluster (or per data part)
+  full_items: int = 100           # items for exact full computation
+  interference: float = 0.35      # lognormal sigma (MapReduce co-location)
+  straggler_prob: float = 0.02    # chance of a severe slowdown
+  straggler_scale: float = 8.0
+  seed: int = 0
+
+  def __post_init__(self):
+    self.rng = np.random.default_rng(self.seed)
+    self.busy_until = 0.0
+
+  def service_time(self, items: int) -> float:
+    t = self.base_ms + self.per_item_ms * items
+    t *= float(self.rng.lognormal(0.0, self.interference))
+    if self.rng.random() < self.straggler_prob:
+      t *= self.straggler_scale
+    return t
+
+  def submit(self, arrival_ms: float, items: int) -> float:
+    """FIFO queue: returns completion time."""
+    start = max(arrival_ms, self.busy_until)
+    done = start + self.service_time(items)
+    self.busy_until = done
+    return done
+
+  def peek_completion(self, arrival_ms: float, items: int,
+                      quantile_extra: float = 0.0) -> float:
+    start = max(arrival_ms, self.busy_until)
+    return start + self.base_ms + self.per_item_ms * items + quantile_extra

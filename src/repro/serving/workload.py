@@ -1,0 +1,49 @@
+"""Workload generators mirroring the paper's two evaluations.
+
+* ``cf_rates``      — the synthetic recommender workload: constant arrival
+                      rates {20, 40, 60, 80, 100} req/s (Tables 1-2).
+* ``sogou_hourly``  — a 24-hour diurnal arrival-rate profile shaped like
+                      the Sogou query log (Fig 7a): low 2-8 am, morning
+                      ramp (hour 9 increasing), midday plateau (hour 10
+                      steady), evening peak, midnight decay (hour 24
+                      decreasing).
+* ``hour_trace``    — within-hour 60 x 1-minute sessions with the hour's
+                      trend (increasing / steady / decreasing) — Fig 5/6.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+CF_RATES = (20, 40, 60, 80, 100)
+
+# req/s per hour-of-day, shaped like Fig 7(a) (peak ~ 90 req/s at 21:00).
+SOGOU_HOURLY: List[float] = [
+    35, 22, 14, 10, 8, 8, 10, 16, 28, 45, 55, 60,
+    62, 58, 56, 58, 60, 62, 66, 74, 84, 90, 70, 50,
+]
+
+
+def hour_trend(hour: int) -> str:
+  if hour in (9,):
+    return "increasing"
+  if hour in (24, 23):
+    return "decreasing"
+  return "steady"
+
+
+def hour_trace(hour: int, sessions: int = 60, seed: int = 0) -> np.ndarray:
+  """Per-minute arrival rates (req/s) for one hour."""
+  rng = np.random.default_rng(seed + hour)
+  base = SOGOU_HOURLY[(hour - 1) % 24]
+  trend = hour_trend(hour)
+  t = np.linspace(0, 1, sessions)
+  if trend == "increasing":
+    shape = 0.55 + 0.9 * t
+  elif trend == "decreasing":
+    shape = 1.25 - 0.75 * t
+  else:
+    shape = np.ones_like(t)
+  noise = rng.lognormal(0, 0.08, sessions)
+  return base * shape * noise

@@ -1,0 +1,81 @@
+"""AdamW + cosine schedule, built from scratch (no optax in this image).
+
+Mixed precision: f32 master weights + Adam moments; the forward runs on a
+bf16 cast.  ZeRO-1-style optimizer-state sharding falls out of the train
+rule table (param "embed" dims shard over the `data` axis = FSDP; moments
+inherit the same sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+  lr: float = 3e-4
+  b1: float = 0.9
+  b2: float = 0.95
+  eps: float = 1e-8
+  weight_decay: float = 0.1
+  warmup_steps: int = 100
+  total_steps: int = 10000
+  clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+  warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+  t = jnp.clip((step - cfg.warmup_steps)
+               / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+  cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+  return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+  zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+  return {
+      "m": jax.tree.map(zeros, params),
+      "v": jax.tree.map(zeros, params),
+      "step": jnp.zeros((), jnp.int32),
+  }
+
+
+def global_norm(tree) -> jax.Array:
+  return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                      for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    grads, opt_state, params, cfg: OptConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+  """One AdamW step.  params/grads f32.  Returns (params', opt', metrics)."""
+  step = opt_state["step"] + 1
+  lr = schedule(cfg, step)
+
+  gnorm = global_norm(grads)
+  scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+  grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+  b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+  b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+  def upd(p, g, m, v):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mhat = m / b1c
+    vhat = v / b2c
+    new_p = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * p)
+    return new_p, m, v
+
+  flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+  # Unzip the 3-tuples.
+  is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+  new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is3)
+  new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is3)
+  new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is3)
+  new_opt = {"m": new_m, "v": new_v, "step": step}
+  return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

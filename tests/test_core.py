@@ -1,0 +1,212 @@
+"""Core synopsis/engine tests incl. hypothesis property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cluster as cl
+from repro.core import engine as eng
+from repro.core import synopsis as syn
+
+
+def _data(n=256, v=24, seed=0, density=0.5):
+  k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+  data = jax.random.normal(k1, (n, v))
+  mask = (jax.random.uniform(k2, (n, v)) < density).astype(jnp.float32)
+  return data, mask
+
+
+class TestCluster:
+  def test_balanced_kd_is_permutation(self):
+    coords, _ = cl.pca_project(_data()[0], 3)
+    perm = cl.balanced_kd_cluster(coords, 8)
+    assert sorted(np.asarray(perm).tolist()) == list(range(256))
+
+  def test_morton_is_permutation(self):
+    coords, _ = cl.pca_project(_data()[0], 3)
+    perm = cl.morton_cluster(coords, 8)
+    assert sorted(np.asarray(perm).tolist()) == list(range(256))
+
+  def test_kd_groups_similar_points(self):
+    # two well-separated blobs must not share clusters
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 8)) + 10.0
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 8)) - 10.0
+    data = jnp.concatenate([a, b])
+    coords, _ = cl.pca_project(data, 3)
+    perm = cl.balanced_kd_cluster(coords, 2)
+    first = set(np.asarray(perm[:64]).tolist())
+    assert first == set(range(64)) or first == set(range(64, 128))
+
+  def test_pca_projects_variance(self):
+    # structured data: one dominant direction must be found
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    direction = jax.random.normal(k1, (1, 24))
+    data = (jax.random.normal(k2, (256, 1)) * 5.0) @ direction \
+        + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (256, 24))
+    coords, proj = cl.pca_project(data, 3)
+    assert coords.shape == (256, 3)
+    assert proj.shape == (24, 3)
+    # top component captures nearly all the variance
+    total = float(jnp.sum(jnp.var(data - data.mean(0), axis=0)))
+    assert float(jnp.var(coords[:, 0])) > 0.9 * total
+
+  def test_assign_to_nearest(self):
+    centers = jnp.array([[0.0, 0], [10, 10]])
+    pts = jnp.array([[1.0, 1], [9, 9]])
+    assert np.asarray(cl.assign_to_nearest(pts, centers)).tolist() == [0, 1]
+
+
+class TestSynopsis:
+  def test_build_invariants(self):
+    data, mask = _data()
+    s = syn.build(data, 16, mask=mask)
+    assert int(s.counts.sum()) == 256
+    mi = np.asarray(s.member_idx)
+    rc = np.asarray(s.row_cluster)
+    seen = set()
+    for c in range(16):
+      mem = mi[c][mi[c] >= 0]
+      assert len(mem) == int(s.counts[c])
+      assert not (set(mem.tolist()) & seen)
+      seen |= set(mem.tolist())
+      assert all(rc[r] == c for r in mem)
+    assert seen == set(range(256))
+
+  def test_centroid_is_masked_mean(self):
+    data, mask = _data()
+    s = syn.build(data, 16, mask=mask)
+    mi = np.asarray(s.member_idx)[3]
+    mem = mi[mi >= 0]
+    d, k = np.asarray(data)[mem], np.asarray(mask)[mem]
+    w = k.sum(0)
+    exp = np.where(w > 0, (d * k).sum(0) / np.maximum(w, 1), 0)
+    np.testing.assert_allclose(np.asarray(s.centroids)[3], exp,
+                               rtol=1e-5, atol=1e-5)
+
+  def test_update_changed_touches_only_affected(self):
+    data, mask = _data()
+    s = syn.build(data, 16, mask=mask)
+    data2 = data.at[10].set(50.0)
+    s2 = syn.update_changed(s, data2, mask, jnp.array([10]))
+    c = int(s.row_cluster[10])
+    diff = np.abs(np.asarray(s2.centroids) - np.asarray(s.centroids)).sum(1)
+    assert diff[c] > 0
+    assert np.all(diff[np.arange(16) != c] == 0)
+
+  def test_update_changed_matches_rebuild_aggregation(self):
+    data, mask = _data()
+    s = syn.build(data, 16, mask=mask)
+    data2 = data.at[10].set(5.0).at[77].set(-3.0)
+    s2 = syn.update_changed(s, data2, mask, jnp.array([10, 77]))
+    # recompute affected centroid from scratch
+    c = int(s.row_cluster[10])
+    mi = np.asarray(s.member_idx)[c]
+    mem = mi[mi >= 0]
+    d, k = np.asarray(data2)[mem], np.asarray(mask)[mem]
+    w = k.sum(0)
+    exp = np.where(w > 0, (d * k).sum(0) / np.maximum(w, 1), 0)
+    np.testing.assert_allclose(np.asarray(s2.centroids)[c], exp,
+                               rtol=1e-5, atol=1e-5)
+
+  def test_insert_running_mean(self):
+    data, mask = _data()
+    s = syn.build(data, 16, mask=mask)
+    new = jax.random.normal(jax.random.PRNGKey(9), (4, 24))
+    data2 = jnp.concatenate([data, new])
+    mask2 = jnp.concatenate([mask, jnp.ones((4, 24))])
+    s_grown = dataclasses.replace(
+        s, row_cluster=jnp.concatenate([s.row_cluster,
+                                        jnp.full((4,), -1, jnp.int32)]))
+    s2 = syn.insert(s_grown, data2, mask2, jnp.arange(256, 260))
+    assert int(s2.counts.sum()) == 260
+    assert not bool(syn.needs_rebuild(s2, headroom=0))
+
+  @settings(max_examples=10, deadline=None)
+  @given(st.integers(2, 8), st.integers(0, 4))
+  def test_property_counts_preserved(self, log_m, seed):
+    m = 2 ** log_m
+    data, mask = _data(n=128, v=12, seed=seed)
+    s = syn.build(data, min(m, 16), mask=mask)
+    assert int(s.counts.sum()) == 128
+    # balanced: counts differ by at most 1
+    counts = np.asarray(s.counts)
+    assert counts.max() - counts.min() <= 1
+
+
+def _score_fn(q, cents, w):
+  return jnp.zeros((2,)), -jnp.sum((cents - q[None]) ** 2, axis=1)
+
+
+def _refine_fn(carry, rows, msk):
+  return carry + jnp.array([jnp.sum(rows * msk), jnp.sum(msk)])
+
+
+class TestEngine:
+  def test_full_budget_equals_exact(self):
+    data, mask = _data(n=128, v=12)
+    s = syn.build(data, 8, mask=mask)
+    q = data[5]
+    res = eng.approximate_process(q, s, data, mask, score_fn=_score_fn,
+                                  refine_fn=_refine_fn, i_max=8)
+    exact = eng.exact_process(q, data, mask, init=jnp.zeros((2,)),
+                              refine_fn=_refine_fn)
+    np.testing.assert_allclose(np.asarray(res.result), np.asarray(exact),
+                               rtol=1e-4)
+
+  def test_modes_agree(self):
+    data, mask = _data(n=128, v=12)
+    s = syn.build(data, 8, mask=mask)
+    q = data[5]
+    a = eng.approximate_process(q, s, data, mask, score_fn=_score_fn,
+                                refine_fn=_refine_fn, i_max=3,
+                                mode="iterative")
+    b = eng.approximate_process(q, s, data, mask, score_fn=_score_fn,
+                                refine_fn=_refine_fn, i_max=3,
+                                mode="vectorized")
+    np.testing.assert_allclose(np.asarray(a.result), np.asarray(b.result),
+                               rtol=1e-4)
+
+  def test_selected_are_top_ranked(self):
+    data, mask = _data(n=128, v=12)
+    s = syn.build(data, 8, mask=mask)
+    res = eng.approximate_process(data[5], s, data, mask,
+                                  score_fn=_score_fn,
+                                  refine_fn=_refine_fn, i_max=3)
+    order = np.argsort(-np.asarray(res.scores))
+    assert set(np.asarray(res.selected).tolist()) == set(order[:3].tolist())
+
+  @settings(max_examples=10, deadline=None)
+  @given(st.integers(0, 4))
+  def test_property_coverage_monotone(self, seed):
+    """More budget -> refinement covers a superset of data points."""
+    data, mask = _data(n=128, v=12, seed=seed)
+    s = syn.build(data, 8, mask=mask)
+    q = data[seed]
+    covered = []
+    for b in (1, 2, 4, 8):
+      r = eng.approximate_process(q, s, data, mask, score_fn=_score_fn,
+                                  refine_fn=_refine_fn, i_max=b)
+      covered.append(set(np.asarray(r.selected).tolist()))
+    assert covered[0] <= covered[1] <= covered[2] <= covered[3]
+
+
+class TestDeadline:
+  def test_budget_shrinks_with_queue(self):
+    from repro.core.deadline import BudgetController, LatencyModel
+    c = BudgetController(LatencyModel(base=2.0, slope=1.0),
+                         buckets=(0, 1, 2, 4, 8, 16, 32))
+    assert c.budget_for(40.0, 0.0) >= c.budget_for(40.0, 30.0)
+    assert c.budget_for(40.0, 100.0) == 0
+
+  def test_calibration_converges(self):
+    from repro.core.deadline import LatencyModel
+    m = LatencyModel(base=5.0, slope=5.0, alpha=0.2)
+    rng = np.random.default_rng(0)
+    for _ in range(500):
+      b = int(rng.integers(0, 20))
+      m.observe(b, 2.0 + 0.5 * b + rng.normal(0, 0.05))
+    assert abs(m.base - 2.0) < 0.5
+    assert abs(m.slope - 0.5) < 0.2

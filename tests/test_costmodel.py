@@ -1,0 +1,113 @@
+"""Validate the analytic cost model against XLA cost_analysis on a
+loop-free (single-block, unscanned-equivalent) module, and check the
+roofline HLO collective parser on known programs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import costmodel as cmod
+from repro.analysis import roofline as rl
+from repro.configs.registry import get_config
+from repro.configs.shapes import ShapeSpec
+
+
+def test_flops_match_xla_on_loop_free_mlp():
+  """Our 2*M*N*K convention == XLA's on a plain matmul chain."""
+  def f(w1, w2, x):
+    return jnp.sum(jnp.tanh(x @ w1) @ w2)
+
+  w1 = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+  w2 = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+  x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+  comp = jax.jit(f).lower(w1, w2, x).compile()
+  ca = comp.cost_analysis()
+  if isinstance(ca, list):
+    ca = ca[0]
+  expect = 2 * 64 * 256 * 512 + 2 * 64 * 512 * 128
+  assert abs(ca["flops"] - expect) / expect < 0.05
+
+
+def test_cell_cost_scales_with_shape():
+  cfg = get_config("llama3-8b")
+  tr = ShapeSpec("t", 4096, 256, "train")
+  tr2 = ShapeSpec("t", 4096, 512, "train")
+  a = cmod.cell_cost(cfg, tr, "n/a").flops_global
+  b = cmod.cell_cost(cfg, tr2, "n/a").flops_global
+  assert abs(b / a - 2.0) < 0.01            # linear in batch
+
+
+def test_train_flops_close_to_8nd():
+  """Dense 8B at 4k: train flops ~= 8*N*D (fwd+bwd+remat) + attention."""
+  cfg = get_config("llama3-8b")
+  tr = ShapeSpec("t", 4096, 256, "train")
+  D = 256 * 4096
+  n = cfg.param_count() - cfg.vocab * cfg.d_model * 2
+  got = cmod.cell_cost(cfg, tr, "n/a").flops_global
+  lo, hi = 8 * n * D, 8 * n * D * 1.8       # attention quad < 80% extra
+  assert lo * 0.9 < got < hi, (got / (8 * n * D))
+
+
+def test_decode_synopsis_cheaper_than_exact():
+  cfg = get_config("llama3-8b")
+  dec = ShapeSpec("d", 32768, 128, "decode")
+  ex = cmod.cell_cost(cfg, dec, "exact")
+  syn = cmod.cell_cost(cfg, dec, "synopsis")
+  assert syn.flops_global < ex.flops_global
+  assert syn.bytes_global < ex.bytes_global
+
+
+def test_moe_flops_use_active_experts():
+  ds = get_config("deepseek-v2-236b")
+  tr = ShapeSpec("t", 4096, 256, "train")
+  got = cmod.cell_cost(ds, tr, "n/a").flops_global
+  n_active = ds.param_count(active=True) - ds.vocab * ds.d_model * 2
+  n_total = ds.param_count() - ds.vocab * ds.d_model * 2
+  D = 256 * 4096
+  assert got < 8 * n_total * D * 0.5        # far below dense-all-experts
+  assert got > 6 * n_active * D * 0.9
+
+
+class TestCollectiveParser:
+  def _compile(self, f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+  def test_psum_counted_with_trip_count(self):
+    import os
+    if jax.device_count() < 2:
+      pytest.skip("needs >1 device")
+
+  def test_split_computations(self):
+    txt = self._compile(lambda x: jnp.sum(x ** 2), jnp.ones((8, 8)))
+    comps = rl._split_computations(txt)
+    assert len(comps) >= 1
+
+  def test_trip_count_from_scan(self):
+    def f(x):
+      def body(c, _):
+        return c * 1.001 + 1.0, None
+      y, _ = jax.lax.scan(body, x, None, length=17)
+      return y
+    txt = self._compile(f, jnp.float32(1.0))
+    mults = rl._comp_multipliers(txt)
+    assert 17 in mults.values() or 18 in mults.values(), mults
+
+
+def test_memory_summary_keys():
+  comp = jax.jit(lambda x: x @ x.T).lower(
+      jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+  mem = rl.memory_summary(comp)
+  assert mem["peak_bytes_per_device"] >= 0
+  assert "temp_size_in_bytes" in mem
+
+
+def test_roofline_terms():
+  r = rl.Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                  coll_bytes_per_device=50e9, chips=256,
+                  model_flops=197e12 * 256 / 2)
+  assert abs(r.compute_s - 1.0) < 1e-9
+  assert abs(r.memory_s - 1.0) < 1e-9
+  assert abs(r.collective_s - 1.0) < 1e-9
+  assert r.useful_flops_ratio == 0.5

@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps: Pallas interpret mode vs ref.py oracle."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (B, Hkv, G, D, S, C)
+    (1, 1, 1, 128, 512, 64),
+    (2, 4, 2, 128, 2048, 128),
+    (2, 2, 8, 64, 1024, 128),
+    (4, 8, 4, 128, 1024, 64),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(shape, dtype, seed=0):
+  B, Hkv, G, D, S, C = shape
+  H, M = Hkv * G, S // C
+  ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+  q = jax.random.normal(ks[0], (B, H, D), dtype)
+  k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
+  v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
+  k_syn = jax.random.normal(ks[3], (B, Hkv, M, D), dtype)
+  v_syn = jax.random.normal(ks[4], (B, Hkv, M, D), dtype)
+  counts = jnp.full((B, M), float(C), jnp.float32)
+  return q, k, v, k_syn, v_syn, counts
+
+
+def _tol(dtype):
+  return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+      dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape,dtype",
+                         list(itertools.product(SHAPES, DTYPES)))
+def test_flash_decode_vs_ref(shape, dtype):
+  q, k, v, *_ = _mk(shape, dtype)
+  sm = float(1.0 / np.sqrt(q.shape[-1]))
+  bias = jax.random.normal(jax.random.PRNGKey(5),
+                           (q.shape[0], k.shape[1], k.shape[2]))
+  for b in (None, bias):
+    got = ops._decode(q, k, v, b, sm, "interpret")
+    want = ref.flash_decode_ref(q, k, v, b, sm_scale=sm)
+    for g, w in zip(got, want):
+      np.testing.assert_allclose(np.asarray(g, np.float32),
+                                 np.asarray(w, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape,dtype",
+                         list(itertools.product(SHAPES, DTYPES)))
+def test_synopsis_score_vs_ref(shape, dtype):
+  q, _, _, k_syn, _, _ = _mk(shape, dtype)
+  sm = float(1.0 / np.sqrt(q.shape[-1]))
+  got = ops._scores(q, k_syn, sm, "interpret")
+  want = ref.synopsis_score_ref(q, k_syn, sm_scale=sm)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                             **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape,dtype",
+                         list(itertools.product(SHAPES, DTYPES)))
+def test_block_gather_vs_ref(shape, dtype):
+  B, Hkv, G, D, S, C = shape
+  q, k, v, *_ = _mk(shape, dtype)
+  M = S // C
+  sel = jax.random.randint(jax.random.PRNGKey(6), (B, Hkv, min(5, M)), 0,
+                           M).astype(jnp.int32)
+  sel = sel.at[:, :, -1].set(-1)          # padded entry
+  sm = float(1.0 / np.sqrt(D))
+  got = ops._gather(q, k, v, sel, C, sm, "interpret")
+  want = ref.block_gather_attention_ref(q, k, v, sel, cluster_size=C,
+                                        sm_scale=sm)
+  for g, w in zip(got, want):
+    np.testing.assert_allclose(np.asarray(g, np.float32),
+                               np.asarray(w, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_synopsis_attention_full_budget_is_exact(shape):
+  q, k, v, _, _, counts = _mk(shape, jnp.float32)
+  M = counts.shape[1]
+  C = k.shape[2] // M
+  # true centroids (means) so the synopsis is consistent with the data
+  k_syn = k.reshape(*k.shape[:2], M, C, -1).mean(3)
+  v_syn = v.reshape(*v.shape[:2], M, C, -1).mean(3)
+  sm = float(1.0 / np.sqrt(q.shape[-1]))
+  out = ops.synopsis_attention(q, k, v, k_syn, v_syn, counts, i_max=M,
+                               sm_scale=sm, impl="xla")
+  want = ref.exact_attention_ref(q, k, v, sm_scale=sm)
+  np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                             rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("i_max", [0, 1, 4])
+def test_synopsis_attention_xla_matches_interpret(i_max):
+  shape = SHAPES[1]
+  q, k, v, k_syn, v_syn, counts = _mk(shape, jnp.float32)
+  sm = float(1.0 / np.sqrt(q.shape[-1]))
+  if i_max == 0:
+    i_max = 1   # kernels need >= 1 selected block
+  a = ops.synopsis_attention(q, k, v, k_syn, v_syn, counts, i_max=i_max,
+                             sm_scale=sm, impl="xla")
+  b = ops.synopsis_attention(q, k, v, k_syn, v_syn, counts, i_max=i_max,
+                             sm_scale=sm, impl="interpret")
+  np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                             rtol=2e-5, atol=2e-5)
+
+
+def test_merge_partials_associative():
+  ks = jax.random.split(jax.random.PRNGKey(0), 9)
+  parts = []
+  for i in range(3):
+    o = jax.random.normal(ks[3 * i], (2, 4, 8))
+    m = jax.random.normal(ks[3 * i + 1], (2, 4))
+    l = jax.random.uniform(ks[3 * i + 2], (2, 4)) + 0.1
+    parts.append((o, m, l))
+  ab_c = ref.merge_partials(ref.merge_partials(parts[0], parts[1]),
+                            parts[2])
+  a_bc = ref.merge_partials(parts[0],
+                            ref.merge_partials(parts[1], parts[2]))
+  for x, y in zip(ab_c, a_bc):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_merge_partials_equals_joint_softmax():
+  """Splitting a key set and merging partials == one softmax."""
+  ks = jax.random.split(jax.random.PRNGKey(1), 3)
+  q = jax.random.normal(ks[0], (2, 4, 32))
+  k = jax.random.normal(ks[1], (2, 2, 64, 32))
+  v = jax.random.normal(ks[2], (2, 2, 64, 32))
+  whole = ref.flash_decode_ref(q, k, v)
+  left = ref.flash_decode_ref(q, k[:, :, :40], v[:, :, :40])
+  right = ref.flash_decode_ref(q, k[:, :, 40:], v[:, :, 40:])
+  merged = ref.merge_partials(left, right)
+  for g, w in zip(merged, whole):
+    np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5,
+                               atol=1e-5)

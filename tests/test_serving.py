@@ -1,0 +1,121 @@
+"""Serving runtime: scatter-gather service, three techniques, paper-shaped
+behaviour (AccuracyTrader holds tail latency under load; partial execution
+loses accuracy under load), plus the CF/search apps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.apps import (CFRecommender, SearchEngine, movielens_like,
+                                webpages_like)
+from repro.serving.latency import ComponentModel, TailTracker
+from repro.serving.service import Request, ScatterGatherService, ServiceConfig
+from repro.serving.workload import SOGOU_HOURLY, hour_trace
+
+
+def _run(tech, rate, seed=0, duration=4.0, deadline=100.0):
+  svc = ScatterGatherService(ServiceConfig(
+      n_components=24, technique=tech, deadline_ms=deadline, seed=seed))
+  return svc.run_open_loop(rate, duration)
+
+
+def test_tail_tracker():
+  t = TailTracker()
+  for v in range(1, 1001):
+    t.observe(float(v))
+  assert abs(t.p(50) - 500.5) < 2
+  assert t.p(99.9) > 990
+
+
+def test_component_queueing():
+  c = ComponentModel(seed=1, interference=0.0, straggler_prob=0.0)
+  t1 = c.submit(0.0, 10)
+  t2 = c.submit(0.0, 10)
+  assert t2 > t1                      # FIFO queue builds up
+
+
+def test_accuracytrader_tail_stable_under_load():
+  light = _run("accuracytrader", 20)
+  heavy = _run("accuracytrader", 100)
+  basic_heavy = _run("basic", 100)
+  # paper Table 1 shape: basic explodes under load, AccuracyTrader doesn't
+  assert basic_heavy["p999"] > 5 * heavy["p999"]
+  assert heavy["p999"] < 20 * light["p999"]
+
+
+def test_partial_execution_loses_accuracy_under_load():
+  p_light = _run("partial", 20)
+  p_heavy = _run("partial", 100)
+  at_heavy = _run("accuracytrader", 100)
+  # paper Table 2 shape
+  assert p_heavy["accuracy_loss_pct"] > p_light["accuracy_loss_pct"]
+  assert at_heavy["accuracy_loss_pct"] < p_heavy["accuracy_loss_pct"]
+
+
+def test_reissue_helps_light_load_only():
+  b = _run("basic", 20, duration=8.0)
+  r = _run("reissue", 20, duration=8.0)
+  assert r["p999"] <= b["p999"] * 1.1
+  r_heavy = _run("reissue", 100)
+  at_heavy = _run("accuracytrader", 100)
+  assert at_heavy["p999"] < r_heavy["p999"]
+
+
+def test_exact_techniques_have_no_accuracy_loss():
+  assert _run("basic", 40)["accuracy_loss_pct"] == 0.0
+  assert _run("reissue", 40)["accuracy_loss_pct"] == 0.0
+
+
+def test_workload_traces():
+  assert len(SOGOU_HOURLY) == 24
+  tr = hour_trace(9, sessions=60)
+  assert len(tr) == 60
+  assert tr[-5:].mean() > tr[:5].mean()       # hour 9 increases
+  tr24 = hour_trace(24, sessions=60)
+  assert tr24[-5:].mean() < tr24[:5].mean()   # hour 24 decreases
+
+
+class TestApps:
+  def test_cf_budget_converges_to_exact(self):
+    r, m = movielens_like(512, 300, density=0.3, seed=1)
+    rec = CFRecommender(r, m, num_clusters=16)
+    q_full, qm_full = r[7], m[7]
+    rated = np.where(np.asarray(qm_full) > 0)[0]
+    test = rated[:10]
+    qm = qm_full.at[jnp.asarray(test)].set(0.0)
+    q = q_full * qm
+    items = jnp.asarray(test)
+    exact = np.asarray(rec.predict_exact(q, qm, items))
+    errs = []
+    for b in (0, 4, 16):
+      pred = np.asarray(rec.predict(q, qm, items, b))
+      errs.append(np.abs(pred - exact).mean())
+    assert errs[2] < 0.05                     # full budget ~= exact
+    assert errs[2] <= errs[0] + 1e-6
+
+  def test_search_accuracy_monotone_in_budget(self):
+    docs = webpages_like(1024, 256, seed=2)
+    se = SearchEngine(docs, num_clusters=32)
+    qv = docs[10]
+    a = [np.mean([se.accuracy(docs[i * 37 % 1024], b) for i in range(8)])
+         for b in (2, 8, 32)]
+    assert a[2] >= a[1] >= a[0] - 0.05
+    assert a[2] == 1.0                        # full budget == exact
+
+  def test_search_ranked_sections_concentrate(self):
+    """Fig 4(b): first ranked decile holds more true-top-10 than last."""
+    docs = webpages_like(2048, 256, seed=3)
+    se = SearchEngine(docs, num_clusters=32)
+    rng = np.random.default_rng(0)
+    first = last = 0
+    for qi in range(12):
+      qv = docs[rng.integers(0, 2048)]
+      scores = np.asarray(se.syn.centroids @ qv)
+      order = np.argsort(-scores)
+      rank = np.empty_like(order)
+      rank[order] = np.arange(len(order))
+      top = np.asarray(se.search_exact(qv))
+      sec = rank[np.asarray(se.syn.row_cluster)[top]] * 10 // 32
+      first += int((sec == 0).sum())
+      last += int((sec >= 8).sum())
+    assert first > 3 * max(last, 1)

@@ -1,0 +1,72 @@
+"""The production scatter-gather synopsis attention (shard_map over the
+sequence axes — EXPERIMENTS.md §Perf cell 1 it.2) must produce the same
+numbers as the single-device reference path.  Runs on 8 in-process
+placeholder devices in a subprocess."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.dist import sharding as shd
+    from repro.serve.serve_step import (sharded_synopsis_attention,
+                                        synopsis_decode_attention)
+
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    B, Hkv, G, D, S, C = 4, 2, 2, 32, 512, 32
+    H, M = Hkv * G, S // C
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    cache = {
+        "k": jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32),
+        "v": jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32),
+        "recent_k": jax.random.normal(ks[5], (B, Hkv, 16, D), jnp.float32),
+        "recent_v": jax.random.normal(ks[6], (B, Hkv, 16, D), jnp.float32),
+        "recent_len": jnp.full((B,), 7, jnp.int32),
+        "counts": jnp.full((B, M), float(C)),
+    }
+    cache["k_syn"] = cache["k"].reshape(B, Hkv, M, C, D).mean(3)
+    cache["v_syn"] = cache["v"].reshape(B, Hkv, M, C, D).mean(3)
+    kd = jax.random.normal(ks[7], (B, Hkv, 1, D), jnp.float32)
+    sm = float(1.0 / np.sqrt(D))
+
+    ref = synopsis_decode_attention(
+        q, cache, i_max=4, cluster_size=C, sm_scale=sm, self_kv=(kd, kd))
+
+    with shd.use_mesh(mesh, shd.SERVE_RULES):
+        got = jax.jit(lambda q, c, s: sharded_synopsis_attention(
+            q, c, i_max=4, cluster_size=C, sm_scale=sm, self_kv=s,
+            seq_axes=("model",)))(q, cache, (kd, kd))
+    err = float(np.abs(np.asarray(got) - np.asarray(ref)).max())
+
+    # and with the long_500k 2-axis layout
+    with shd.use_mesh(mesh, shd.LONG_RULES):
+        got2 = jax.jit(lambda q, c, s: sharded_synopsis_attention(
+            q, c, i_max=4, cluster_size=C, sm_scale=sm, self_kv=s,
+            seq_axes=("data", "model")))(q, cache, (kd, kd))
+    err2 = float(np.abs(np.asarray(got2) - np.asarray(ref)).max())
+    print("RESULT:" + json.dumps({"err": err, "err2": err2}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_equals_reference():
+  env = dict(os.environ)
+  env["PYTHONPATH"] = "src"
+  p = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
+                     text=True, env=env, timeout=600,
+                     cwd=os.path.dirname(os.path.dirname(__file__)))
+  assert p.returncode == 0, p.stderr[-3000:]
+  line = [l for l in p.stdout.splitlines() if l.startswith("RESULT:")][0]
+  res = json.loads(line[len("RESULT:"):])
+  assert res["err"] < 2e-4, res
+  assert res["err2"] < 2e-4, res

@@ -1,0 +1,80 @@
+"""End-to-end behaviour: the full AccuracyTrader story on one model —
+prefill, synopsis creation, budgeted decode whose accuracy/latency trade
+moves the right way, incremental update, and the serving layer driving
+budgets from deadlines (paper Algorithm 1 + §4 behaviours)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.deadline import BudgetController, LatencyModel
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.serve import synopsis_kv as skv
+from repro.serve.prefill import make_prefill_step
+from repro.serve.serve_step import make_serve_step
+from repro.serving.service import ScatterGatherService, ServiceConfig
+
+
+def test_end_to_end_accuracy_latency_tradeoff():
+  cfg = get_config("llama3-8b", smoke=True)
+  key = jax.random.PRNGKey(0)
+  params, _ = cm.split(tf.init_model(key, cfg))
+  params = jax.tree.map(lambda p: p.astype(cfg.dtype), params)
+  B, S = 2, 128
+  prompt = jax.random.randint(key, (B, S), 0, cfg.vocab)
+  _, cache = jax.jit(make_prefill_step(cfg))(params, prompt)
+  syn_cache = jax.jit(lambda c: skv.build(c, cfg))(cache)
+  M = S // cfg.synopsis.cluster_size
+
+  nt = jax.random.randint(jax.random.PRNGKey(9), (B, 1), 0, cfg.vocab)
+  lg_exact, _ = jax.jit(make_serve_step(cfg, mode="exact"))(
+      params, cache, nt)
+  p_exact = jax.nn.softmax(lg_exact.astype(jnp.float32), -1)
+
+  # budget sweep: "rows touched" is the latency proxy, TV-dist the
+  # accuracy loss; endpoints must be (cheap, approximate) -> (full, exact)
+  rows, errs = [], []
+  for i_max in (0, M // 2, M):
+    lg, _ = jax.jit(make_serve_step(cfg, mode="synopsis", i_max=i_max))(
+        params, syn_cache, nt)
+    p = jax.nn.softmax(lg.astype(jnp.float32), -1)
+    errs.append(float(0.5 * jnp.abs(p - p_exact).sum(-1).mean()))
+    rows.append(M + i_max * cfg.synopsis.cluster_size)
+  assert rows[0] < rows[-1]
+  assert errs[-1] < 1e-3
+  assert errs[0] > errs[-1]
+
+
+def test_deadline_budget_closed_loop():
+  """The controller learns the latency model and meets deadlines."""
+  ctrl = BudgetController(LatencyModel(base=1.0, slope=1.0, alpha=0.1),
+                          buckets=(0, 1, 2, 4, 8, 16, 32), i_max_cap=32)
+  rng = np.random.default_rng(0)
+  true_base, true_slope = 3.0, 0.9
+  misses = 0
+  for step in range(400):
+    b = ctrl.budget_for(deadline=20.0)
+    lat = true_base + true_slope * b + rng.normal(0, 0.1)
+    ctrl.observe(b, lat)
+    if step > 200 and lat > 20.0:
+      misses += 1
+  assert misses < 10
+  # converged budget should use most of the deadline
+  b = ctrl.budget_for(deadline=20.0)
+  assert 8 <= b <= 32
+
+
+def test_service_reproduces_paper_orderings():
+  """Table 1/2 orderings at heavy load, in one shot."""
+  res = {}
+  for tech in ("basic", "reissue", "partial", "accuracytrader"):
+    svc = ScatterGatherService(ServiceConfig(
+        n_components=16, technique=tech, deadline_ms=100.0, seed=1))
+    res[tech] = svc.run_open_loop(80.0, 4.0)
+  # latency: AT << reissue << basic (heavy load)
+  assert res["accuracytrader"]["p999"] < res["reissue"]["p999"]
+  assert res["reissue"]["p999"] <= res["basic"]["p999"] * 1.2
+  # accuracy: AT loss << partial loss
+  assert (res["accuracytrader"]["accuracy_loss_pct"]
+          < res["partial"]["accuracy_loss_pct"])

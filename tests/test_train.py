@@ -1,0 +1,161 @@
+"""Training substrate: optimizer, data determinism, checkpoint/restart,
+loss decrease, gradient compression error feedback."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.train import checkpoint as ck
+from repro.train import compression as comp
+from repro.train.data import DataConfig, TokenStream
+from repro.train.optimizer import (OptConfig, adamw_update, global_norm,
+                                   init_opt_state, schedule)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_schedule_warmup_and_decay():
+  cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+  assert float(schedule(cfg, jnp.int32(0))) == 0.0
+  assert abs(float(schedule(cfg, jnp.int32(10))) - 1e-3) < 1e-9
+  assert float(schedule(cfg, jnp.int32(100))) < 2e-4
+
+
+def test_adamw_moves_toward_minimum():
+  cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                  total_steps=2000)
+  params = {"w": jnp.array([5.0])}
+  opt = init_opt_state(params)
+  for _ in range(150):
+    grads = {"w": 2 * params["w"]}        # d/dw w^2
+    params, opt, _ = adamw_update(grads, opt, params, cfg)
+  assert abs(float(params["w"][0])) < 0.3
+
+
+def test_grad_clip():
+  cfg = OptConfig(clip_norm=1.0, warmup_steps=0)
+  params = {"w": jnp.zeros((4,))}
+  opt = init_opt_state(params)
+  _, _, m = adamw_update({"w": jnp.full((4,), 100.0)}, opt, params, cfg)
+  assert float(m["grad_norm"]) > 100
+
+
+def test_data_deterministic_and_resumable():
+  cfg = DataConfig(vocab=1000, seq_len=32, global_batch=4, seed=7)
+  a = TokenStream(cfg)
+  b = TokenStream(cfg)
+  xa, ya = a.batch_at(5)
+  xb, yb = b.batch_at(5)
+  np.testing.assert_array_equal(xa, xb)
+  np.testing.assert_array_equal(ya, yb)
+  b.load_state_dict(a.state_dict())
+  assert b.step == a.step
+  # labels are next-token shifted
+  np.testing.assert_array_equal(xa[:, 1:], ya[:, :-1])
+
+
+def test_loss_decreases_tiny_model():
+  cfg = get_config("smollm-135m", smoke=True)
+  opt_cfg = OptConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+  state, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+  data = TokenStream(DataConfig(cfg.vocab, 64, 8, seed=3))
+  step = jax.jit(make_train_step(cfg, opt_cfg))
+  losses = []
+  for i in range(12):
+    t, l = data.batch_at(i % 2)           # small fixed set -> must fit
+    _, metrics = step(state, {"tokens": jnp.asarray(t),
+                              "labels": jnp.asarray(l)})
+    state, metrics = step(state, {"tokens": jnp.asarray(t),
+                                  "labels": jnp.asarray(l)})
+    losses.append(float(metrics["loss"]))
+  assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_microbatching_matches_full_batch():
+  cfg = get_config("llama3-8b", smoke=True)
+  opt_cfg = OptConfig(warmup_steps=0, total_steps=10)
+  state, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+  data = TokenStream(DataConfig(cfg.vocab, 32, 8, seed=1))
+  t, l = data.batch_at(0)
+  batch = {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+  s1, m1 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=1))(
+      state, batch)
+  s2, m2 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=4))(
+      state, batch)
+  p1 = jax.tree.leaves(s1["params"])[0]
+  p2 = jax.tree.leaves(s2["params"])[0]
+  np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=2e-3,
+                             atol=2e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+  tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3)},
+          "step": jnp.int32(7)}
+  ck.save(str(tmp_path), 7, tree, extras={"data": {"step": 7}})
+  got, step, extras = ck.restore(str(tmp_path))
+  assert step == 7
+  assert extras["data"]["step"] == 7
+  np.testing.assert_array_equal(np.asarray(got["a"]["b"]),
+                                np.asarray(tree["a"]["b"]))
+
+
+def test_checkpoint_atomic_and_latest(tmp_path):
+  tree = {"w": jnp.zeros((2,))}
+  ck.save(str(tmp_path), 1, tree)
+  ck.save(str(tmp_path), 5, tree)
+  assert ck.latest_step(str(tmp_path)) == 5
+  # a stale tmp dir must not confuse restore
+  os.makedirs(tmp_path / "step_00000009.tmp", exist_ok=True)
+  assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_async_checkpointer(tmp_path):
+  c = ck.AsyncCheckpointer()
+  c.save_async(str(tmp_path), 3, {"w": jnp.ones((4,))})
+  c.wait()
+  got, step, _ = ck.restore(str(tmp_path))
+  assert step == 3
+
+
+def test_train_restart_resumes_identically(tmp_path):
+  """Fault tolerance: kill-and-restore reproduces the uninterrupted run."""
+  cfg = get_config("smollm-135m", smoke=True)
+  opt_cfg = OptConfig(warmup_steps=0, total_steps=20)
+  data = TokenStream(DataConfig(cfg.vocab, 32, 4, seed=5))
+  step = jax.jit(make_train_step(cfg, opt_cfg))
+
+  def run(state, a, b):
+    for i in range(a, b):
+      t, l = data.batch_at(i)
+      state, m = step(state, {"tokens": jnp.asarray(t),
+                              "labels": jnp.asarray(l)})
+    return state, m
+
+  state0, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+  ref_state, ref_m = run(state0, 0, 6)
+
+  state1, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+  state1, _ = run(state1, 0, 3)
+  ck.save(str(tmp_path), 3, state1)
+  restored, s, _ = ck.restore(str(tmp_path))
+  assert s == 3
+  got_state, got_m = run(restored, 3, 6)
+  np.testing.assert_allclose(float(got_m["loss"]), float(ref_m["loss"]),
+                             rtol=1e-5)
+
+
+def test_compression_error_feedback_unbiased():
+  """Sum over steps of (compressed update + carried error) == true sum."""
+  g = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64,)), jnp.float32)
+  err = jnp.zeros_like(g)
+  total = jnp.zeros_like(g)
+  for _ in range(50):
+    g32 = g + err
+    q, scale = comp._quantise(g32)
+    deq = q.astype(jnp.float32) * scale
+    err = g32 - deq
+    total = total + deq
+  np.testing.assert_allclose(np.asarray(total + err),
+                             np.asarray(g * 50), rtol=1e-3, atol=1e-3)

@@ -1,6 +1,20 @@
 """Kernel micro-benchmarks (xla path on CPU; the Pallas path is the TPU
 target, validated in interpret mode — wall times here are CPU-relative
-but the *ratios* exact/synopsis transfer)."""
+but the *ratios* exact/synopsis and fused/unfused transfer).
+
+Three sweeps:
+
+  * ``decode_attention_sweep`` — the paper headline: exact O(S) decode vs
+    the synopsis path, plus the fused pipeline.
+  * ``fusion_sweep`` — the PR 1 tentpole: the synopsis *stage* (score +
+    count-biased centroid attention) timed as two separately-jitted
+    launches (the unfused kernel structure: ``k_syn`` is read twice and
+    the logit matmul runs twice — on TPU these are two HBM passes with no
+    cross-kernel CSE) vs the single fused launch, and the end-to-end
+    fused vs unfused pipeline.
+  * ``pallas_vs_xla_sweep`` — interpret-mode sanity ratio at a small
+    shape (on TPU rerun with impl="pallas" for real numbers).
+"""
 from __future__ import annotations
 
 import time
@@ -10,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 
 def _time(f, *args, iters=5):
@@ -23,28 +37,107 @@ def _time(f, *args, iters=5):
   return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
+def _mk(S, B=4, Hkv=8, G=4, D=128, C=128, seed=0):
+  H, M = Hkv * G, S // C
+  ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+  q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+  k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+  v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+  k_syn = k.reshape(B, Hkv, M, C, D).mean(3)
+  v_syn = v.reshape(B, Hkv, M, C, D).mean(3)
+  counts = jnp.full((B, M), float(C))
+  return q, k, v, k_syn, v_syn, counts
+
+
 def decode_attention_sweep() -> Dict[str, float]:
-  B, Hkv, G, D, C = 4, 8, 4, 128, 128
-  H = Hkv * G
+  D = 128
   out = {}
   for S in (4096, 16384):
-    M = S // C
-    ks = jax.random.split(jax.random.PRNGKey(0), 6)
-    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
-    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
-    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
-    k_syn = k.reshape(B, Hkv, M, C, D).mean(3)
-    v_syn = v.reshape(B, Hkv, M, C, D).mean(3)
-    counts = jnp.full((B, M), float(C))
+    q, k, v, k_syn, v_syn, counts = _mk(S)
     sm = float(1 / np.sqrt(D))
 
     exact = jax.jit(lambda q, k, v: ops.exact_decode_attention(
         q, k, v, sm_scale=sm, impl="xla"))
     syn = jax.jit(lambda q, k, v, ks_, vs, c: ops.synopsis_attention(
         q, k, v, ks_, vs, c, i_max=32, sm_scale=sm, impl="xla"))
+    fused = jax.jit(lambda q, k, v, ks_, vs, c: ops.synopsis_attention_fused(
+        q, k, v, ks_, vs, c, i_max=32, sm_scale=sm, impl="xla"))
     t_e = _time(exact, q, k, v)
     t_s = _time(syn, q, k, v, k_syn, v_syn, counts)
+    t_f = _time(fused, q, k, v, k_syn, v_syn, counts)
     out[f"exact_S{S}_us"] = t_e
     out[f"synopsis_S{S}_us"] = t_s
+    out[f"synopsis_fused_S{S}_us"] = t_f
     out[f"speedup_S{S}"] = t_e / t_s
+    out[f"speedup_fused_S{S}"] = t_e / t_f
+  return out
+
+
+def fusion_sweep() -> Dict[str, float]:
+  """Fused vs unfused synopsis stage + end-to-end pipeline (XLA proxy).
+
+  The unfused stage runs as two separate jitted calls on purpose: that is
+  the kernel-launch structure being replaced (scores kernel + flash
+  decode kernel = two full reads of k_syn), and keeping them in one jit
+  would let XLA CSE the shared logit matmul that distinct Pallas kernel
+  launches cannot share."""
+  # The stage's problem size is M = S/C; C=32 keeps M large enough that
+  # the two-matmul-vs-one structure dominates CPU dispatch noise (the
+  # paper-default C=128 shapes are what decode_attention_sweep reports).
+  D, C = 128, 32
+  out = {}
+  for S in (4096, 16384):
+    q, k, v, k_syn, v_syn, counts = _mk(S, C=C)
+    sm = float(1 / np.sqrt(D))
+    cbias = ops.count_bias(counts)
+    B, Hkv, M, _ = k_syn.shape
+    bias = jnp.broadcast_to(cbias[:, None, :], (B, Hkv, M))
+
+    score_fn = jax.jit(lambda q, ks_: ref.synopsis_score_ref(
+        q, ks_, sm_scale=sm))
+    decode_fn = jax.jit(lambda q, ks_, vs, b: ref.flash_decode_ref(
+        q, ks_, vs, b, sm_scale=sm))
+    fused_fn = jax.jit(lambda q, ks_, vs, c: ops.synopsis_stage1(
+        q, ks_, vs, c, sm_scale=sm, impl="xla"))
+
+    def unfused_stage(q, ks_, vs, b):
+      s = score_fn(q, ks_)
+      p = decode_fn(q, ks_, vs, b)
+      return s, p
+
+    t_u = _time(unfused_stage, q, k_syn, v_syn, bias, iters=20)
+    t_f = _time(fused_fn, q, k_syn, v_syn, counts, iters=20)
+    out[f"syn_stage_unfused_S{S}_us"] = t_u
+    out[f"syn_stage_fused_S{S}_us"] = t_f
+    out[f"syn_stage_fused_speedup_S{S}"] = t_u / t_f
+
+    e2e_u = jax.jit(lambda *a: ops.synopsis_attention(
+        *a, i_max=32, sm_scale=sm, impl="xla"))
+    e2e_f = jax.jit(lambda *a: ops.synopsis_attention_fused(
+        *a, i_max=32, sm_scale=sm, impl="xla"))
+    t_eu = _time(e2e_u, q, k, v, k_syn, v_syn, counts)
+    t_ef = _time(e2e_f, q, k, v, k_syn, v_syn, counts)
+    out[f"e2e_unfused_S{S}_us"] = t_eu
+    out[f"e2e_fused_S{S}_us"] = t_ef
+    out[f"e2e_fused_speedup_S{S}"] = t_eu / t_ef
+  return out
+
+
+def pallas_vs_xla_sweep(impl: str | None = None) -> Dict[str, float]:
+  """Fused pipeline impl ratio.  On CPU the Pallas interpreter is an
+  emulator (orders of magnitude slow — the ratio is a sanity check, not a
+  performance claim); on TPU pass impl="pallas"."""
+  impl = impl or ("pallas" if jax.default_backend() == "tpu"
+                  else "interpret")
+  S, C = 2048, 128
+  q, k, v, k_syn, v_syn, counts = _mk(S, B=1, Hkv=2, G=2, C=C)
+  sm = float(1 / np.sqrt(q.shape[-1]))
+  out = {}
+  for name, im in (("xla", "xla"), (impl, impl)):
+    fn = jax.jit(lambda *a: ops.synopsis_attention_fused(
+        *a, i_max=8, sm_scale=sm, impl=im))
+    out[f"fused_{name}_S{S}_us"] = _time(fn, q, k, v, k_syn, v_syn, counts)
+  out[f"pallas_vs_xla_ratio_S{S}"] = (
+      out[f"fused_{impl}_S{S}_us"] / out[f"fused_xla_S{S}_us"])
+  out["pallas_impl"] = impl
   return out

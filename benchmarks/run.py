@@ -65,15 +65,31 @@ def bench_fig5_fig6():
          f"mean_loss={sum(d['loss_per_min']) / len(d['loss_per_min']):.2f}%")
 
 
-def bench_kernels():
-  from benchmarks.kernels_bench import decode_attention_sweep
+def bench_kernels(collect=None):
+  from benchmarks.kernels_bench import (decode_attention_sweep,
+                                        fusion_sweep, pallas_vs_xla_sweep)
   t0 = time.perf_counter()
   res = decode_attention_sweep()
   us = (time.perf_counter() - t0) * 1e6
   for S in (4096, 16384):
     _row(f"kernel_decode_S{S}", res[f"synopsis_S{S}_us"],
          f"exact={res[f'exact_S{S}_us']:.0f}us "
-         f"speedup={res[f'speedup_S{S}']:.2f}x")
+         f"speedup={res[f'speedup_S{S}']:.2f}x "
+         f"fused_speedup={res[f'speedup_fused_S{S}']:.2f}x")
+  fus = fusion_sweep()
+  for S in (4096, 16384):
+    _row(f"kernel_fusion_S{S}", fus[f"syn_stage_fused_S{S}_us"],
+         f"stage_unfused={fus[f'syn_stage_unfused_S{S}_us']:.0f}us "
+         f"stage_fused_speedup={fus[f'syn_stage_fused_speedup_S{S}']:.2f}x "
+         f"e2e_fused_speedup={fus[f'e2e_fused_speedup_S{S}']:.2f}x")
+  pvx = pallas_vs_xla_sweep()
+  _row("kernel_impl_ratio", pvx["fused_xla_S2048_us"],
+       f"impl={pvx['pallas_impl']} "
+       f"ratio_vs_xla={pvx['pallas_vs_xla_ratio_S2048']:.2f}x")
+  if collect is not None:
+    collect["decode"] = res
+    collect["fusion"] = fus
+    collect["impl_ratio"] = pvx
 
 
 def bench_roofline():
@@ -100,13 +116,31 @@ def bench_roofline():
 
 
 def main() -> None:
+  import argparse
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--json", default=None, metavar="PATH",
+                  help="also dump the kernel-bench numbers as a JSON "
+                       "baseline (e.g. BENCH_decode.json)")
+  ap.add_argument("--kernels-only", action="store_true",
+                  help="skip the service-simulation tables (CI smoke)")
+  args = ap.parse_args()
+
   print("name,us_per_call,derived")
-  bench_table1_table2()
-  bench_fig3()
-  bench_fig4()
-  bench_fig5_fig6()
-  bench_kernels()
+  if not args.kernels_only:
+    bench_table1_table2()
+    bench_fig3()
+    bench_fig4()
+    bench_fig5_fig6()
+  collect = {} if args.json else None
+  bench_kernels(collect)
   bench_roofline()
+  if args.json:
+    import jax
+    meta = {"backend": jax.default_backend(),
+            "devices": jax.device_count()}
+    with open(args.json, "w") as f:
+      json.dump({"meta": meta, **collect}, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

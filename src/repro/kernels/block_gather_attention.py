@@ -11,10 +11,33 @@ The selected cluster ids are **scalar-prefetched** (SMEM) so the BlockSpec
 cluster block: grid (B, Hkv, I); step (b, h, i) pulls K/V block
 ``selected[b, h, i]``.  Padded entries (id < 0) are clamped to block 0 and
 masked with -inf inside the kernel.
+
+Fused epilogue (the serving path) — two optional extensions run inside the
+same grid/scratch, eliminating the separate ``_merge`` passes the serve
+step used to do:
+
+  * **decrement** ``(k_sel, v_sel, sel_bias)``: per selected cluster the
+    kernel also loads its centroid row and accumulates it with *negative*
+    weight ``-exp(softcap(q.k_syn)*scale + log count - m)``.  Stage 1
+    (fused_synopsis) emits partials over ALL centroids (selection isn't
+    known yet there); this subtraction removes exactly the selected
+    centroids' terms, so ``merge(stage1, stage2)`` equals the masked-bias
+    reference.  Per cluster the net mass (tokens - centroid) is >= 0 by
+    Jensen when centroid = mean and no softcap (with softcap it may dip
+    negative, which the signed merge handles); the flush guards the
+    divide for degenerate/cancelled clusters either way.
+  * **extras** ``(extras_k, extras_v, extras_bias)``: one trailing grid
+    step accumulates the recent-ring-buffer tokens and the new token's
+    self-KV (concatenated + padded outside; validity via the (B, E) bias).
+
+Index maps are clamped so the inactive input keeps its previous block
+index on each step — Pallas elides the re-fetch, so the epilogue costs
+one small DMA, not a second pass.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,48 +47,104 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(sel_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc, m_s, l_s, *, sm_scale: float, num_i: int):
-  b, h, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+def _cap(logits, cap: Optional[float]):
+  if cap is None:
+    return logits
+  return cap * jnp.tanh(logits / cap)
 
-  @pl.when(i == 0)
+
+def _kernel(sel_ref, q_ref, k_ref, v_ref, *rest, sm_scale: float,
+            cap: Optional[float], num_i: int, num_steps: int,
+            has_dec: bool, has_ext: bool):
+  it = iter(rest)
+  kc_ref = vc_ref = cb_ref = ke_ref = ve_ref = eb_ref = None
+  if has_dec:
+    kc_ref, vc_ref, cb_ref = next(it), next(it), next(it)
+  if has_ext:
+    ke_ref, ve_ref, eb_ref = next(it), next(it), next(it)
+  o_ref, m_ref, l_ref, acc, m_s, l_s = it
+
+  b, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+  @pl.when(j == 0)
   def _init():
     acc[...] = jnp.zeros_like(acc)
     m_s[...] = jnp.full_like(m_s, NEG_INF)
     l_s[...] = jnp.zeros_like(l_s)
 
-  valid = sel_ref[b, h, i] >= 0
-
   q = q_ref[0].astype(jnp.float32)                  # (G, D)
-  k = k_ref[0, 0].astype(jnp.float32)               # (C, D)
-  v = v_ref[0, 0].astype(jnp.float32)
 
-  logits = jax.lax.dot_general(
-      q, k, (((1,), (1,)), ((), ())),
-      preferred_element_type=jnp.float32) * sm_scale
-  logits = jnp.where(valid, logits, NEG_INF)        # mask padded clusters
+  @pl.when(j < num_i)
+  def _cluster():
+    jc = jnp.minimum(j, num_i - 1)
+    valid = sel_ref[b, h, jc] >= 0
 
-  m_prev = m_s[:, 0]
-  m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
-  p = jnp.exp(logits - m_new[:, None])
-  alpha = jnp.exp(m_prev - m_new)
-  l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
-  acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
-      p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-  m_s[:, 0] = m_new
-  l_s[:, 0] = l_new
+    k = k_ref[0, 0].astype(jnp.float32)             # (C, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    logits = _cap(jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale, cap)
+    logits = jnp.where(valid, logits, NEG_INF)      # mask padded clusters
 
-  @pl.when(i == num_i - 1)
+    m_prev = m_s[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    if has_dec:
+      kc = kc_ref[0, 0].astype(jnp.float32)         # (1, D) centroid row
+      s_c = _cap(jax.lax.dot_general(
+          q, kc, (((1,), (1,)), ((), ())),
+          preferred_element_type=jnp.float32) * sm_scale, cap)
+      s_c = s_c + cb_ref[0, 0, 0].astype(jnp.float32)   # (G, 1)
+      s_c = jnp.where(valid, s_c, NEG_INF)
+      m_new = jnp.maximum(m_new, jnp.max(s_c, axis=-1))
+
+    p = jnp.exp(logits - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if has_dec:
+      vc = vc_ref[0, 0].astype(jnp.float32)         # (1, D)
+      p_c = jnp.exp(s_c - m_new[:, None])           # (G, 1)
+      l_new = l_new - p_c[:, 0]
+      acc_new = acc_new - p_c * vc                  # negative-weight term
+    acc[...] = acc_new
+    m_s[:, 0] = m_new
+    l_s[:, 0] = l_new
+
+  if has_ext:
+    @pl.when(j == num_i)
+    def _extras():
+      ke = ke_ref[0, 0].astype(jnp.float32)         # (E, D)
+      ve = ve_ref[0, 0].astype(jnp.float32)
+      logits = _cap(jax.lax.dot_general(
+          q, ke, (((1,), (1,)), ((), ())),
+          preferred_element_type=jnp.float32) * sm_scale, cap)
+      logits = logits + eb_ref[0][None, :].astype(jnp.float32)
+
+      m_prev = m_s[:, 0]
+      m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+      p = jnp.exp(logits - m_new[:, None])
+      alpha = jnp.exp(m_prev - m_new)
+      l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+      acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+          p, ve, (((1,), (0,)), ((), ())),
+          preferred_element_type=jnp.float32)
+      m_s[:, 0] = m_new
+
+  @pl.when(j == num_steps - 1)
   def _flush():
     l_fin = l_s[:, 0]
-    o_ref[0] = (acc[...] / jnp.maximum(l_fin, 1e-30)[:, None]).astype(
-        o_ref.dtype)
+    # The decrement can cancel a degenerate (uniform) cluster's mass to
+    # ~0; keep o*l == acc finite for the downstream merge.
+    safe = jnp.where(jnp.abs(l_fin) > 1e-30, l_fin, 1.0)
+    o_ref[0] = (acc[...] / safe[:, None]).astype(o_ref.dtype)
     m_ref[0] = m_s[:, 0]
     l_ref[0] = l_fin
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cluster_size", "sm_scale", "interpret"))
+    jax.jit,
+    static_argnames=("cluster_size", "sm_scale", "cap", "interpret"))
 def block_gather_attention(
     q: jax.Array,          # (B, H, D)
     k: jax.Array,          # (B, Hkv, S, D) cluster-contiguous
@@ -74,35 +153,74 @@ def block_gather_attention(
     *,
     cluster_size: int,
     sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+    k_sel: Optional[jax.Array] = None,        # (B, Hkv, I, D) centroid keys
+    v_sel: Optional[jax.Array] = None,        # (B, Hkv, I, D)
+    sel_bias: Optional[jax.Array] = None,     # (B, Hkv, I) log-count bias
+    extras_k: Optional[jax.Array] = None,     # (B, Hkv, E, D)
+    extras_v: Optional[jax.Array] = None,     # (B, Hkv, E, D)
+    extras_bias: Optional[jax.Array] = None,  # (B, E) additive log-space
     interpret: bool = False,
 ):
-  """Returns partials (out (B,H,D), m (B,H), l (B,H)) over selected blocks."""
+  """Returns partials (out (B,H,D) f32, m (B,H), l (B,H)).
+
+  Plain call: exact attention over the selected cluster blocks.  With the
+  fused epilogue inputs it additionally subtracts the selected centroids'
+  stage-1 terms and folds in the recent/self extras (see module doc).
+  """
   B, H, D = q.shape
   _, Hkv, S, _ = k.shape
   G = H // Hkv
   C = cluster_size
   assert S % C == 0
   I = selected.shape[-1]
+  has_dec = k_sel is not None
+  has_ext = extras_k is not None
 
-  grid = (B, Hkv, I)
+  num_steps = I + (1 if has_ext else 0)
+  grid = (B, Hkv, num_steps)
 
-  def _kv_index(b, h, i, sel):
+  def _kv_index(b, h, j, sel):
     # Padded ids (-1) are clamped to block 0; the kernel masks them with
-    # -inf using the raw (unclamped) scalar value.
-    return (b, h, jnp.maximum(sel[b, h, i], 0), 0)
+    # -inf using the raw (unclamped) scalar value.  During the extras
+    # step the previous block index is reused (no DMA).
+    jc = jnp.minimum(j, I - 1)
+    return (b, h, jnp.maximum(sel[b, h, jc], 0), 0)
+
+  def _sel_row(b, h, j, sel):
+    return (b, h, jnp.minimum(j, I - 1), 0)
+
+  in_specs = [
+      pl.BlockSpec((1, G, D), lambda b, h, j, sel: (b, h, 0)),
+      pl.BlockSpec((1, 1, C, D), _kv_index),
+      pl.BlockSpec((1, 1, C, D), _kv_index),
+  ]
+  args = [q, k, v]
+  if has_dec:
+    in_specs += [
+        pl.BlockSpec((1, 1, 1, D), _sel_row),
+        pl.BlockSpec((1, 1, 1, D), _sel_row),
+        pl.BlockSpec((1, 1, 1), lambda b, h, j, sel:
+                     (b, h, jnp.minimum(j, I - 1))),
+    ]
+    args += [k_sel, v_sel, sel_bias.astype(jnp.float32)]
+  if has_ext:
+    E = extras_k.shape[2]
+    in_specs += [
+        pl.BlockSpec((1, 1, E, D), lambda b, h, j, sel: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, E, D), lambda b, h, j, sel: (b, h, 0, 0)),
+        pl.BlockSpec((1, E), lambda b, h, j, sel: (b, 0)),
+    ]
+    args += [extras_k, extras_v, extras_bias.astype(jnp.float32)]
 
   grid_spec = pltpu.PrefetchScalarGridSpec(
       num_scalar_prefetch=1,
       grid=grid,
-      in_specs=[
-          pl.BlockSpec((1, G, D), lambda b, h, i, sel: (b, h, 0)),
-          pl.BlockSpec((1, 1, C, D), _kv_index),
-          pl.BlockSpec((1, 1, C, D), _kv_index),
-      ],
+      in_specs=in_specs,
       out_specs=[
-          pl.BlockSpec((1, G, D), lambda b, h, i, sel: (b, h, 0)),
-          pl.BlockSpec((1, G), lambda b, h, i, sel: (b, h)),
-          pl.BlockSpec((1, G), lambda b, h, i, sel: (b, h)),
+          pl.BlockSpec((1, G, D), lambda b, h, j, sel: (b, h, 0)),
+          pl.BlockSpec((1, G), lambda b, h, j, sel: (b, h)),
+          pl.BlockSpec((1, G), lambda b, h, j, sel: (b, h)),
       ],
       scratch_shapes=[
           pltpu.VMEM((G, D), jnp.float32),
@@ -111,15 +229,17 @@ def block_gather_attention(
       ],
   )
   fn = pl.pallas_call(
-      functools.partial(_kernel, sm_scale=sm_scale, num_i=I),
+      functools.partial(_kernel, sm_scale=sm_scale, cap=cap, num_i=I,
+                        num_steps=num_steps, has_dec=has_dec,
+                        has_ext=has_ext),
       grid_spec=grid_spec,
       out_shape=[
-          jax.ShapeDtypeStruct((B, H, D), q.dtype),
+          jax.ShapeDtypeStruct((B, H, D), jnp.float32),
           jax.ShapeDtypeStruct((B, H), jnp.float32),
           jax.ShapeDtypeStruct((B, H), jnp.float32),
       ],
       interpret=interpret,
       name="block_gather_attention",
   )
-  out, m, l = fn(selected.astype(jnp.int32), q, k, v)
+  out, m, l = fn(selected.astype(jnp.int32), *args)
   return out, m, l

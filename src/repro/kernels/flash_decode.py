@@ -24,8 +24,8 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, *rest, sm_scale: float, has_bias: bool,
-            num_s_blocks: int):
+def _kernel(q_ref, k_ref, v_ref, *rest, sm_scale: float, cap,
+            has_bias: bool, num_s_blocks: int):
   if has_bias:
     bias_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
   else:
@@ -46,6 +46,8 @@ def _kernel(q_ref, k_ref, v_ref, *rest, sm_scale: float, has_bias: bool,
   logits = jax.lax.dot_general(                     # (G, bs) on the MXU
       q, k, (((1,), (1,)), ((), ())),
       preferred_element_type=jnp.float32) * sm_scale
+  if cap is not None:
+    logits = cap * jnp.tanh(logits / cap)
   if bias_ref is not None:
     logits = logits + bias_ref[0, 0][None, :].astype(jnp.float32)
 
@@ -70,7 +72,7 @@ def _kernel(q_ref, k_ref, v_ref, *rest, sm_scale: float, has_bias: bool,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sm_scale", "block_s", "interpret"))
+    static_argnames=("sm_scale", "cap", "block_s", "interpret"))
 def flash_decode(
     q: jax.Array,                 # (B, H, D)
     k: jax.Array,                 # (B, Hkv, S, D)
@@ -78,6 +80,7 @@ def flash_decode(
     bias: jax.Array | None = None,  # (B, Hkv, S) additive log-space bias
     *,
     sm_scale: float = 1.0,
+    cap: float | None = None,     # attention softcap (pre-bias)
     block_s: int = 512,
     interpret: bool = False,
 ):
@@ -101,8 +104,10 @@ def flash_decode(
     in_specs.append(pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)))
     args.append(bias)
 
+  # Partials stay f32 regardless of input dtype: they feed merge_partials
+  # (self-KV, shard compose) and rounding mid-merge would accumulate.
   out_shape = [
-      jax.ShapeDtypeStruct((B, H, D), q.dtype),
+      jax.ShapeDtypeStruct((B, H, D), jnp.float32),
       jax.ShapeDtypeStruct((B, H), jnp.float32),
       jax.ShapeDtypeStruct((B, H), jnp.float32),
   ]
@@ -117,7 +122,7 @@ def flash_decode(
       pltpu.VMEM((G, 1), jnp.float32),
   ]
   fn = pl.pallas_call(
-      functools.partial(_kernel, sm_scale=sm_scale,
+      functools.partial(_kernel, sm_scale=sm_scale, cap=cap,
                         has_bias=bias is not None, num_s_blocks=ns),
       grid=grid,
       in_specs=in_specs,

@@ -1,0 +1,139 @@
+"""Fused synopsis score + stage-1 attention Pallas kernel.
+
+Algorithm 1 lines 1 + 4 in ONE pass over the centroid tables: each grid
+step loads one (block_m, D) tile of ``k_syn``/``v_syn``, computes the
+(G, block_m) centroid logits once on the MXU, and uses them TWICE —
+
+  * reduced over the GQA group by max -> the correlation scores ``c_i``
+    that feed ``lax.top_k`` ranking (uncapped, scale-only: ranking is
+    invariant under the monotone softcap);
+  * softcapped + count-bias -> online-softmax partials of the stage-1
+    synopsis attention over ALL centroids.
+
+The unfused path reads ``k_syn`` twice (score kernel + flash decode) and
+``v_syn`` once in a separate kernel launch; this kernel reads each exactly
+once and shares the logit matmul.  The selected-cluster mask cannot be
+applied here (selection *depends* on the scores this kernel emits), so the
+partials are over all centroids with the ``log(count)`` bias; the
+refinement kernel subtracts the selected centroids' terms exactly
+(decremental masking — see block_gather_attention's fused epilogue and
+EXPERIMENTS.md §Fusion).
+
+Tiling: grid (B, Hkv, M/block_m); online-softmax state lives in VMEM
+scratch across the sequential last grid axis, flushing (o, m, l) at the
+final step.  ``cbias`` is the precomputed ``log(max(counts, 1))`` (B, M).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, cb_ref, s_ref, o_ref, m_ref, l_ref,
+            acc, m_s, l_s, *, sm_scale: float, cap: Optional[float],
+            num_m_blocks: int):
+  m_idx = pl.program_id(2)
+
+  @pl.when(m_idx == 0)
+  def _init():
+    acc[...] = jnp.zeros_like(acc)
+    m_s[...] = jnp.full_like(m_s, NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s)
+
+  q = q_ref[0].astype(jnp.float32)                  # (G, D)
+  k = k_ref[0, 0].astype(jnp.float32)               # (bm, D)
+  v = v_ref[0, 0].astype(jnp.float32)               # (bm, D)
+
+  logits = jax.lax.dot_general(                     # (G, bm) — computed ONCE
+      q, k, (((1,), (1,)), ((), ())),
+      preferred_element_type=jnp.float32) * sm_scale
+
+  # Use 1: correlation scores (uncapped — softcap is monotone, ranking
+  # unchanged; matches ref.synopsis_score_ref).
+  s_ref[0, 0] = jnp.max(logits, axis=0)             # (bm,)
+
+  # Use 2: stage-1 attention partials over the same tile.
+  if cap is not None:
+    logits = cap * jnp.tanh(logits / cap)
+  logits = logits + cb_ref[0][None, :].astype(jnp.float32)
+
+  m_prev = m_s[:, 0]
+  m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+  p = jnp.exp(logits - m_new[:, None])
+  alpha = jnp.exp(m_prev - m_new)
+  l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+  acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+      p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+  m_s[:, 0] = m_new
+  l_s[:, 0] = l_new
+
+  @pl.when(m_idx == num_m_blocks - 1)
+  def _flush():
+    l_fin = l_s[:, 0]
+    o_ref[0] = acc[...] / jnp.maximum(l_fin, 1e-30)[:, None]
+    m_ref[0] = m_s[:, 0]
+    l_ref[0] = l_fin
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "cap", "block_m", "interpret"))
+def fused_synopsis_score_attention(
+    q: jax.Array,        # (B, H, D)
+    k_syn: jax.Array,    # (B, Hkv, M, D) centroid keys
+    v_syn: jax.Array,    # (B, Hkv, M, D) centroid values
+    cbias: jax.Array,    # (B, M) f32 log(count) bias (additive, log-space)
+    *,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+    block_m: int = 512,
+    interpret: bool = False,
+):
+  """Returns (scores (B,Hkv,M) f32, o (B,H,D) f32, m (B,H), l (B,H))."""
+  B, H, D = q.shape
+  _, Hkv, M, _ = k_syn.shape
+  G = H // Hkv
+  assert H == Hkv * G and k_syn.shape == v_syn.shape
+  block_m = min(block_m, M)
+  if M % block_m != 0:          # ragged centroid table: one whole-M tile
+    block_m = M
+  nm = M // block_m
+
+  fn = pl.pallas_call(
+      functools.partial(_kernel, sm_scale=sm_scale, cap=cap,
+                        num_m_blocks=nm),
+      grid=(B, Hkv, nm),
+      in_specs=[
+          pl.BlockSpec((1, G, D), lambda b, h, m: (b, h, 0)),
+          pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+          pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+          pl.BlockSpec((1, block_m), lambda b, h, m: (b, m)),
+      ],
+      out_specs=[
+          pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
+          pl.BlockSpec((1, G, D), lambda b, h, m: (b, h, 0)),
+          pl.BlockSpec((1, G), lambda b, h, m: (b, h)),
+          pl.BlockSpec((1, G), lambda b, h, m: (b, h)),
+      ],
+      out_shape=[
+          jax.ShapeDtypeStruct((B, Hkv, M), jnp.float32),
+          jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+          jax.ShapeDtypeStruct((B, H), jnp.float32),
+          jax.ShapeDtypeStruct((B, H), jnp.float32),
+      ],
+      scratch_shapes=[
+          pltpu.VMEM((G, D), jnp.float32),
+          pltpu.VMEM((G, 1), jnp.float32),
+          pltpu.VMEM((G, 1), jnp.float32),
+      ],
+      interpret=interpret,
+      name="fused_synopsis_score_attention",
+  )
+  scores, o, m, l = fn(q, k_syn, v_syn, cbias.astype(jnp.float32))
+  return scores, (o, m, l)

@@ -7,14 +7,28 @@
     lower to the CPU backend, and inlining the interpreter into a
     512-device SPMD program is not meaningful).
 
-``synopsis_attention`` is the end-to-end AccuracyTrader decode op:
-stage-1 centroid scoring + initial result, top-k ranking, stage-2
-block-gather refinement, exact online-softmax merge.
+Two generations of the AccuracyTrader decode op live here:
+
+  * :func:`synopsis_attention` — the original *unfused* composition
+    (score kernel + biased flash decode + block gather + merges).  Kept
+    as the benchmark baseline and the "paper algebra" oracle.
+  * the **fused pipeline** — :func:`synopsis_stage1` (one pass over
+    ``k_syn``/``v_syn`` emits scores AND count-biased stage-1 partials),
+    ``lax.top_k``, :func:`refine_stage2` (selected clusters' tokens +
+    decremental centroid masking + recent/self extras in one kernel), one
+    final merge.  :func:`synopsis_cache_attention` is the end-to-end op
+    the serving path calls; the sharded serve body composes the two
+    stages directly around its score all-gather.
+
+The fused pipeline reads the synopsis tables once instead of twice and
+replaces the serve step's materialized (B,Hkv,I*C,D) gather copies with
+scalar-prefetch-steered block DMAs on the Pallas path (the XLA impl keeps
+the gather — XLA cannot express the streaming form).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +36,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.block_gather_attention import block_gather_attention
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.fused_synopsis import fused_synopsis_score_attention
 from repro.kernels.synopsis_score import synopsis_score
 
 NEG_INF = ref.NEG_INF
@@ -35,21 +50,202 @@ def _scores(q, k_syn, sm_scale, impl):
                         interpret=(impl == "interpret"))
 
 
-def _decode(q, k, v, bias, sm_scale, impl, block_s=512):
+def _decode(q, k, v, bias, sm_scale, impl, block_s=512, cap=None):
   if impl == "xla":
-    return ref.flash_decode_ref(q, k, v, bias, sm_scale=sm_scale)
-  return flash_decode(q, k, v, bias, sm_scale=sm_scale, block_s=block_s,
-                      interpret=(impl == "interpret"))
+    return ref.flash_decode_ref(q, k, v, bias, sm_scale=sm_scale, cap=cap)
+  S = k.shape[2]
+  block_s = min(block_s, S)
+  if S % block_s != 0:          # ragged seq (e.g. whisper cross T=1500)
+    block_s = S
+  return flash_decode(q, k, v, bias, sm_scale=sm_scale, cap=cap,
+                      block_s=block_s, interpret=(impl == "interpret"))
 
 
-def _gather(q, k, v, selected, cluster_size, sm_scale, impl):
+def _gather(q, k, v, selected, cluster_size, sm_scale, impl, cap=None):
   if impl == "xla":
     return ref.block_gather_attention_ref(
         q, k, v, selected, cluster_size=cluster_size, sm_scale=sm_scale)
   return block_gather_attention(
       q, k, v, selected, cluster_size=cluster_size, sm_scale=sm_scale,
+      cap=cap, interpret=(impl == "interpret"))
+
+
+def count_bias(counts: jax.Array) -> jax.Array:
+  """log(count) stand-in weight of an unselected cluster's centroid."""
+  return jnp.log(jnp.maximum(counts, 1.0)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused pipeline stages (plain functions: they run inside the serve step's
+# layer scan and the sharded body, which are already traced/jitted).
+# ---------------------------------------------------------------------------
+
+def synopsis_stage1(q, k_syn, v_syn, counts, *, sm_scale: float,
+                    cap: Optional[float] = None, impl: str = "pallas"):
+  """One pass over the synopsis: (scores (B,Hkv,M), partials over ALL
+  centroids with log-count bias).  Selection masking happens
+  decrementally in stage 2."""
+  cbias = count_bias(counts)
+  if impl == "xla":
+    return ref.fused_synopsis_score_attention_ref(
+        q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap)
+  return fused_synopsis_score_attention(
+      q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap,
       interpret=(impl == "interpret"))
 
+
+def refine_stage2(q, k, v, selected, k_syn, v_syn, counts, *,
+                  cluster_size: int, sm_scale: float,
+                  cap: Optional[float] = None, impl: str = "pallas",
+                  extras: Optional[Tuple[jax.Array, jax.Array,
+                                         jax.Array]] = None,
+                  valid: Optional[jax.Array] = None):
+  """Selected clusters' original tokens (+), their centroid stage-1 terms
+  (-), and the recent/self extras (+) — one fused partial.
+
+  ``selected`` may contain -1 padding (skipped).  ``valid`` optionally
+  masks entries of ``selected`` that are in-range but not owned (sharded
+  path); centroid rows are gathered here (tiny: I rows, not I*C)."""
+  B, H, _ = q.shape
+  Hkv = k.shape[1]
+  sel = selected
+  if valid is not None:
+    sel = jnp.where(valid, selected, -1)
+  safe = jnp.maximum(sel, 0)
+  k_sel = jnp.take_along_axis(k_syn, safe[..., None], axis=2)
+  v_sel = jnp.take_along_axis(v_syn, safe[..., None], axis=2)
+  cb = count_bias(counts)                                     # (B, M)
+  sel_bias = jnp.take_along_axis(
+      jnp.broadcast_to(cb[:, None, :], (B, Hkv, cb.shape[-1])), safe,
+      axis=2)
+  ek, ev, eb = extras if extras is not None else (None, None, None)
+  if impl == "xla":
+    return ref.fused_gather_attention_ref(
+        q, k, v, sel, cluster_size=cluster_size, sm_scale=sm_scale,
+        cap=cap, k_sel=k_sel, v_sel=v_sel, sel_bias=sel_bias,
+        extras_k=ek, extras_v=ev, extras_bias=eb)
+  return block_gather_attention(
+      q, k, v, sel, cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
+      k_sel=k_sel, v_sel=v_sel, sel_bias=sel_bias,
+      extras_k=ek, extras_v=ev, extras_bias=eb,
+      interpret=(impl == "interpret"))
+
+
+def build_extras(recent_k=None, recent_v=None, recent_len=None,
+                 self_kv=None, *, pad_to: int = 16):
+  """Concatenate the recent ring buffer and the new token's self-KV into
+  one small (B, Hkv, E, D) extras block + (B, E) validity bias, padded so
+  the kernel tile is sublane-aligned.  Returns None when there is
+  nothing to fold in."""
+  ks, vs, biases = [], [], []
+  if recent_k is not None:
+    B, _, R, _ = recent_k.shape
+    ks.append(recent_k)
+    vs.append(recent_v)
+    if recent_len is None:
+      biases.append(jnp.zeros((B, R), jnp.float32))
+    else:
+      biases.append(jnp.where(
+          jnp.arange(R)[None, :] < recent_len[:, None], 0.0, NEG_INF))
+  if self_kv is not None:
+    k1, v1 = self_kv                                          # (B,Hkv,1,D)
+    ks.append(k1)
+    vs.append(v1)
+    biases.append(jnp.zeros((k1.shape[0], k1.shape[2]), jnp.float32))
+  if not ks:
+    return None
+  ke = jnp.concatenate(ks, axis=2) if len(ks) > 1 else ks[0]
+  ve = jnp.concatenate(vs, axis=2) if len(vs) > 1 else vs[0]
+  eb = jnp.concatenate(biases, axis=1) if len(biases) > 1 else biases[0]
+  E = ke.shape[2]
+  Ep = -(-E // pad_to) * pad_to
+  if Ep != E:
+    pad = [(0, 0), (0, 0), (0, Ep - E), (0, 0)]
+    ke = jnp.pad(ke, pad)
+    ve = jnp.pad(ve, pad)
+    eb = jnp.pad(eb, [(0, 0), (0, Ep - E)], constant_values=NEG_INF)
+  return ke, ve, eb.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("i_max", "cluster_size", "sm_scale", "cap", "impl"))
+def synopsis_cache_attention(
+    q: jax.Array,        # (B, H, D)   one decode step's queries
+    k: jax.Array,        # (B, Hkv, S, D) cluster-contiguous original keys
+    v: jax.Array,        # (B, Hkv, S, D)
+    k_syn: jax.Array,    # (B, Hkv, M, D) centroid keys
+    v_syn: jax.Array,    # (B, Hkv, M, D) centroid values
+    counts: jax.Array,   # (B, M)
+    recent_k: Optional[jax.Array] = None,   # (B, Hkv, R, D)
+    recent_v: Optional[jax.Array] = None,
+    recent_len: Optional[jax.Array] = None,  # (B,)
+    self_k: Optional[jax.Array] = None,      # (B, Hkv, 1, D)
+    self_v: Optional[jax.Array] = None,
+    *,
+    i_max: int,
+    cluster_size: int,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+    impl: str = "pallas",
+):
+  """End-to-end fused AccuracyTrader decode attention over a serve-step
+  cache slice: O(M + i_max*C + R) with k_syn/v_syn read ONCE.  Returns
+  the normalised output (B, H, D) f32."""
+  B, H, _ = q.shape
+  Hkv, M = k_syn.shape[1], k_syn.shape[2]
+  scores, p_syn = synopsis_stage1(q, k_syn, v_syn, counts,
+                                  sm_scale=sm_scale, cap=cap, impl=impl)
+  if i_max > 0:
+    _, selected = jax.lax.top_k(scores, min(i_max, M))
+    selected = selected.astype(jnp.int32)
+  else:
+    selected = jnp.full((B, Hkv, 1), -1, jnp.int32)
+  self_kv = (self_k, self_v) if self_k is not None else None
+  extras = build_extras(recent_k, recent_v, recent_len, self_kv)
+  p_ref = refine_stage2(
+      q, k, v, selected, k_syn, v_syn, counts, cluster_size=cluster_size,
+      sm_scale=sm_scale, cap=cap, impl=impl, extras=extras)
+  out, _, _ = merge_partials(p_syn, p_ref)
+  return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("i_max", "sm_scale", "impl", "return_diag"))
+def synopsis_attention_fused(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    k_syn: jax.Array,
+    v_syn: jax.Array,
+    counts: jax.Array,
+    *,
+    i_max: int,
+    sm_scale: float = 1.0,
+    impl: str = "pallas",
+    return_diag: bool = False,
+):
+  """Fused drop-in for :func:`synopsis_attention` (same contract): one
+  synopsis pass + decremental refinement instead of score + masked decode
+  + gather + merge."""
+  M = k_syn.shape[2]
+  scores, p_syn = synopsis_stage1(q, k_syn, v_syn, counts,
+                                  sm_scale=sm_scale, impl=impl)
+  _, selected = jax.lax.top_k(scores, min(i_max, M))
+  selected = selected.astype(jnp.int32)
+  C = k.shape[2] // M
+  p_ref = refine_stage2(q, k, v, selected, k_syn, v_syn, counts,
+                        cluster_size=C, sm_scale=sm_scale, impl=impl)
+  out, m, l = merge_partials(p_syn, p_ref)
+  if return_diag:
+    return out, (scores, selected, m, l)
+  return out
+
+
+# ---------------------------------------------------------------------------
+# Unfused composition (benchmark baseline + paper-algebra oracle).
+# ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit,
@@ -72,6 +268,10 @@ def synopsis_attention(
   Unselected clusters contribute count-weighted centroid terms (stage 1);
   the top-``i_max`` clusters contribute their original tokens exactly
   (stage 2).  With ``i_max == M`` this equals exact attention.
+
+  Unfused: the synopsis is read twice (scores, then masked decode) and
+  the three partials merge separately — the baseline the fused pipeline
+  is benchmarked against.
   """
   M = k_syn.shape[2]
   scores = _scores(q, k_syn, sm_scale, impl)            # (B, Hkv, M)
@@ -93,15 +293,17 @@ def synopsis_attention(
   return out
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "impl"))
+@functools.partial(jax.jit, static_argnames=("sm_scale", "cap", "impl"))
 def exact_decode_attention(q, k, v, bias=None, *, sm_scale: float = 1.0,
+                           cap: Optional[float] = None,
                            impl: str = "pallas"):
   """Exact GQA decode (baseline); returns normalised output only."""
-  out, _, _ = _decode(q, k, v, bias, sm_scale, impl)
+  out, _, _ = _decode(q, k, v, bias, sm_scale, impl, cap=cap)
   return out
 
 
 def decode_partials(q, k, v, bias=None, *, sm_scale: float = 1.0,
+                    cap: Optional[float] = None,
                     impl: str = "pallas") -> Tuple[jax.Array, ...]:
   """Exact decode returning (out, m, l) — for cross-shard (SP) merging."""
-  return _decode(q, k, v, bias, sm_scale, impl)
+  return _decode(q, k, v, bias, sm_scale, impl, cap=cap)

@@ -25,6 +25,12 @@ Partials = Tuple[jax.Array, jax.Array, jax.Array]
 NEG_INF = -1e30
 
 
+def _softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+  if cap is None:
+    return logits
+  return cap * jnp.tanh(logits / cap)
+
+
 def flash_decode_ref(
     q: jax.Array,            # (B, H, D)
     k: jax.Array,            # (B, Hkv, S, D)
@@ -32,13 +38,16 @@ def flash_decode_ref(
     bias: Optional[jax.Array] = None,   # (B, Hkv, S) additive (log-space)
     *,
     sm_scale: float = 1.0,
+    cap: Optional[float] = None,
 ) -> Partials:
   """Exact GQA decode attention over the whole key set."""
   B, H, D = q.shape
   _, Hkv, S, _ = k.shape
   G = H // Hkv
   qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
-  logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * sm_scale
+  logits = _softcap(
+      jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * sm_scale,
+      cap)
   if bias is not None:
     logits = logits + bias[:, :, None, :].astype(jnp.float32)
   m = jnp.max(logits, axis=-1)                               # (B,Hkv,G)
@@ -101,6 +110,107 @@ def block_gather_attention_ref(
   qg = q.reshape(B, Hkv, G, D)
   out, m, l = jax.vmap(jax.vmap(one_bh))(qg, k, v, selected)
   return (out.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def fused_synopsis_score_attention_ref(
+    q: jax.Array,            # (B, H, D)
+    k_syn: jax.Array,        # (B, Hkv, M, D)
+    v_syn: jax.Array,        # (B, Hkv, M, D)
+    cbias: jax.Array,        # (B, M) f32 log(count) bias
+    *,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+) -> Tuple[jax.Array, Partials]:
+  """Single-read oracle for the fused score+stage-1 kernel: the centroid
+  logits are computed ONCE and reused for both the correlation scores
+  (max over the GQA group, uncapped) and the count-biased stage-1
+  partials over ALL centroids (the selected-cluster mask is applied
+  decrementally downstream — see fused_gather_attention_ref)."""
+  B, H, D = q.shape
+  _, Hkv, M, _ = k_syn.shape
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+  raw = jnp.einsum("bhgd,bhmd->bhgm", qg,
+                   k_syn.astype(jnp.float32)) * sm_scale
+  scores = jnp.max(raw, axis=2)                              # (B, Hkv, M)
+  logits = _softcap(raw, cap) + cbias[:, None, None, :].astype(jnp.float32)
+  m = jnp.maximum(jnp.max(logits, axis=-1), NEG_INF)
+  p = jnp.exp(logits - m[..., None])
+  l = jnp.sum(p, axis=-1)
+  out = jnp.einsum("bhgs,bhsd->bhgd", p, v_syn.astype(jnp.float32))
+  out = out / jnp.maximum(l, 1e-30)[..., None]
+  return scores, (out.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def fused_gather_attention_ref(
+    q: jax.Array,            # (B, H, D)
+    k: jax.Array,            # (B, Hkv, S, D) cluster-contiguous originals
+    v: jax.Array,
+    selected: jax.Array,     # (B, Hkv, I) int32 cluster ids (pad: -1)
+    *,
+    cluster_size: int,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+    k_sel: Optional[jax.Array] = None,        # (B, Hkv, I, D) centroids
+    v_sel: Optional[jax.Array] = None,
+    sel_bias: Optional[jax.Array] = None,     # (B, Hkv, I) log-count bias
+    extras_k: Optional[jax.Array] = None,     # (B, Hkv, E, D)
+    extras_v: Optional[jax.Array] = None,
+    extras_bias: Optional[jax.Array] = None,  # (B, E)
+) -> Partials:
+  """Oracle for the fused stage-2 epilogue: selected clusters' tokens
+  (positive), their centroid stage-1 terms (negative — decremental
+  masking), and recent/self extras (positive), in one signed softmax
+  accumulation.  The XLA impl of the serving path IS this function (it
+  keeps the materialized gather; only the Pallas path streams blocks)."""
+  B, H, D = q.shape
+  _, Hkv, S, _ = k.shape
+  C = cluster_size
+  G = H // Hkv
+  qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+
+  starts = jnp.maximum(selected, 0) * C                       # (B,Hkv,I)
+  idx = starts[..., None] + jnp.arange(C)[None, None, None]   # (B,Hkv,I,C)
+  idx = idx.reshape(B, Hkv, -1)
+  kg = jnp.take_along_axis(k, idx[..., None], axis=2)
+  vg = jnp.take_along_axis(v, idx[..., None], axis=2)
+  valid = jnp.repeat(selected >= 0, C, axis=-1)               # (B,Hkv,I*C)
+  lt = _softcap(jnp.einsum("bhgd,bhsd->bhgs", qg,
+                           kg.astype(jnp.float32)) * sm_scale, cap)
+  lt = jnp.where(valid[:, :, None, :], lt, NEG_INF)
+
+  pieces = [(lt, vg, 1.0)]
+  if k_sel is not None:
+    lc = _softcap(jnp.einsum("bhgd,bhid->bhgi", qg,
+                             k_sel.astype(jnp.float32)) * sm_scale, cap)
+    lc = lc + sel_bias[:, :, None, :].astype(jnp.float32)
+    lc = jnp.where((selected >= 0)[:, :, None, :], lc, NEG_INF)
+    pieces.append((lc, v_sel, -1.0))
+  if extras_k is not None:
+    le = _softcap(jnp.einsum("bhgd,bhed->bhge", qg,
+                             extras_k.astype(jnp.float32)) * sm_scale, cap)
+    le = le + extras_bias[:, None, None, :].astype(jnp.float32)
+    pieces.append((le, extras_v, 1.0))
+
+  m = jnp.maximum(
+      _max_over([p[0].max(axis=-1) for p in pieces]), NEG_INF)
+  l = jnp.zeros_like(m)
+  acc = jnp.zeros((B, Hkv, G, D), jnp.float32)
+  for logits, values, sign in pieces:
+    p = jnp.exp(logits - m[..., None])
+    l = l + sign * jnp.sum(p, axis=-1)
+    acc = acc + sign * jnp.einsum("bhgs,bhsd->bhgd", p,
+                                  values.astype(jnp.float32))
+  safe = jnp.where(jnp.abs(l) > 1e-30, l, 1.0)
+  out = acc / safe[..., None]
+  return (out.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def _max_over(xs):
+  m = xs[0]
+  for x in xs[1:]:
+    m = jnp.maximum(m, x)
+  return m
 
 
 def merge_partials(a: Partials, b: Partials) -> Partials:

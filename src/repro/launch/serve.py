@@ -23,6 +23,11 @@ def main():
   ap.add_argument("--tokens", type=int, default=32)
   ap.add_argument("--mode", default="synopsis",
                   choices=["exact", "synopsis"])
+  ap.add_argument("--impl", default=None,
+                  choices=["auto", "pallas", "xla", "interpret"],
+                  help="decode-attention implementation; default: the "
+                       "config's synopsis.impl (auto = fused Pallas "
+                       "kernels on TPU, XLA reference elsewhere)")
   ap.add_argument("--deadline-ms", type=float, default=50.0)
   args = ap.parse_args()
 
@@ -50,6 +55,10 @@ def main():
   jax.block_until_ready(logits)
   print(f"[prefill] {S} tokens in {time.time() - t0:.2f}s")
 
+  from repro.serve.serve_step import resolve_impl
+  impl = resolve_impl(args.impl if args.impl else cfg.synopsis.impl)
+  print(f"[impl] decode attention via {impl!r}")
+
   mode = args.mode if n_attn_positions(cfg) else "exact"
   if mode == "synopsis":
     cache = jax.jit(lambda c: skv.build(c, cfg))(cache)
@@ -66,7 +75,7 @@ def main():
     budget = ctrl.budget_for(args.deadline_ms) if mode == "synopsis" else 0
     if (mode, budget) not in steps:
       steps[(mode, budget)] = jax.jit(
-          make_serve_step(cfg, mode=mode, i_max=budget))
+          make_serve_step(cfg, mode=mode, i_max=budget, impl=impl))
     t0 = time.time()
     logits, st = steps[(mode, budget)](params, cache, tok)
     jax.block_until_ready(logits)

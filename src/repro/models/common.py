@@ -98,6 +98,10 @@ class SynopsisConfig:
   cluster_size: int = 128         # C: original tokens per aggregated point
   i_max: int = 32                 # default refinement budget (clusters)
   recent: int = 128               # exact-attention ring buffer (new tokens)
+  # Decode-attention implementation: "auto" resolves to the fused Pallas
+  # kernel suite on TPU and the XLA reference path elsewhere; "interpret"
+  # runs the Pallas kernels under the interpreter (CPU validation).
+  impl: str = "auto"              # "auto" | "pallas" | "xla" | "interpret"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,6 +7,22 @@ ring buffer and the new token, all merged by online-softmax partials
 (O(S/C + i_max*C + R)).  This is what makes `long_500k` runnable for
 attention architectures.
 
+The attention math lives in the kernel suite (``repro.kernels.ops``)
+behind an ``impl`` switch plumbed from the serve config / launcher down
+through the layer scan:
+
+  * ``impl="pallas"`` (the default on TPU) — the fused kernels:
+    `fused_synopsis_score_attention` reads ``k_syn``/``v_syn`` ONCE for
+    both the stage-1 scores and the count-biased partials, and
+    `block_gather_attention`'s fused epilogue streams the selected
+    clusters by scalar-prefetched block DMA (no materialized
+    (B,Hkv,I*C,D) gather copies), subtracts the selected centroids'
+    stage-1 terms (decremental masking) and folds the recent-ring +
+    self-KV partials into the same grid — one merge per layer instead of
+    three.
+  * ``impl="xla"`` — mathematically identical pure-jnp path (CPU tests,
+    multi-pod dry-run); ``impl="interpret"`` — Pallas interpreter.
+
 The layer loop mirrors training: one ``lax.scan`` over super-blocks whose
 xs are (stacked params, stacked cache slices); only *changed* state (SSM
 states, per-layer KV deltas) is emitted as ys, so the big caches are
@@ -25,13 +41,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.kernels import ops
 from repro.models import attention as attn_lib
 from repro.models import common as cm
 from repro.models import ssm as ssm_lib
 from repro.models import transformer as tf
-from repro.models.layers import einsum, rms_norm, rope, softcap
+from repro.models.layers import einsum, rms_norm, softcap
 
 NEG_INF = -1e30
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+  """"auto"/None -> fused Pallas on TPU, XLA reference elsewhere."""
+  if impl in ("pallas", "xla", "interpret"):
+    return impl
+  return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
 def _seq_axes():
@@ -45,49 +69,9 @@ def _seq_axes():
 
 
 # ---------------------------------------------------------------------------
-# Partial-attention algebra (softcap-aware; decode shapes: q (B,H,Dk)).
+# Decode attention over a layer's cache slice — thin wrappers over the
+# kernel-suite ops (all partial algebra now lives in repro.kernels).
 # ---------------------------------------------------------------------------
-
-def _partials(q, k, v, *, sm_scale, bias=None, cap=None):
-  """q (B,H,Dk), k (B,Hkv,S,Dk), v (B,Hkv,S,Dv), bias (B,Hkv,S)."""
-  B, H, _ = q.shape
-  Hkv = k.shape[1]
-  G = H // Hkv
-  qg = q.reshape(B, Hkv, G, -1).astype(jnp.float32)
-  logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
-                      k.astype(jnp.float32)) * sm_scale
-  logits = softcap(logits, cap)
-  if bias is not None:
-    logits = logits + bias[:, :, None, :].astype(jnp.float32)
-  m = jnp.maximum(jnp.max(logits, axis=-1), NEG_INF)
-  p = jnp.exp(logits - m[..., None])
-  l = jnp.sum(p, axis=-1)
-  o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
-  o = o / jnp.maximum(l, 1e-30)[..., None]
-  Dv = v.shape[-1]
-  return (o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H))
-
-
-def _merge(a, b):
-  oa, ma, la = a
-  ob, mb, lb = b
-  m = jnp.maximum(ma, mb)
-  wa = la * jnp.exp(ma - m)
-  wb = lb * jnp.exp(mb - m)
-  l = jnp.maximum(wa + wb, 1e-30)
-  o = (oa * wa[..., None] + ob * wb[..., None]) / l[..., None]
-  return (o, m, l)
-
-
-def _gather_clusters(kv, selected, C):
-  """kv (B,Hkv,S,D), selected (B,Hkv,I) -> (B,Hkv,I*C,D)."""
-  B, Hkv, S, D = kv.shape
-  I = selected.shape[-1]
-  starts = jnp.maximum(selected, 0) * C                       # (B,Hkv,I)
-  idx = starts[..., None] + jnp.arange(C)[None, None, None]   # (B,Hkv,I,C)
-  idx = idx.reshape(B, Hkv, I * C)
-  return jnp.take_along_axis(kv, idx[..., None], axis=2)
-
 
 def synopsis_decode_attention(
     q: jax.Array,            # (B, H, Dk) rope'd new-token queries
@@ -98,62 +82,21 @@ def synopsis_decode_attention(
     sm_scale: float,
     cap: Optional[float] = None,
     self_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    impl: str = "xla",
 ):
   """AccuracyTrader Algorithm 1 on a KV cache; returns (B, H, Dv)."""
-  k_syn, v_syn = cache["k_syn"], cache["v_syn"]
-  counts = cache["counts"]
-  M = k_syn.shape[2]
-  B, H, _ = q.shape
-  Hkv = k_syn.shape[1]
-  G = H // Hkv
-
-  # Stage 1 (line 1): correlations c_i from the synopsis.
-  qg = q.reshape(B, Hkv, G, -1).astype(jnp.float32)
-  scores = jnp.einsum("bhgd,bhmd->bhgm", qg,
-                      k_syn.astype(jnp.float32)).max(axis=2) * sm_scale
-
-  parts = None
-  if i_max > 0:
-    # Lines 2-3: rank and select.
-    _, selected = jax.lax.top_k(scores, min(i_max, M))
-    selected = selected.astype(jnp.int32)
-    sel_onehot = jnp.any(jax.nn.one_hot(selected, M, dtype=jnp.bool_),
-                         axis=2)                              # (B,Hkv,M)
-    syn_bias = jnp.where(sel_onehot, NEG_INF,
-                         jnp.log(jnp.maximum(counts, 1.0))[:, None, :])
-    # Stage 2 (lines 4-10): exact attention over the selected clusters.
-    kg = _gather_clusters(cache["k"], selected, cluster_size)
-    vg = _gather_clusters(cache["v"], selected, cluster_size)
-    parts = _partials(q, kg, vg, sm_scale=sm_scale, cap=cap)
-    p_syn = _partials(q, k_syn, v_syn, sm_scale=sm_scale, bias=syn_bias,
-                      cap=cap)
-  else:
-    syn_bias = jnp.log(jnp.maximum(counts, 1.0))[:, None, :] * jnp.ones(
-        (B, Hkv, M), jnp.float32)
-    p_syn = _partials(q, k_syn, v_syn, sm_scale=sm_scale, bias=syn_bias,
-                      cap=cap)
-  out = _merge(p_syn, parts) if parts is not None else p_syn
-
-  # Recent ring buffer (tokens since last synopsis update) — exact.
-  if "recent_k" in cache:
-    R = cache["recent_k"].shape[2]
-    rl = cache["recent_len"]                                  # (B,)
-    rbias = jnp.where(jnp.arange(R)[None, :] < rl[:, None], 0.0, NEG_INF)
-    rbias = jnp.broadcast_to(rbias[:, None], (B, Hkv, R))
-    p_rec = _partials(q, cache["recent_k"], cache["recent_v"],
-                      sm_scale=sm_scale, bias=rbias, cap=cap)
-    out = _merge(out, p_rec)
-
-  if self_kv is not None:
-    k1, v1 = self_kv                                          # (B,Hkv,1,D)
-    p_self = _partials(q, k1, v1, sm_scale=sm_scale, cap=cap)
-    out = _merge(out, p_self)
-  return out[0]
+  self_k, self_v = self_kv if self_kv is not None else (None, None)
+  return ops.synopsis_cache_attention(
+      q, cache["k"], cache["v"], cache["k_syn"], cache["v_syn"],
+      cache["counts"], cache.get("recent_k"), cache.get("recent_v"),
+      cache.get("recent_len"), self_k, self_v,
+      i_max=i_max, cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
+      impl=impl)
 
 
 def sharded_synopsis_attention(
     q, cache, *, i_max, cluster_size, sm_scale, cap=None, self_kv=None,
-    seq_axes=("model",),
+    seq_axes=("model",), impl="xla",
 ):
   """AccuracyTrader decode attention with the KV cache + synopsis sharded
   over ``seq_axes`` — the paper's n-component scatter-gather, made
@@ -163,7 +106,13 @@ def sharded_synopsis_attention(
   of shard partials is the result composer.  Collectives per layer: one
   (B,Hkv,M) f32 all-gather + one (B,H,D+2) partials all-gather — vs. the
   GSPMD fallback which all-gathers the whole cache shard (see
-  EXPERIMENTS.md §Perf iteration 1)."""
+  EXPERIMENTS.md §Perf iteration 1).
+
+  The shard-local body is the same two fused kernel stages as the
+  single-device path (stage-1 fused score+attention over the local
+  centroids, decremental stage-2 over locally-owned selected clusters);
+  the recent/self extras fold into shard 0's stage-2 launch so they are
+  counted exactly once."""
   from repro.dist import sharding as shd  # noqa: PLC0415
   from jax.sharding import PartitionSpec as P  # noqa: PLC0415
   mesh = shd.current_mesh()
@@ -176,7 +125,7 @@ def sharded_synopsis_attention(
   if not axes or M % nshards != 0 or nshards == 1:
     return synopsis_decode_attention(
         q, cache, i_max=i_max, cluster_size=cluster_size,
-        sm_scale=sm_scale, cap=cap, self_kv=self_kv)
+        sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl)
 
   # The batch dim stays DP-sharded: it must be *manual* too, else the
   # shard_map boundary would force-replicate it (a (B,Hkv,S/16,D) gather).
@@ -211,42 +160,37 @@ def sharded_synopsis_attention(
       for a in axes:
         sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
       k_syn = cache["k_syn"]
-      B, Hkv = k_syn.shape[0], k_syn.shape[1]
-      H = q.shape[1]
-      G = H // Hkv
 
-      # Stage 1 local scores, then one small all-gather for global rank.
-      qg = q.reshape(B, Hkv, G, -1).astype(jnp.float32)
-      sc_local = jnp.einsum("bhgd,bhmd->bhgm", qg,
-                            k_syn.astype(jnp.float32)).max(2) * sm_scale
+      # Stage 1 (fused): local scores + local count-biased partials in
+      # one pass; then one small all-gather for the global ranking.
+      sc_local, p_syn = ops.synopsis_stage1(
+          q, k_syn, cache["v_syn"], cache["counts"], sm_scale=sm_scale,
+          cap=cap, impl=impl)
       sc = sc_local
       for a in reversed(axes):
         sc = jax.lax.all_gather(sc, a, axis=2, tiled=True)   # (B,Hkv,M)
       _, selected = jax.lax.top_k(sc, min(i_max, M))
       selected = selected.astype(jnp.int32)
 
-      # Stage 2: refine only the clusters this shard owns.
+      # Stage 2 (fused epilogue): refine only the clusters this shard
+      # owns; the decrement removes their centroid terms from p_syn.
       lo = sid * M_local
       sel_rel = selected - lo
       mine = (sel_rel >= 0) & (sel_rel < M_local)
       sel_local = jnp.where(mine, sel_rel, -1)
-      kg = _gather_clusters(cache["k"], jnp.maximum(sel_local, 0),
-                            cluster_size)
-      vg = _gather_clusters(cache["v"], jnp.maximum(sel_local, 0),
-                            cluster_size)
-      gbias = jnp.where(jnp.repeat(mine, cluster_size, axis=-1), 0.0,
-                        NEG_INF)
-      p_ref = _partials(q, kg, vg, sm_scale=sm_scale, bias=gbias, cap=cap)
 
-      sel_onehot = jnp.any(
-          jax.nn.one_hot(sel_local, M_local, dtype=jnp.bool_)
-          & mine[..., None], axis=2)
-      syn_bias = jnp.where(
-          sel_onehot, NEG_INF,
-          jnp.log(jnp.maximum(cache["counts"], 1.0))[:, None, :])
-      p_syn = _partials(q, k_syn, cache["v_syn"], sm_scale=sm_scale,
-                        bias=syn_bias, cap=cap)
-      part = _merge(p_syn, p_ref)
+      extras = ops.build_extras(
+          cache.get("recent_k"), cache.get("recent_v"),
+          cache.get("recent_len"), self_kv)
+      if extras is not None:
+        ek, ev, eb = extras
+        eb = jnp.where(sid == 0, eb, NEG_INF)   # count extras once
+        extras = (ek, ev, eb)
+      p_ref = ops.refine_stage2(
+          q, cache["k"], cache["v"], sel_local, k_syn, cache["v_syn"],
+          cache["counts"], cluster_size=cluster_size, sm_scale=sm_scale,
+          cap=cap, impl=impl, extras=extras)
+      part = ops.merge_partials(p_syn, p_ref)
 
       # Compose shard partials (the paper's result composer).
       o, m_, l_ = part
@@ -257,23 +201,10 @@ def sharded_synopsis_attention(
       og, mg, lg = gathered
       acc = (og[0], mg[0], lg[0])
       for i in range(1, og.shape[0]):
-        acc = _merge(acc, (og[i], mg[i], lg[i]))
-
-      if "recent_k" in cache:
-        R = cache["recent_k"].shape[2]
-        rl = cache["recent_len"]
-        rbias = jnp.where(jnp.arange(R)[None, :] < rl[:, None], 0.0,
-                          NEG_INF)
-        rbias = jnp.broadcast_to(rbias[:, None], (B, Hkv, R))
-        acc = _merge(acc, _partials(q, cache["recent_k"],
-                                    cache["recent_v"], sm_scale=sm_scale,
-                                    bias=rbias, cap=cap))
-      if self_kv is not None:
-        acc = _merge(acc, _partials(q, self_kv[0], self_kv[1],
-                                    sm_scale=sm_scale, cap=cap))
+        acc = ops.merge_partials(acc, (og[i], mg[i], lg[i]))
       return acc[0]
 
-  return jax.shard_map(
+  return shd.shard_map(
       body, mesh=mesh, in_specs=(q_spec, specs, self_spec),
       out_specs=q_spec if dp else P(),
       axis_names=manual, check_vma=False,
@@ -281,14 +212,17 @@ def sharded_synopsis_attention(
 
 
 def exact_decode_attention(q, k, v, *, sm_scale, cap=None, self_kv=None,
-                           window: Optional[int] = None):
+                           window: Optional[int] = None, impl="xla"):
   if window is not None and window < k.shape[2]:
     k = k[:, :, -window:]
     v = v[:, :, -window:]
-  out = _partials(q, k, v, sm_scale=sm_scale, cap=cap)
+  out = ops.decode_partials(q, k, v, sm_scale=sm_scale, cap=cap, impl=impl)
   if self_kv is not None:
-    out = _merge(out, _partials(q, self_kv[0], self_kv[1],
-                                sm_scale=sm_scale, cap=cap))
+    # One-token self partial: always the jnp path (a (B,Hkv,1,D) einsum
+    # is cheaper than a kernel launch and tile-shape agnostic).
+    out = ops.merge_partials(
+        out, ops.decode_partials(q, self_kv[0], self_kv[1],
+                                 sm_scale=sm_scale, cap=cap, impl="xla"))
   return out[0]
 
 
@@ -297,7 +231,7 @@ def exact_decode_attention(q, k, v, *, sm_scale, cap=None, self_kv=None,
 # ---------------------------------------------------------------------------
 
 def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
-                       mode, i_max):
+                       mode, i_max, impl):
   """x (B,1,d); cache_sl: this layer's cache slice.  Returns (y, delta)."""
   B = x.shape[0]
   positions = pos[:, None]                                    # (B,1)
@@ -315,10 +249,11 @@ def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
       ctx = sharded_synopsis_attention(
           q_eff, cache_sl, i_max=i_max,
           cluster_size=cfg.synopsis.cluster_size, sm_scale=sm_scale,
-          self_kv=self_kv, seq_axes=_seq_axes())
+          self_kv=self_kv, seq_axes=_seq_axes(), impl=impl)
     else:
       ctx = exact_decode_attention(q_eff, cache_sl["k"], cache_sl["v"],
-                                   sm_scale=sm_scale, self_kv=self_kv)
+                                   sm_scale=sm_scale, self_kv=self_kv,
+                                   impl=impl)
     # ctx is a latent-space context (B, H, r+rope); drop the rope part and
     # decompress per head via wv_b.
     ctx_lat = ctx[..., :m.kv_lora_rank]
@@ -335,28 +270,28 @@ def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
       ctx = exact_decode_attention(
           q, cache_sl["k"], cache_sl["v"], sm_scale=sm_scale,
           cap=cfg.attn_softcap, self_kv=(kd, vd),
-          window=cfg.sliding_window)
+          window=cfg.sliding_window, impl=impl)
     elif mode == "synopsis":
       ctx = sharded_synopsis_attention(
           q, cache_sl, i_max=i_max, cluster_size=cfg.synopsis.cluster_size,
           sm_scale=sm_scale, cap=cfg.attn_softcap, self_kv=(kd, vd),
-          seq_axes=_seq_axes())
+          seq_axes=_seq_axes(), impl=impl)
     else:
       ctx = exact_decode_attention(
           q, cache_sl["k"], cache_sl["v"], sm_scale=sm_scale,
-          cap=cfg.attn_softcap, self_kv=(kd, vd))
+          cap=cfg.attn_softcap, self_kv=(kd, vd), impl=impl)
     y = attn_lib.out_proj(ctx[:, None].astype(x.dtype), lp, x.dtype)
     delta = (kd, vd)
   return y, delta
 
 
-def _cross_decode_layer(x, lp, cfg, cache_sl):
+def _cross_decode_layer(x, lp, cfg, cache_sl, impl):
   q = einsum("bsd,dhk->bshk", x, lp["wq"]).astype(x.dtype)
   if "bq" in lp:
     q = q + lp["bq"][None, None].astype(x.dtype)
   ctx = exact_decode_attention(q[:, 0], cache_sl["cross_k"],
                                cache_sl["cross_v"],
-                               sm_scale=cfg.hd ** -0.5)
+                               sm_scale=cfg.hd ** -0.5, impl=impl)
   return attn_lib.out_proj(ctx[:, None].astype(x.dtype), lp, x.dtype)
 
 
@@ -365,10 +300,15 @@ def _cross_decode_layer(x, lp, cfg, cache_sl):
 # ---------------------------------------------------------------------------
 
 def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
-                    i_max: Optional[int] = None):
+                    i_max: Optional[int] = None,
+                    impl: Optional[str] = None):
   """Returns serve_step(params, cache, tokens) ->
-  (logits (B, vocab), new_state dict with ssm/kv deltas)."""
+  (logits (B, vocab), new_state dict with ssm/kv deltas).
+
+  ``impl`` overrides ``cfg.synopsis.impl``; both default to "auto"
+  (fused Pallas kernels on TPU, XLA reference elsewhere)."""
   i_max = cfg.synopsis.i_max if i_max is None else i_max
+  impl = resolve_impl(impl if impl is not None else cfg.synopsis.impl)
   pattern = cfg.block_pattern
 
   def serve_step(params, cache, tokens):
@@ -396,7 +336,8 @@ def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
           if "recent_len" in csl:
             layer_cache["recent_len"] = csl["recent_len"]
           mix, delta = _attn_decode_layer(h, lp["attn"], cfg, spec,
-                                          layer_cache, pos, mode, i_max)
+                                          layer_cache, pos, mode, i_max,
+                                          impl)
           deltas.setdefault("k_delta", []).append(delta[0])
           deltas.setdefault("v_delta", []).append(delta[1])
           ai += 1
@@ -418,7 +359,7 @@ def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
             hc = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
             ccache = {"cross_k": csl["cross_k"][ai - 1],
                       "cross_v": csl["cross_v"][ai - 1]}
-            x = x + _cross_decode_layer(hc, lp["cross"], cfg, ccache)
+            x = x + _cross_decode_layer(hc, lp["cross"], cfg, ccache, impl)
           if "ln2" in lp:
             h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
             f, _ = tf._ffn(h2, lp, cfg, spec)

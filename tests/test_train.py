@@ -86,8 +86,10 @@ def test_microbatching_matches_full_batch():
       state, batch)
   p1 = jax.tree.leaves(s1["params"])[0]
   p2 = jax.tree.leaves(s2["params"])[0]
-  np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=2e-3,
-                             atol=2e-5)
+  # bf16 forward + different accumulation order => ~1e-3 relative grad
+  # noise, amplified by Adam's scale-invariant update where v is tiny.
+  np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-2,
+                             atol=1e-4)
 
 
 def test_checkpoint_roundtrip(tmp_path):

@@ -2,7 +2,7 @@
 target, validated in interpret mode — wall times here are CPU-relative
 but the *ratios* exact/synopsis and fused/unfused transfer).
 
-Three sweeps:
+Five sweeps:
 
   * ``decode_attention_sweep`` — the paper headline: exact O(S) decode vs
     the synopsis path, plus the fused pipeline.
@@ -14,6 +14,13 @@ Three sweeps:
     fused vs unfused pipeline.
   * ``pallas_vs_xla_sweep`` — interpret-mode sanity ratio at a small
     shape (on TPU rerun with impl="pallas" for real numbers).
+  * ``prefill_sweep`` — the PR 2 tentpole, prefill half: the remat'd
+    chunked causal scan (the old prefill path) vs the forward-only
+    facade, plus an interpret-mode smoke of the flash kernel.
+  * ``build_sweep`` — synopsis build: the permute/mean chain timed as two
+    separately-jitted launches (sorted cache written to HBM, then re-read
+    for the mean — the structure the fused segment-build kernel replaces)
+    vs the single-jit facade, plus an interpret-mode smoke.
 """
 from __future__ import annotations
 
@@ -120,6 +127,105 @@ def fusion_sweep() -> Dict[str, float]:
     out[f"e2e_unfused_S{S}_us"] = t_eu
     out[f"e2e_fused_S{S}_us"] = t_ef
     out[f"e2e_fused_speedup_S{S}"] = t_eu / t_ef
+  return out
+
+
+def prefill_sweep(impl: str | None = None) -> Dict[str, float]:
+  """Prefill attention: the remat'd chunked causal scan (training path —
+  what prefill used to run) vs the forward-only prefill facade.  On CPU
+  both lower to near-identical XLA; the transferable claim is structural
+  (the Pallas path block-tiles with in-grid causal skip and no remat
+  bookkeeping).  The interpret entry runs the real flash kernel under the
+  Pallas interpreter at a small shape as a correctness/ratio smoke."""
+  from repro.models.layers import causal_attention
+  impl = impl or ("pallas" if jax.default_backend() == "tpu"
+                  else "interpret")
+  B, Hkv, G, D = 2, 4, 4, 128
+  H = Hkv * G
+  sm = float(1 / np.sqrt(D))
+  out = {}
+  for S in (1024, 4096):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    chain = jax.jit(lambda q, k, v: causal_attention(
+        q, k, v, sm_scale=sm, causal_skip=True))
+    flash_xla = jax.jit(lambda q, k, v: ops.prefill_attention(
+        q, k, v, sm_scale=sm, impl="xla"))
+    t_c = _time(chain, q, k, v)
+    t_x = _time(flash_xla, q, k, v)
+    out[f"prefill_chain_S{S}_us"] = t_c
+    out[f"prefill_xla_S{S}_us"] = t_x
+    out[f"prefill_xla_speedup_S{S}"] = t_c / t_x
+  # Interpret smoke: the actual Pallas kernel, small shape.
+  S = 256
+  ks = jax.random.split(jax.random.PRNGKey(1), 3)
+  q = jax.random.normal(ks[0], (1, S, 4, 128), jnp.float32)
+  k = jax.random.normal(ks[1], (1, S, 2, 128), jnp.float32)
+  v = jax.random.normal(ks[2], (1, S, 2, 128), jnp.float32)
+  for name, im in (("xla", "xla"), (impl, impl)):
+    fn = jax.jit(lambda q, k, v, im=im: ops.prefill_attention(
+        q, k, v, sm_scale=sm, impl=im))
+    out[f"prefill_{name}_S{S}_us"] = _time(fn, q, k, v)
+  out[f"prefill_impl_ratio_S{S}"] = (
+      out[f"prefill_{impl}_S{S}_us"] / out[f"prefill_xla_S{S}_us"])
+  out["prefill_impl"] = impl
+  return out
+
+
+def build_sweep(impl: str | None = None) -> Dict[str, float]:
+  """Synopsis build: the unfused chain as two separately-jitted launches
+  (permute writes the sorted cache to HBM; the segment mean reads it
+  back — two full cache passes plus gather copies) vs the single-jit
+  facade.  The Pallas segment-build kernel streams each row through VMEM
+  once; interpret entry smokes it at a small shape."""
+  impl = impl or ("pallas" if jax.default_backend() == "tpu"
+                  else "interpret")
+  N, Hkv, D, C = 4, 8, 128, 128
+  out = {}
+  for S in (4096, 16384):
+    M = S // C
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    k = jax.random.normal(ks[0], (N, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[1], (N, Hkv, S, D), jnp.float32)
+    perm = jnp.stack([
+        jax.random.permutation(jax.random.fold_in(ks[2], n), S)
+        for n in range(N)]).astype(jnp.int32)
+
+    permute_fn = jax.jit(lambda k, v, p: (
+        jnp.take_along_axis(k, jnp.broadcast_to(
+            p[:, None, :, None], (N, Hkv, S, 1)), axis=2),
+        jnp.take_along_axis(v, jnp.broadcast_to(
+            p[:, None, :, None], (N, Hkv, S, 1)), axis=2)))
+    mean_fn = jax.jit(lambda ks_, vs: (
+        ks_.reshape(N, Hkv, M, C, D).mean(3),
+        vs.reshape(N, Hkv, M, C, D).mean(3)))
+    fused_fn = jax.jit(lambda k, v, p: ops.synopsis_build(
+        k, v, p, cluster_size=C, impl="xla"))
+
+    def chain(k, v, p):
+      ks_, vs = permute_fn(k, v, p)
+      return ks_, vs, mean_fn(ks_, vs)
+
+    t_u = _time(chain, k, v, perm)
+    t_f = _time(fused_fn, k, v, perm)
+    out[f"build_chain_S{S}_us"] = t_u
+    out[f"build_fused_xla_S{S}_us"] = t_f
+    out[f"build_fused_speedup_S{S}"] = t_u / t_f
+  # Interpret smoke: the actual segment-build kernel, small shape.
+  S, C_sm = 256, 64
+  ks = jax.random.split(jax.random.PRNGKey(1), 3)
+  k = jax.random.normal(ks[0], (1, 2, S, D), jnp.float32)
+  v = jax.random.normal(ks[1], (1, 2, S, D), jnp.float32)
+  perm = jax.random.permutation(ks[2], S)[None].astype(jnp.int32)
+  for name, im in (("xla", "xla"), (impl, impl)):
+    fn = jax.jit(lambda k, v, p, im=im: ops.synopsis_build(
+        k, v, p, cluster_size=C_sm, impl=im))
+    out[f"build_{name}_S{S}_us"] = _time(fn, k, v, perm)
+  out[f"build_impl_ratio_S{S}"] = (
+      out[f"build_{impl}_S{S}_us"] / out[f"build_xla_S{S}_us"])
+  out["build_impl"] = impl
   return out
 
 

@@ -65,6 +65,30 @@ def bench_fig5_fig6():
          f"mean_loss={sum(d['loss_per_min']) / len(d['loss_per_min']):.2f}%")
 
 
+def bench_prefill(collect=None):
+  """Prefill + synopsis-build sweeps (EXPERIMENTS.md §Prefill)."""
+  from benchmarks.kernels_bench import build_sweep, prefill_sweep
+  pf = prefill_sweep()
+  for S in (1024, 4096):
+    _row(f"kernel_prefill_S{S}", pf[f"prefill_xla_S{S}_us"],
+         f"chain={pf[f'prefill_chain_S{S}_us']:.0f}us "
+         f"xla_speedup={pf[f'prefill_xla_speedup_S{S}']:.2f}x")
+  _row("kernel_prefill_impl_ratio", pf["prefill_xla_S256_us"],
+       f"impl={pf['prefill_impl']} "
+       f"ratio_vs_xla={pf['prefill_impl_ratio_S256']:.2f}x")
+  bd = build_sweep()
+  for S in (4096, 16384):
+    _row(f"kernel_build_S{S}", bd[f"build_fused_xla_S{S}_us"],
+         f"chain={bd[f'build_chain_S{S}_us']:.0f}us "
+         f"fused_speedup={bd[f'build_fused_speedup_S{S}']:.2f}x")
+  _row("kernel_build_impl_ratio", bd["build_xla_S256_us"],
+       f"impl={bd['build_impl']} "
+       f"ratio_vs_xla={bd['build_impl_ratio_S256']:.2f}x")
+  if collect is not None:
+    collect["prefill"] = pf
+    collect["build"] = bd
+
+
 def bench_kernels(collect=None):
   from benchmarks.kernels_bench import (decode_attention_sweep,
                                         fusion_sweep, pallas_vs_xla_sweep)
@@ -123,17 +147,24 @@ def main() -> None:
                        "baseline (e.g. BENCH_decode.json)")
   ap.add_argument("--kernels-only", action="store_true",
                   help="skip the service-simulation tables (CI smoke)")
+  ap.add_argument("--prefill-only", action="store_true",
+                  help="run only the prefill + synopsis-build sweeps "
+                       "(BENCH_prefill.json baseline)")
   args = ap.parse_args()
 
   print("name,us_per_call,derived")
-  if not args.kernels_only:
-    bench_table1_table2()
-    bench_fig3()
-    bench_fig4()
-    bench_fig5_fig6()
   collect = {} if args.json else None
-  bench_kernels(collect)
-  bench_roofline()
+  if args.prefill_only:
+    bench_prefill(collect)
+  else:
+    if not args.kernels_only:
+      bench_table1_table2()
+      bench_fig3()
+      bench_fig4()
+      bench_fig5_fig6()
+    bench_kernels(collect)
+    bench_prefill(collect)
+    bench_roofline()
   if args.json:
     import jax
     meta = {"backend": jax.default_backend(),

@@ -44,13 +44,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.ref import apply_softcap as _cap
+
 NEG_INF = -1e30
-
-
-def _cap(logits, cap: Optional[float]):
-  if cap is None:
-    return logits
-  return cap * jnp.tanh(logits / cap)
 
 
 def _kernel(sel_ref, q_ref, k_ref, v_ref, *rest, sm_scale: float,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.ref import apply_softcap
+
 NEG_INF = -1e30
 
 
@@ -46,8 +48,7 @@ def _kernel(q_ref, k_ref, v_ref, *rest, sm_scale: float, cap,
   logits = jax.lax.dot_general(                     # (G, bs) on the MXU
       q, k, (((1,), (1,)), ((), ())),
       preferred_element_type=jnp.float32) * sm_scale
-  if cap is not None:
-    logits = cap * jnp.tanh(logits / cap)
+  logits = apply_softcap(logits, cap)
   if bias_ref is not None:
     logits = logits + bias_ref[0, 0][None, :].astype(jnp.float32)
 

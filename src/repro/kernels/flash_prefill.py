@@ -1,0 +1,163 @@
+"""Flash-style prefill attention Pallas kernel (TPU target).
+
+The full-prompt half of the serving path: every query position attends
+causally over the prompt's keys — the stage that feeds the synopsis build
+(paper's offline module) and therefore bounds time-to-first-approximate
+-token.  Covers GQA (grouped queries share one KV head), the logit
+softcap (gemma2) and sliding windows (local layers).
+
+Tiling: grid (B, Hkv, S/block_q, S/block_k) with the KV axis innermost.
+Per step the kernel holds one (block_q, G, D) query tile — flattened to
+(block_q*G, D) so the q @ k^T contraction is a single MXU matmul — one
+(block_k, D) KV tile and f32 online-softmax state in VMEM scratch that
+persists across the sequential KV axis, flushing the normalised output at
+the final KV step.  Fully-masked KV blocks (k_start past the causal
+frontier, or wholly behind the sliding window) are predicated off with
+``pl.when`` — the causal-skip optimisation lives *inside* the grid rather
+than as a separate chunked scan (models/layers.causal_attention keeps the
+XLA form for training, which needs the remat'd backward).
+
+Ragged shapes: S is padded up to the block size outside the kernel; the
+in-kernel position iota masks padded keys with -inf and padded query rows
+flush zeros (sliced off by the wrapper), so any (S, block_q, block_k)
+combination is legal — the ragged final block costs one partial tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.ref import apply_softcap
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *, sm_scale: float,
+            cap: Optional[float], window: Optional[int], seq_len: int,
+            block_q: int, block_k: int, num_k_blocks: int):
+  qi, ki = pl.program_id(2), pl.program_id(3)
+  q_start = qi * block_q
+  k_start = ki * block_k
+
+  @pl.when(ki == 0)
+  def _init():
+    acc[...] = jnp.zeros_like(acc)
+    m_s[...] = jnp.full_like(m_s, NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s)
+
+  # Causal skip: the whole KV block is in the masked future.  Window
+  # skip: the whole KV block is behind every query row's window.
+  run = k_start <= q_start + block_q - 1
+  if window is not None:
+    run &= k_start + block_k - 1 >= q_start - (window - 1)
+
+  @pl.when(run)
+  def _step():
+    G = q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(block_q * G, -1)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(                     # (bq*G, bk) on the MXU
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale
+    logits = apply_softcap(logits, cap)
+
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 1)
+    mask = (qpos >= kpos) & (kpos < seq_len)          # causal + key padding
+    if window is not None:
+      mask &= (qpos - kpos) < window
+    logits = logits.reshape(block_q, G, block_k)
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    logits = logits.reshape(block_q * G, block_k)
+
+    m_prev = m_s[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[:, 0] = m_new
+
+  @pl.when(ki == num_k_blocks - 1)
+  def _flush():
+    G = q_ref.shape[3]
+    l_fin = l_s[:, 0]
+    out = acc[...] / jnp.maximum(l_fin, 1e-30)[:, None]
+    o_ref[0, 0] = out.reshape(block_q, G, -1).astype(o_ref.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+  return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "cap", "window", "block_q", "block_k",
+                     "interpret"))
+def flash_prefill(
+    q: jax.Array,                 # (B, S, H, D)   model layout
+    k: jax.Array,                 # (B, S, Hkv, D)
+    v: jax.Array,                 # (B, S, Hkv, D)
+    *,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,          # attention softcap
+    window: Optional[int] = None,         # sliding window (local layers)
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+  """Returns the causal attention output (B, S, H, D) in ``q.dtype``."""
+  B, S, H, D = q.shape
+  Hkv = k.shape[2]
+  G = H // Hkv
+  assert H == Hkv * G and k.shape == v.shape
+
+  block_q = min(block_q, _round_up(S, 8))
+  block_k = min(block_k, _round_up(S, 8))
+  Sq = _round_up(S, block_q)
+  Sk = _round_up(S, block_k)
+  nq, nk = Sq // block_q, Sk // block_k
+
+  # Kernel layout: queries grouped per KV head, sequence padded to the
+  # block grid (padded keys masked in-kernel, padded query rows sliced).
+  q5 = jnp.moveaxis(q.reshape(B, S, Hkv, G, D), 1, 2)   # (B, Hkv, S, G, D)
+  q5 = jnp.pad(q5, [(0, 0), (0, 0), (0, Sq - S), (0, 0), (0, 0)])
+  k4 = jnp.pad(jnp.moveaxis(k, 1, 2),
+               [(0, 0), (0, 0), (0, Sk - S), (0, 0)])
+  v4 = jnp.pad(jnp.moveaxis(v, 1, 2),
+               [(0, 0), (0, 0), (0, Sk - S), (0, 0)])
+
+  fn = pl.pallas_call(
+      functools.partial(_kernel, sm_scale=sm_scale, cap=cap, window=window,
+                        seq_len=S, block_q=block_q, block_k=block_k,
+                        num_k_blocks=nk),
+      grid=(B, Hkv, nq, nk),
+      in_specs=[
+          pl.BlockSpec((1, 1, block_q, G, D),
+                       lambda b, h, i, j: (b, h, i, 0, 0)),
+          pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+          pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+      ],
+      out_specs=pl.BlockSpec((1, 1, block_q, G, D),
+                             lambda b, h, i, j: (b, h, i, 0, 0)),
+      out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq, G, D), q.dtype),
+      scratch_shapes=[
+          pltpu.VMEM((block_q * G, D), jnp.float32),
+          pltpu.VMEM((block_q * G, 1), jnp.float32),
+          pltpu.VMEM((block_q * G, 1), jnp.float32),
+      ],
+      interpret=interpret,
+      name="flash_prefill",
+  )
+  o5 = fn(q5, k4, v4)                                   # (B, Hkv, Sq, G, D)
+  return jnp.moveaxis(o5[:, :, :S], 2, 1).reshape(B, S, H, D)

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.ref import apply_softcap
+
 NEG_INF = -1e30
 
 
@@ -60,8 +62,7 @@ def _kernel(q_ref, k_ref, v_ref, cb_ref, s_ref, o_ref, m_ref, l_ref,
   s_ref[0, 0] = jnp.max(logits, axis=0)             # (bm,)
 
   # Use 2: stage-1 attention partials over the same tile.
-  if cap is not None:
-    logits = cap * jnp.tanh(logits / cap)
+  logits = apply_softcap(logits, cap)
   logits = logits + cb_ref[0][None, :].astype(jnp.float32)
 
   m_prev = m_s[:, 0]

@@ -24,6 +24,12 @@ The fused pipeline reads the synopsis tables once instead of twice and
 replaces the serve step's materialized (B,Hkv,I*C,D) gather copies with
 scalar-prefetch-steered block DMAs on the Pallas path (the XLA impl keeps
 the gather — XLA cannot express the streaming form).
+
+The prefill half of the system lives here too (DESIGN.md §6):
+:func:`prefill_attention` (flash-style causal GQA over the prompt) and
+:func:`synopsis_build` (fused permute + segment-mean that turns the
+prefilled cache into the synopsis) — both behind the same ``impl``
+switch, called from ``serve/prefill.py`` / ``serve/synopsis_kv.py``.
 """
 from __future__ import annotations
 
@@ -36,11 +42,20 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.block_gather_attention import block_gather_attention
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.fused_synopsis import fused_synopsis_score_attention
+from repro.kernels.synopsis_build import segment_build
 from repro.kernels.synopsis_score import synopsis_score
 
 NEG_INF = ref.NEG_INF
 merge_partials = ref.merge_partials
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+  """"auto"/None -> Pallas kernels on TPU, XLA reference elsewhere."""
+  if impl in ("pallas", "xla", "interpret"):
+    return impl
+  return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
 def _scores(q, k_syn, sm_scale, impl):
@@ -55,8 +70,9 @@ def _decode(q, k, v, bias, sm_scale, impl, block_s=512, cap=None):
     return ref.flash_decode_ref(q, k, v, bias, sm_scale=sm_scale, cap=cap)
   S = k.shape[2]
   block_s = min(block_s, S)
-  if S % block_s != 0:          # ragged seq (e.g. whisper cross T=1500)
-    block_s = S
+  while S % block_s != 0:       # ragged seq (e.g. whisper cross T=1500):
+    block_s -= 1                # largest divisor <= block_s, not one
+                                # whole-S tile that could blow VMEM
   return flash_decode(q, k, v, bias, sm_scale=sm_scale, cap=cap,
                       block_s=block_s, interpret=(impl == "interpret"))
 
@@ -73,6 +89,62 @@ def _gather(q, k, v, selected, cluster_size, sm_scale, impl, cap=None):
 def count_bias(counts: jax.Array) -> jax.Array:
   """log(count) stand-in weight of an unselected cluster's centroid."""
   return jnp.log(jnp.maximum(counts, 1.0)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-side ops (DESIGN.md §6): flash prefill attention + the fused
+# synopsis build that turns the prefilled cache into the synopsis.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "cap", "window", "block_q", "block_k",
+                     "impl"))
+def prefill_attention(
+    q: jax.Array,        # (B, S, H, D)   model layout
+    k: jax.Array,        # (B, S, Hkv, D)
+    v: jax.Array,        # (B, S, Hkv, D)
+    *,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    impl: str = "pallas",
+) -> jax.Array:
+  """Causal GQA prefill attention; returns (B, S, H, D) in ``q.dtype``.
+
+  The Pallas path block-tiles query x KV with causal/window block skip
+  inside the grid; the XLA path is the chunked reference (no remat — for
+  the *forward-only* prefill step; training keeps
+  ``models.layers.causal_attention``)."""
+  if impl == "xla":
+    return ref.flash_prefill_ref(q, k, v, sm_scale=sm_scale, cap=cap,
+                                 window=window)
+  return flash_prefill(q, k, v, sm_scale=sm_scale, cap=cap, window=window,
+                       block_q=block_q, block_k=block_k,
+                       interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("cluster_size", "impl"))
+def synopsis_build(
+    k: jax.Array,        # (N, Hkv, S, D) exact cache, flat leading dims
+    v: jax.Array,        # (N, Hkv, S, D)
+    perm: jax.Array,     # (N, S) int32 cluster-contiguous permutation
+    *,
+    cluster_size: int,
+    impl: str = "pallas",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+  """Permute the cache cluster-contiguous AND aggregate mean centroids in
+  one pass.  Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M)).
+
+  The Pallas path streams each row through VMEM exactly once
+  (scalar-prefetch-steered row DMA); the XLA path keeps the
+  take_along_axis -> reshape-mean chain (two passes + gather copies)."""
+  if impl == "xla":
+    return ref.synopsis_build_ref(k, v, perm, cluster_size=cluster_size)
+  return segment_build(k, v, perm, cluster_size=cluster_size,
+                       interpret=(impl == "interpret"))
 
 
 # ---------------------------------------------------------------------------

@@ -25,10 +25,15 @@ Partials = Tuple[jax.Array, jax.Array, jax.Array]
 NEG_INF = -1e30
 
 
-def _softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+def apply_softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+  """Attention logit softcap — the one shared definition; the Pallas
+  kernels import it too (pure jnp, traces fine inside a kernel)."""
   if cap is None:
     return logits
   return cap * jnp.tanh(logits / cap)
+
+
+_softcap = apply_softcap
 
 
 def flash_decode_ref(
@@ -57,6 +62,78 @@ def flash_decode_ref(
   out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
   out = out / jnp.maximum(l, 1e-30)[..., None]
   return (out.reshape(B, H, D), m_safe.reshape(B, H), l.reshape(B, H))
+
+
+def flash_prefill_ref(
+    q: jax.Array,            # (B, S, H, D)   full-prompt queries
+    k: jax.Array,            # (B, S, Hkv, D)
+    v: jax.Array,            # (B, S, Hkv, D)
+    *,
+    sm_scale: float = 1.0,
+    cap: Optional[float] = None,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+) -> jax.Array:
+  """Causal GQA prefill attention oracle (model layout, DESIGN.md §6).
+
+  Chunked over query blocks so the (S, S) logit matrix never materialises
+  (mirrors the flash kernel's tiling); f32 math throughout, output cast
+  back to ``q.dtype``.  This is the ``impl="xla"`` path of
+  ``ops.prefill_attention``.
+  """
+  B, S, H, D = q.shape
+  Hkv = k.shape[2]
+  G = H // Hkv
+  qg = q.reshape(B, S, Hkv, G, D)
+  chunk = min(q_chunk, S)
+  while S % chunk != 0:            # largest divisor of S at most q_chunk
+    chunk -= 1
+  nq = S // chunk
+  kf = k.astype(jnp.float32)
+  vf = v.astype(jnp.float32)
+  kpos = jnp.arange(S)
+
+  def one_chunk(i):
+    qi = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
+    qpos = i * chunk + jnp.arange(chunk)
+    logits = _softcap(
+        jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32), kf)
+        * sm_scale, cap)
+    mask = qpos[:, None] >= kpos[None, :]
+    if window is not None:
+      mask &= (qpos[:, None] - kpos[None, :]) < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    oi = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return oi.reshape(B, chunk, H, D).astype(q.dtype)
+
+  if nq == 1:
+    return one_chunk(0)
+  chunks = jax.lax.map(one_chunk, jnp.arange(nq))    # (nq, B, chunk, H, D)
+  return jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, D)
+
+
+def synopsis_build_ref(
+    k: jax.Array,            # (N, Hkv, S, D) exact cache (flat batch)
+    v: jax.Array,            # (N, Hkv, S, D)
+    perm: jax.Array,         # (N, S) int32 cluster-contiguous permutation
+    *,
+    cluster_size: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+  """Synopsis-build oracle: the unfused permute -> segment-mean chain
+  (paper §2.2 step 3, DESIGN.md §6).  Gathers the cache into
+  cluster-contiguous order and aggregates per-cluster mean centroids.
+  Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M) f32)."""
+  N, Hkv, S, D = k.shape
+  C = cluster_size
+  M = S // C
+  idx = jnp.broadcast_to(perm[:, None, :, None], (N, Hkv, S, 1))
+  k_sorted = jnp.take_along_axis(k, idx, axis=2)
+  v_sorted = jnp.take_along_axis(v, idx, axis=2)
+  k_syn = k_sorted.reshape(N, Hkv, M, C, D).mean(3).astype(k.dtype)
+  v_syn = v_sorted.reshape(N, Hkv, M, C, D).mean(3).astype(v.dtype)
+  counts = jnp.full((N, M), float(C), jnp.float32)
+  return k_sorted, v_sorted, k_syn, v_syn, counts
 
 
 def synopsis_score_ref(

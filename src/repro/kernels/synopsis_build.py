@@ -1,0 +1,118 @@
+"""Fused synopsis-build (permute + segment-mean) Pallas kernel.
+
+Paper §2.2 step 3 specialised to KV caches (DESIGN.md §6): given the
+cluster-contiguous permutation produced by the clustering stage
+(``repro.core.cluster``), reorder the exact cache and aggregate each
+C-token cluster into its mean-centroid row — in ONE streaming pass.
+
+The unfused XLA chain (``ref.synopsis_build_ref``) materialises the
+sorted cache with ``take_along_axis`` (HBM write), then re-reads it for
+the reshape-mean (HBM read) — two full passes over the cache plus the
+gather's scatter traffic.  Here the permutation is **scalar-prefetched**
+(SMEM) so the BlockSpec ``index_map`` steers each grid step's HBM->VMEM
+DMA straight to source row ``perm[n, m*C + c]``; the step emits the
+permuted row to its destination slot and folds it into the f32 centroid
+accumulator, flushing ``k_syn``/``v_syn``/``counts`` at the last member
+of each cluster.  Every cache row moves through VMEM exactly once.
+
+Grid (N, Hkv, M, C) — one row per step; Pallas double-buffers the row
+DMAs across steps so the gather pipeline stays latency-hidden.  ``counts``
+is emitted per (N, Hkv, M) (the wrapper returns the h=0 slice — clusters
+are shared across KV heads by construction).
+
+``absorb_recent`` reuses the same kernel with the identity permutation:
+the recent ring buffer's R tokens become R/C new clusters appended to the
+originals + centroid tables (the paper's "situation 1" incremental
+update).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(perm_ref, k_ref, v_ref, ks_ref, vs_ref, ksyn_ref, vsyn_ref,
+            cnt_ref, kacc, vacc, *, cluster_size: int):
+  c = pl.program_id(3)
+
+  @pl.when(c == 0)
+  def _init():
+    kacc[...] = jnp.zeros_like(kacc)
+    vacc[...] = jnp.zeros_like(vacc)
+
+  krow = k_ref[0, 0].astype(jnp.float32)              # (1, D)
+  vrow = v_ref[0, 0].astype(jnp.float32)
+  ks_ref[0, 0] = krow.astype(ks_ref.dtype)            # permuted cache row
+  vs_ref[0, 0] = vrow.astype(vs_ref.dtype)
+  kacc[...] += krow
+  vacc[...] += vrow
+
+  @pl.when(c == cluster_size - 1)
+  def _flush():
+    inv = jnp.float32(1.0 / cluster_size)
+    ksyn_ref[0, 0] = (kacc[...] * inv).astype(ksyn_ref.dtype)
+    vsyn_ref[0, 0] = (vacc[...] * inv).astype(vsyn_ref.dtype)
+    cnt_ref[0, 0, 0] = jnp.float32(cluster_size)
+
+
+@functools.partial(jax.jit, static_argnames=("cluster_size", "interpret"))
+def segment_build(
+    k: jax.Array,          # (N, Hkv, S, D) exact cache, flat leading dims
+    v: jax.Array,          # (N, Hkv, S, D)
+    perm: jax.Array,       # (N, S) int32: row s of the output reads
+                           # source row perm[n, s]; cluster m owns rows
+                           # [m*C, (m+1)*C)
+    *,
+    cluster_size: int,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+  """Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M) f32)."""
+  N, Hkv, S, D = k.shape
+  C = cluster_size
+  assert S % C == 0, (S, C)
+  M = S // C
+
+  def _src(n, h, m, c, perm):
+    return (n, h, perm[n, m * C + c], 0)
+
+  grid_spec = pltpu.PrefetchScalarGridSpec(
+      num_scalar_prefetch=1,
+      grid=(N, Hkv, M, C),
+      in_specs=[
+          pl.BlockSpec((1, 1, 1, D), _src),
+          pl.BlockSpec((1, 1, 1, D), _src),
+      ],
+      out_specs=[
+          pl.BlockSpec((1, 1, 1, D),
+                       lambda n, h, m, c, perm: (n, h, m * C + c, 0)),
+          pl.BlockSpec((1, 1, 1, D),
+                       lambda n, h, m, c, perm: (n, h, m * C + c, 0)),
+          pl.BlockSpec((1, 1, 1, D), lambda n, h, m, c, perm: (n, h, m, 0)),
+          pl.BlockSpec((1, 1, 1, D), lambda n, h, m, c, perm: (n, h, m, 0)),
+          pl.BlockSpec((1, 1, 1), lambda n, h, m, c, perm: (n, h, m)),
+      ],
+      scratch_shapes=[
+          pltpu.VMEM((1, D), jnp.float32),
+          pltpu.VMEM((1, D), jnp.float32),
+      ],
+  )
+  fn = pl.pallas_call(
+      functools.partial(_kernel, cluster_size=C),
+      grid_spec=grid_spec,
+      out_shape=[
+          jax.ShapeDtypeStruct((N, Hkv, S, D), k.dtype),
+          jax.ShapeDtypeStruct((N, Hkv, S, D), v.dtype),
+          jax.ShapeDtypeStruct((N, Hkv, M, D), k.dtype),
+          jax.ShapeDtypeStruct((N, Hkv, M, D), v.dtype),
+          jax.ShapeDtypeStruct((N, Hkv, M), jnp.float32),
+      ],
+      interpret=interpret,
+      name="segment_build",
+  )
+  ks, vs, ksyn, vsyn, cnt = fn(perm.astype(jnp.int32), k, v)
+  return ks, vs, ksyn, vsyn, cnt[:, 0]

@@ -5,8 +5,19 @@ from the calibrated latency model and the configured deadline; new tokens
 accumulate in the recent buffer and are absorbed into the synopsis when
 it fills (the paper's low-priority incremental update).
 
+All three stages run through the kernel suite behind one ``--impl``
+switch (prefill attention, synopsis build, decode attention — DESIGN.md
+§4/§6).  With ``--batches N --pipeline`` the driver overlaps batch i's
+synopsis build with batch i+1's prefill: both stages are single jitted
+programs and the loop never calls ``jax.block_until_ready`` between
+dispatches, so the runtime's async dispatch queue pipelines them (the
+paper's low-priority offline module running behind the online path).
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --prompt-len 256 --tokens 32 --deadline-ms 50
+
+  # pipelined prefill/build over 4 prompt batches:
+  PYTHONPATH=src python -m repro.launch.serve --batches 4 --pipeline
 """
 from __future__ import annotations
 
@@ -21,13 +32,20 @@ def main():
   ap.add_argument("--batch", type=int, default=2)
   ap.add_argument("--prompt-len", type=int, default=256)
   ap.add_argument("--tokens", type=int, default=32)
+  ap.add_argument("--batches", type=int, default=1,
+                  help="number of sequence batches to prefill + build")
+  ap.add_argument("--pipeline", action="store_true",
+                  help="overlap batch i's synopsis build with batch i+1's "
+                       "prefill (block-free dispatch, one jitted program "
+                       "per stage)")
   ap.add_argument("--mode", default="synopsis",
                   choices=["exact", "synopsis"])
   ap.add_argument("--impl", default=None,
                   choices=["auto", "pallas", "xla", "interpret"],
-                  help="decode-attention implementation; default: the "
-                       "config's synopsis.impl (auto = fused Pallas "
-                       "kernels on TPU, XLA reference elsewhere)")
+                  help="kernel implementation for prefill, synopsis build "
+                       "and decode attention; default: the config's "
+                       "synopsis.impl (auto = Pallas kernels on TPU, XLA "
+                       "reference elsewhere)")
   ap.add_argument("--deadline-ms", type=float, default=50.0)
   args = ap.parse_args()
 
@@ -36,6 +54,7 @@ def main():
 
   from repro.configs.registry import get_config
   from repro.core.deadline import BudgetController, LatencyModel
+  from repro.kernels.ops import resolve_impl
   from repro.models import common as cm
   from repro.models import transformer as tf
   from repro.serve import synopsis_kv as skv
@@ -48,22 +67,53 @@ def main():
   params, _ = cm.split(tf.init_model(key, cfg))
   params = jax.tree.map(lambda p: p.astype(cfg.dtype), params)
 
-  B, S = args.batch, args.prompt_len
-  prompt = jax.random.randint(key, (B, S), 0, cfg.vocab)
-  t0 = time.time()
-  logits, cache = jax.jit(make_prefill_step(cfg))(params, prompt)
-  jax.block_until_ready(logits)
-  print(f"[prefill] {S} tokens in {time.time() - t0:.2f}s")
-
-  from repro.serve.serve_step import resolve_impl
   impl = resolve_impl(args.impl if args.impl else cfg.synopsis.impl)
-  print(f"[impl] decode attention via {impl!r}")
+  print(f"[impl] prefill/build/decode kernels via {impl!r}")
 
+  B, S = args.batch, args.prompt_len
   mode = args.mode if n_attn_positions(cfg) else "exact"
+  prompts = [jax.random.randint(jax.random.fold_in(key, bi), (B, S), 0,
+                                cfg.vocab) for bi in range(args.batches)]
+  prefill_fn = jax.jit(make_prefill_step(cfg, impl=impl))
+  build_fn = jax.jit(lambda c: skv.build(c, cfg, impl=impl))
+
+  # Prefill -> synopsis-build over all batches.  Pipelined: dispatch the
+  # next prefill, then enqueue the previous batch's build behind it —
+  # no block_until_ready until every stage of every batch is in flight.
+  t0 = time.time()
+  logits_per_batch, cache_per_batch = [], []
+  if args.pipeline and mode == "synopsis":
+    pending = None
+    for bi in range(args.batches):
+      lg, cache = prefill_fn(params, prompts[bi])         # async dispatch
+      if pending is not None:
+        cache_per_batch.append(build_fn(pending))         # overlaps prefill
+      logits_per_batch.append(lg)
+      pending = cache
+    cache_per_batch.append(build_fn(pending))
+    jax.block_until_ready((logits_per_batch, cache_per_batch))
+  else:
+    for bi in range(args.batches):
+      lg, cache = prefill_fn(params, prompts[bi])
+      if mode == "synopsis":
+        cache = build_fn(cache)
+      jax.block_until_ready((lg, cache))
+      logits_per_batch.append(lg)
+      cache_per_batch.append(cache)
+  dt = time.time() - t0
+  stages = "prefill+build" if mode == "synopsis" else "prefill"
+  lane = "pipelined" if (args.pipeline and mode == "synopsis") else "serial"
+  print(f"[{stages}] {args.batches} batch(es) x {S} tokens in {dt:.2f}s "
+        f"({lane})")
   if mode == "synopsis":
-    cache = jax.jit(lambda c: skv.build(c, cfg))(cache)
     M = S // cfg.synopsis.cluster_size
     print(f"[synopsis] M={M} clusters of C={cfg.synopsis.cluster_size}")
+
+  # The decode demo below consumes batch 0 only — drop the other
+  # batches' caches so N full KV caches don't stay resident for the
+  # whole generation loop.
+  logits, cache = logits_per_batch[0], cache_per_batch[0]
+  del logits_per_batch, cache_per_batch
   ctrl = BudgetController(LatencyModel(base=5.0, slope=1.0, alpha=0.1),
                           buckets=(0, 1, 2, 4, 8, 16, 32),
                           i_max_cap=cfg.synopsis.i_max or 32)
@@ -85,7 +135,8 @@ def main():
       cache = skv.append_recent(cache, st["k_delta"], st["v_delta"])
       cache["pos"] = st["pos"]
       if int(cache["recent_len"][0]) >= cfg.synopsis.recent:
-        cache = jax.jit(lambda c: skv.absorb_recent(c, cfg))(cache)
+        cache = jax.jit(lambda c: skv.absorb_recent(c, cfg, impl=impl))(
+            cache)
         print(f"[update] absorbed recent buffer -> "
               f"M={cache['k_syn'].shape[4]}")
     else:

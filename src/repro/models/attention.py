@@ -18,8 +18,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.kernels import ops
 from repro.models import common as cm
 from repro.models.layers import causal_attention, einsum, proj_pe, rope
+
+
+def causal_mix(q, k, v, *, sm_scale, window=None, cap=None,
+               causal_skip=False, impl: Optional[str] = None):
+  """Causal self-attention dispatch for full-sequence (train/prefill)
+  passes.  ``impl=None`` (training) keeps the remat'd chunked XLA scan of
+  ``layers.causal_attention`` — it has the memory-cheap backward.  A
+  concrete ``impl`` (the forward-only prefill step) routes through
+  ``kernels.ops.prefill_attention``: flash-tiled Pallas on TPU /
+  interpret, or the chunked XLA reference (DESIGN.md §6)."""
+  if impl is not None:
+    return ops.prefill_attention(q, k, v, sm_scale=sm_scale, cap=cap,
+                                 window=window, impl=impl).astype(q.dtype)
+  return causal_attention(q, k, v, sm_scale=sm_scale, window=window,
+                          attn_softcap=cap, causal_skip=causal_skip)
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +99,7 @@ def attention_train(
     enc_out: Optional[jax.Array] = None,   # cross-attention source (B,T,d)
     causal_skip: bool = False,
     return_kv: bool = False,
+    impl: Optional[str] = None,
 ):
   sm_scale = cfg.hd ** -0.5
   if enc_out is not None:
@@ -100,11 +117,11 @@ def attention_train(
     o = o.reshape(B, S, H, D).astype(x.dtype)
   else:
     q, k, v = qkv(x, p, cfg, positions)
-    o = causal_attention(
+    o = causal_mix(
         q, k, v, sm_scale=sm_scale,
         window=cfg.sliding_window if local else None,
-        attn_softcap=cfg.attn_softcap,
-        causal_skip=causal_skip)
+        cap=cfg.attn_softcap,
+        causal_skip=causal_skip, impl=impl)
   y = out_proj(o, p, x.dtype)
   if return_kv:
     # (B, Hkv, S, D) decode-cache layout.
@@ -164,7 +181,8 @@ def mla_queries(x, p, cfg, positions):
 
 
 def mla_train(x, p, cfg: cm.ModelConfig, positions,
-              causal_skip: bool = False, return_kv: bool = False):
+              causal_skip: bool = False, return_kv: bool = False,
+              impl: Optional[str] = None):
   """Naive (non-absorbed) MLA for training: materialise per-head k/v."""
   m = cfg.mla
   q_nope, q_pe = mla_queries(x, p, cfg, positions)
@@ -179,8 +197,8 @@ def mla_train(x, p, cfg: cm.ModelConfig, positions,
                                 + (cfg.n_heads, m.qk_rope_dim))], axis=-1)
   sm_scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
   # Pad v to q/k head dim for the shared kernel, then slice back.
-  o = causal_attention(q, k, v_pad(v, q.shape[-1]), sm_scale=sm_scale,
-                       causal_skip=causal_skip)[..., :m.v_head_dim]
+  o = causal_mix(q, k, v_pad(v, q.shape[-1]), sm_scale=sm_scale,
+                 causal_skip=causal_skip, impl=impl)[..., :m.v_head_dim]
   y = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
                  p["wo"].astype(x.dtype),
                  preferred_element_type=proj_pe(x)).astype(x.dtype)

@@ -143,7 +143,8 @@ def _dense_mlp(x, mp, cfg):
 
 
 def _layer_forward(x, lp, cfg: cm.ModelConfig, spec: cm.LayerSpec,
-                   positions, enc_out, causal_skip, collect_kv=False):
+                   positions, enc_out, causal_skip, collect_kv=False,
+                   impl=None):
   """One layer: mixer (attn/ssm/cross) + ffn, pre-norm residual."""
   aux = 0.0
   kv = {}
@@ -151,11 +152,11 @@ def _layer_forward(x, lp, cfg: cm.ModelConfig, spec: cm.LayerSpec,
   if spec.kind == "attn":
     if cfg.mla:
       mix = attn.mla_train(h, lp["attn"], cfg, positions, causal_skip,
-                           return_kv=collect_kv)
+                           return_kv=collect_kv, impl=impl)
     else:
       mix = attn.attention_train(h, lp["attn"], cfg, positions,
                                  local=spec.local, causal_skip=causal_skip,
-                                 return_kv=collect_kv)
+                                 return_kv=collect_kv, impl=impl)
     if collect_kv:
       mix, (k_, v_) = mix
       kv["k"], kv["v"] = k_, v_
@@ -204,7 +205,7 @@ def _gather_fsdp(stacked, axes):
 
 
 def _body(params_blocks, cfg, x, positions, enc_out, causal_skip,
-          pattern=None, collect_kv=False, param_axes=None):
+          pattern=None, collect_kv=False, param_axes=None, impl=None):
   """Scan over super-blocks, unrolling the pattern inside each step."""
   pattern = pattern or cfg.block_pattern
 
@@ -215,7 +216,7 @@ def _body(params_blocks, cfg, x, positions, enc_out, causal_skip,
     ys = {}
     for i, spec in enumerate(pattern):
       x, a, kv = _layer_forward(x, stacked[f"pos{i}"], cfg, spec, positions,
-                                enc_out, causal_skip, collect_kv)
+                                enc_out, causal_skip, collect_kv, impl)
       aux = aux + a
       for kk, vv in kv.items():
         ys.setdefault(kk, []).append(vv)
@@ -268,8 +269,12 @@ def embed_tokens(params, cfg, tokens, frontend_embeds=None):
 
 def hidden_states(params, cfg: cm.ModelConfig, tokens: jax.Array,
                   frontend_embeds=None, causal_skip: bool = False,
-                  collect_kv: bool = False, param_axes=None):
-  """Token ids -> final hidden states (B, S, d) + moe aux loss."""
+                  collect_kv: bool = False, param_axes=None, impl=None):
+  """Token ids -> final hidden states (B, S, d) + moe aux loss.
+
+  ``impl`` selects the causal-attention implementation for forward-only
+  (prefill) passes — see ``attention.causal_mix``; ``None`` keeps the
+  remat'd training path."""
   enc_out = None
   if cfg.encoder is not None and frontend_embeds is not None:
     enc_out = encode(params, cfg, frontend_embeds)
@@ -278,7 +283,8 @@ def hidden_states(params, cfg: cm.ModelConfig, tokens: jax.Array,
   positions = jnp.arange(x.shape[1])
   out = _body(params["blocks"], cfg, x, positions, enc_out, causal_skip,
               collect_kv=collect_kv,
-              param_axes=param_axes["blocks"] if param_axes else None)
+              param_axes=param_axes["blocks"] if param_axes else None,
+              impl=impl)
   if collect_kv:
     x, aux, kv = out
     return rms_norm(x, params["final_norm"], cfg.norm_eps), aux, kv

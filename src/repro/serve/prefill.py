@@ -4,24 +4,35 @@ The cache comes out in the decode layout (nb, na, B, Hkv, S, D); for
 AccuracyTrader serving, ``repro.serve.synopsis_kv.build`` then clusters it
 into the synopsis structure (offline module of the paper — runs once per
 sequence after prefill and incrementally thereafter).
+
+Attention runs through the kernel suite (``repro.kernels.ops
+.prefill_attention``) behind the same ``impl`` switch as decode:
+``"auto"``/None resolves to the flash-tiled Pallas kernel on TPU and the
+chunked XLA reference elsewhere (DESIGN.md §6).  ``launch/serve.py
+--pipeline`` overlaps this step with the previous batch's synopsis build.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
+from repro.kernels import ops
 from repro.models import common as cm
 from repro.models import transformer as tf
 from repro.models.layers import softcap
 
 
-def make_prefill_step(cfg: cm.ModelConfig):
+def make_prefill_step(cfg: cm.ModelConfig, *, impl: Optional[str] = None):
+  """``impl`` overrides ``cfg.synopsis.impl``; both default to "auto"
+  (flash Pallas prefill on TPU, chunked XLA reference elsewhere)."""
+  impl = ops.resolve_impl(impl if impl is not None else cfg.synopsis.impl)
+
   def prefill_step(params, tokens, frontend_embeds=None):
     h, _, kv = tf.hidden_states(params, cfg, tokens, frontend_embeds,
-                                collect_kv=True)
+                                collect_kv=True, impl=impl)
     last = h[:, -1]                                           # (B, d)
     w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
     logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32),

@@ -50,12 +50,9 @@ from repro.models.layers import einsum, rms_norm, softcap
 
 NEG_INF = -1e30
 
-
-def resolve_impl(impl: Optional[str] = None) -> str:
-  """"auto"/None -> fused Pallas on TPU, XLA reference elsewhere."""
-  if impl in ("pallas", "xla", "interpret"):
-    return impl
-  return "pallas" if jax.default_backend() == "tpu" else "xla"
+# Canonical impl resolution lives with the kernel suite; re-exported here
+# for the launcher and tests that historically import it from serve_step.
+resolve_impl = ops.resolve_impl
 
 
 def _seq_axes():
@@ -138,6 +135,15 @@ def sharded_synopsis_attention(
     dp, dp_n = (), 1
   bspec = dp if dp else None
 
+  manual = set(axes) | set(dp)
+  if (set(mesh.axis_names) - manual) and not shd.supports_partial_manual():
+    # Partial-manual shard_map (manual over a subset of mesh axes) hits
+    # an XLA partitioner CHECK on legacy jax builds; fall back to the
+    # replicated body rather than crash (same result, GSPMD collectives).
+    return synopsis_decode_attention(
+        q, cache, i_max=i_max, cluster_size=cluster_size,
+        sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl)
+
   kv_spec = P(bspec, None, axes, None)
   specs = {"k": kv_spec, "v": kv_spec, "k_syn": kv_spec, "v_syn": kv_spec,
            "counts": P(bspec, axes)}
@@ -151,7 +157,6 @@ def sharded_synopsis_attention(
   q_spec = P(bspec, None, None)
   self_spec = (P(bspec, None, None, None),) * 2 if self_kv is not None \
       else P()
-  manual = set(axes) | set(dp)
 
   def body(q, cache, self_kv):
     with shd.manual_axes(manual):

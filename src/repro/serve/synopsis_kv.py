@@ -6,21 +6,25 @@ offline module specialised to attention memories.
   concatenated kv-head key features), permute the cache cluster-contiguous,
   and aggregate per-cluster mean keys/values (centroids) — steps 1-3 of
   paper §2.2 with the R-tree replaced by balanced splits (DESIGN.md §3).
+  The permute + aggregate runs through ``kernels.ops.synopsis_build``
+  behind the ``impl`` switch: one fused streaming pass on the Pallas path
+  vs. the take_along_axis -> reshape-mean chain on XLA (DESIGN.md §6).
 
 * ``absorb_recent``: the incremental update (paper "situation 1"): tokens
   accumulated in the recent ring buffer become *new* clusters appended to
   the originals + centroid tables, recent buffer resets.  Runs as its own
   jitted program between serving batches (the paper's low-priority
-  updating).
+  updating), reusing the same build kernel with the identity permutation.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import cluster as cl
+from repro.kernels import ops
 from repro.models import common as cm
 
 
@@ -32,8 +36,14 @@ def _cluster_perm(keys_flat: jax.Array, num_clusters: int,
 
 
 def build(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
-          method: str = "kd") -> Dict[str, jax.Array]:
-  """Exact-cache -> synopsis-cache.  cache: k/v (nb, na, B, Hkv, S, D)."""
+          method: str = "kd",
+          impl: Optional[str] = None) -> Dict[str, jax.Array]:
+  """Exact-cache -> synopsis-cache.  cache: k/v (nb, na, B, Hkv, S, D).
+
+  ``impl`` overrides ``cfg.synopsis.impl`` for the permute + segment-mean
+  aggregation (clustering itself is pure XLA — PCA and sorts have no
+  kernel to win)."""
+  impl = ops.resolve_impl(impl if impl is not None else cfg.synopsis.impl)
   k, v = cache["k"], cache["v"]
   nb, na, B, Hkv, S, D = k.shape
   C = cfg.synopsis.cluster_size
@@ -45,23 +55,19 @@ def build(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
   feats = jnp.moveaxis(k, 3, 4).reshape(nb * na * B, S, Hkv * D)
   perms = jax.vmap(lambda f: _cluster_perm(f.astype(jnp.float32), M,
                                            method))(feats)
-  perms = perms.reshape(nb, na, B, S)
 
-  def permute(x):
-    # x (nb,na,B,Hkv,S,D); gather along S with per-(nb,na,B) perm.
-    idx = perms[:, :, :, None, :, None]
-    return jnp.take_along_axis(x, jnp.broadcast_to(
-        idx, x.shape[:4] + (S, 1)), axis=4)
-
-  k_sorted, v_sorted = permute(k), permute(v)
-  k_syn = k_sorted.reshape(nb, na, B, Hkv, M, C, D).mean(5).astype(k.dtype)
-  v_syn = v_sorted.reshape(nb, na, B, Hkv, M, C, D).mean(5).astype(v.dtype)
+  N = nb * na * B
+  k_sorted, v_sorted, k_syn, v_syn, counts = ops.synopsis_build(
+      k.reshape(N, Hkv, S, D), v.reshape(N, Hkv, S, D),
+      perms.reshape(N, S).astype(jnp.int32), cluster_size=C, impl=impl)
   R = cfg.synopsis.recent
 
   out = {
-      "k": k_sorted, "v": v_sorted,
-      "k_syn": k_syn, "v_syn": v_syn,
-      "counts": jnp.full((nb, na, B, M), C, jnp.float32),
+      "k": k_sorted.reshape(nb, na, B, Hkv, S, D),
+      "v": v_sorted.reshape(nb, na, B, Hkv, S, D),
+      "k_syn": k_syn.reshape(nb, na, B, Hkv, M, D),
+      "v_syn": v_syn.reshape(nb, na, B, Hkv, M, D),
+      "counts": counts.reshape(nb, na, B, M),
       "recent_k": jnp.zeros((nb, na, B, Hkv, R, D), k.dtype),
       "recent_v": jnp.zeros((nb, na, B, Hkv, R, D), v.dtype),
       "recent_len": jnp.zeros((B,), jnp.int32),
@@ -86,12 +92,15 @@ def append_recent(cache: Dict[str, jax.Array], k_delta, v_delta):
           "recent_len": cache["recent_len"] + 1}
 
 
-def absorb_recent(cache: Dict[str, jax.Array],
-                  cfg: cm.ModelConfig) -> Dict[str, jax.Array]:
+def absorb_recent(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
+                  impl: Optional[str] = None) -> Dict[str, jax.Array]:
   """Incremental synopsis update: recent tokens -> new clusters appended
   to the originals and centroid tables (paper situation 1: new data points
   -> new leaf nodes).  Shapes grow by R tokens / R/C clusters; this is the
-  offline-module program, re-jitted per growth step."""
+  offline-module program, re-jitted per growth step.  The aggregation is
+  the same fused build kernel with the identity permutation (the ring
+  buffer is already time-contiguous)."""
+  impl = ops.resolve_impl(impl if impl is not None else cfg.synopsis.impl)
   R = cache["recent_k"].shape[4]
   C = cfg.synopsis.cluster_size
   assert R % C == 0
@@ -101,12 +110,17 @@ def absorb_recent(cache: Dict[str, jax.Array],
   rk, rv = cache["recent_k"], cache["recent_v"]
   k = jnp.concatenate([cache["k"], rk], axis=4)
   v = jnp.concatenate([cache["v"], rv], axis=4)
-  k_new = rk.reshape(nb, na, B, Hkv, newM, C, D).mean(5).astype(rk.dtype)
-  v_new = rv.reshape(nb, na, B, Hkv, newM, C, D).mean(5).astype(rv.dtype)
-  k_syn = jnp.concatenate([cache["k_syn"], k_new], axis=4)
-  v_syn = jnp.concatenate([cache["v_syn"], v_new], axis=4)
+  N = nb * na * B
+  ident = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32), (N, R))
+  _, _, k_new, v_new, cnt_new = ops.synopsis_build(
+      rk.reshape(N, Hkv, R, D), rv.reshape(N, Hkv, R, D), ident,
+      cluster_size=C, impl=impl)
+  k_syn = jnp.concatenate(
+      [cache["k_syn"], k_new.reshape(nb, na, B, Hkv, newM, D)], axis=4)
+  v_syn = jnp.concatenate(
+      [cache["v_syn"], v_new.reshape(nb, na, B, Hkv, newM, D)], axis=4)
   counts = jnp.concatenate(
-      [cache["counts"], jnp.full((nb, na, B, newM), C, jnp.float32)], axis=3)
+      [cache["counts"], cnt_new.reshape(nb, na, B, newM)], axis=3)
   return {**cache, "k": k, "v": v, "k_syn": k_syn, "v_syn": v_syn,
           "counts": counts,
           "recent_k": jnp.zeros_like(rk), "recent_v": jnp.zeros_like(rv),

@@ -1,0 +1,135 @@
+"""Serving-engine sweep: accuracy loss vs tail latency vs load, from
+MEASURED step latencies (DESIGN.md §8; the paper's Tables 1-2 shape).
+
+Unlike ``benchmarks/paper_tables.py`` (discrete-event simulation), every
+latency here is the wall time of a real dispatched program on the kernel
+path — prefill, synopsis build, bucketed serve steps — driven by the
+continuous-batching engine over Poisson arrival traces.  Per (policy,
+rate) it reports p50/p99/p99.9 component latency, accuracy-loss %, the
+deadline-miss rate and the mean refinement budget.
+
+  PYTHONPATH=src:. python -m benchmarks.serving_bench \
+      --json BENCH_serving.json          # committed baseline
+  PYTHONPATH=src:. python -m benchmarks.serving_bench --smoke   # CI
+
+CPU wall times are proxies for the TPU target (see ROADMAP's real-TPU
+validation item); the *relations* — AccuracyTrader holding accuracy loss
+near the stage-1 floor while partial execution collapses under load, at
+equal deadline — are what transfer.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Optional, Sequence
+
+
+def serving_sweep(rates: Sequence[float],
+                  policies: Sequence[str] = ("basic", "partial",
+                                             "accuracytrader"),
+                  *,
+                  n_slots: int = 4,
+                  prompt_len: int = 128,
+                  max_new_tokens: int = 8,
+                  deadline_ms: float = 60.0,
+                  duration_s: float = 1.0,
+                  arch: str = "llama3-8b",
+                  impl: Optional[str] = None,
+                  seed: int = 2) -> Dict:
+  """One engine per policy (compiled program set reused across rates; the
+  calibrated latency model persists across windows, as in the simulator)."""
+  from repro.configs.registry import get_config
+  from repro.serve.engine import EngineConfig, ServingEngine, run_open_loop
+
+  cfg = get_config(arch, smoke=True)
+  out: Dict = {"sweep": {}, "config": {
+      "arch": arch, "n_slots": n_slots, "prompt_len": prompt_len,
+      "max_new_tokens": max_new_tokens, "deadline_ms": deadline_ms,
+      "duration_s": duration_s, "rates": list(rates), "seed": seed}}
+  for policy in policies:
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=n_slots, prompt_len=prompt_len,
+        max_new_tokens=max_new_tokens, deadline_ms=deadline_ms,
+        policy=policy, impl=impl, seed=seed))
+    out["config"]["impl"] = eng.impl
+    out["config"]["buckets"] = list(eng.buckets)
+    rows = {}
+    for rate in rates:
+      s = run_open_loop(eng, rate_per_s=float(rate),
+                        duration_s=duration_s, seed=seed)
+      rows[str(rate)] = {k: round(float(v), 3) for k, v in s.items()}
+      print(f"serving_{policy}_rate{rate},{s['mean'] * 1e3:.1f},"
+            f"p99={s['p99']:.1f}ms p999={s['p999']:.1f}ms "
+            f"loss={s['accuracy_loss_pct']:.2f}% "
+            f"miss={s['deadline_miss_pct']:.1f}% "
+            f"budget={s['mean_budget']:.2f}")
+    out["sweep"][policy] = rows
+  top = str(rates[-1])
+  if {"partial", "accuracytrader"} <= set(out["sweep"]):
+    at = out["sweep"]["accuracytrader"][top]["accuracy_loss_pct"]
+    pe = out["sweep"]["partial"][top]["accuracy_loss_pct"]
+    # Recorded, not asserted: the caller judges after the artifact is
+    # written (a noisy host must not lose the whole sweep's data).
+    out["check"] = {"top_rate": float(rates[-1]),
+                    "accuracytrader_loss_pct": at,
+                    "partial_loss_pct": pe,
+                    "at_loses_less": bool(at < pe)}
+  return out
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--json", default=None, metavar="PATH",
+                  help="dump the sweep as a JSON baseline "
+                       "(e.g. BENCH_serving.json)")
+  ap.add_argument("--smoke", action="store_true",
+                  help="tiny sweep for CI: 2 rates, short windows")
+  ap.add_argument("--impl", default=None,
+                  choices=["auto", "pallas", "xla", "interpret"])
+  ap.add_argument("--rate-scale", type=float, default=None,
+                  help="multiplier on the paper's cf_rates (default: 3.0 "
+                       "full, 4.0 smoke — sized so the top rate saturates "
+                       "the CPU proxy)")
+  args = ap.parse_args()
+
+  from repro.serving.workload import CF_RATES
+
+  print("name,us_per_call,derived")
+  t0 = time.perf_counter()
+  if args.smoke:
+    # The top smoke rate outpaces per-request admission (prefill+build
+    # ~ms) by construction, so the window saturates on any host and the
+    # partial-vs-accuracytrader ordering is checkable in CI.
+    scale = args.rate_scale if args.rate_scale is not None else 4.0
+    res = serving_sweep(
+        rates=[20 * scale, 100 * scale],
+        policies=("partial", "accuracytrader"),
+        n_slots=2, prompt_len=64, max_new_tokens=4, deadline_ms=40.0,
+        duration_s=0.5, impl=args.impl)
+  else:
+    scale = args.rate_scale if args.rate_scale is not None else 3.0
+    res = serving_sweep(rates=[r * scale for r in CF_RATES],
+                        impl=args.impl)
+  res["meta"] = {"wall_s": round(time.perf_counter() - t0, 1),
+                 "smoke": bool(args.smoke)}
+  try:
+    import jax
+    res["meta"]["backend"] = jax.default_backend()
+  except Exception:
+    pass
+  if args.json:
+    with open(args.json, "w") as f:
+      json.dump(res, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.json}")
+  if "check" in res:
+    c = res["check"]
+    assert c["at_loses_less"], (
+        "AccuracyTrader should lose less accuracy than partial at the "
+        f"saturated rate {c['top_rate']} (equal deadline): "
+        f"at={c['accuracytrader_loss_pct']}% "
+        f"partial={c['partial_loss_pct']}%")
+
+
+if __name__ == "__main__":
+  main()

@@ -18,11 +18,66 @@ paper's low-priority offline module running behind the online path).
 
   # pipelined prefill/build over 4 prompt batches:
   PYTHONPATH=src python -m repro.launch.serve --batches 4 --pipeline
+
+With ``--engine`` the driver instead runs the deadline-driven
+continuous-batching engine (`repro.serve.engine`, DESIGN.md §8) over an
+arrival trace: requests admit/retire in shared cache slots mid-flight and
+every budget decision is calibrated by measured step latencies.
+
+  # paper Tables 1-2 load sweep (measured):
+  PYTHONPATH=src python -m repro.launch.serve --engine --trace cf_rates
+
+  # diurnal Sogou-shaped hours (Fig 7a):
+  PYTHONPATH=src python -m repro.launch.serve --engine \
+      --trace sogou_hourly --hours 3,9,21
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def _engine_main(args):
+  """Continuous-batching engine over an arrival trace (DESIGN.md §8)."""
+  import json
+
+  from repro.configs.registry import get_config
+  from repro.serve.engine import EngineConfig, ServingEngine, run_open_loop
+  from repro.serving.workload import CF_RATES, hour_rate
+
+  cfg = get_config(args.arch, smoke=args.smoke)
+  C = cfg.synopsis.cluster_size
+  prompt_len = max(C, (args.prompt_len // C) * C)
+  max_new = min(args.tokens, cfg.synopsis.recent)
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=args.n_slots, prompt_len=prompt_len, max_new_tokens=max_new,
+      deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl))
+  print(f"[engine] impl={eng.impl!r} policy={args.policy} "
+        f"slots={args.n_slots} prompt={prompt_len} tokens={max_new} "
+        f"M={eng.M} buckets={eng.buckets} deadline={args.deadline_ms}ms")
+
+  if args.trace == "cf_rates":
+    points = [(f"rate{r}", r * args.rate_scale) for r in CF_RATES]
+  else:
+    hours = [int(h) for h in args.hours.split(",")]
+    points = [(f"hour{h:02d}", hour_rate(h) * args.rate_scale)
+              for h in hours]
+  results = {}
+  for name, rate in points:
+    s = run_open_loop(eng, rate_per_s=rate, duration_s=args.duration,
+                      seed=0)
+    results[name] = {"rate_per_s": rate,
+                     **{k: round(float(v), 3) for k, v in s.items()}}
+    print(f"[{name}] rate={rate:6.1f}/s n={s['n']:4.0f} "
+          f"p50={s['p50']:7.1f}ms p99={s['p99']:7.1f}ms "
+          f"p999={s['p999']:7.1f}ms loss={s['accuracy_loss_pct']:5.2f}% "
+          f"miss={s['deadline_miss_pct']:5.1f}% "
+          f"budget={s['mean_budget']:.2f}")
+  if args.json:
+    with open(args.json, "w") as f:
+      json.dump({"trace": args.trace, "policy": args.policy,
+                 "results": results}, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.json}")
 
 
 def main():
@@ -47,7 +102,32 @@ def main():
                        "synopsis.impl (auto = Pallas kernels on TPU, XLA "
                        "reference elsewhere)")
   ap.add_argument("--deadline-ms", type=float, default=50.0)
+  ap.add_argument("--engine", action="store_true",
+                  help="run the deadline-driven continuous-batching "
+                       "engine over an arrival trace (DESIGN.md §8) "
+                       "instead of the single-batch demo loop")
+  ap.add_argument("--trace", default="cf_rates",
+                  choices=["cf_rates", "sogou_hourly"],
+                  help="arrival-rate source for --engine")
+  ap.add_argument("--policy", default="accuracytrader",
+                  choices=["basic", "partial", "accuracytrader", "fixed"])
+  ap.add_argument("--n-slots", type=int, default=2,
+                  help="engine batch lanes (max resident requests)")
+  ap.add_argument("--duration", type=float, default=1.0,
+                  help="seconds of arrivals per engine measurement window")
+  ap.add_argument("--rate-scale", type=float, default=1.0,
+                  help="multiplier on the trace's req/s rates (size the "
+                       "load to the host: the paper's rates target a "
+                       "110-VM cluster)")
+  ap.add_argument("--hours", default="3,9,21",
+                  help="comma-separated hours of day for --trace "
+                       "sogou_hourly (0-23; 24 aliases 0)")
+  ap.add_argument("--json", default=None, metavar="PATH",
+                  help="write the --engine sweep results as JSON")
   args = ap.parse_args()
+
+  if args.engine:
+    return _engine_main(args)
 
   import jax
   import jax.numpy as jnp

@@ -1,0 +1,429 @@
+"""Deadline-driven continuous-batching serving engine (DESIGN.md §8).
+
+This closes the loop the discrete-event simulator (`repro.serving.service`)
+only *models*: requests from an arrival trace (`repro.serving.workload`)
+occupy slots in a shared synopsis-KV cache, and each decode step picks its
+refinement budget with the same `core.deadline.BudgetController` the
+simulator uses — except here the controller is calibrated by **measured**
+step wall times, so the accuracy-vs-tail-latency trade comes from the real
+kernel path, not a latency model.
+
+Slot lifecycle (DESIGN.md §8): a request is admitted to a free batch lane
+(prefill -> synopsis build -> `kv_cache.write_slot`), decodes through
+budgeted serve steps shared with the other resident slots (stage 1 always
+runs; stage 2 refines the budget's clusters), accumulates its new tokens
+in its own recent-ring position (`synopsis_kv.append_recent_slots`), and
+retires when its token target is reached — freeing the lane mid-flight
+for the next queued request, no lockstep batches.
+
+Compiled-program count stays bounded the same way the simulator assumes:
+budgets are bucketed (`BudgetController.buckets`), so the engine jits one
+serve step per bucket plus one prefill and one build program, all warmed
+before the first measured step.
+
+Policies (the simulator's techniques, re-grounded in measured time):
+
+  * ``basic``          — full budget every step, nothing dropped.
+  * ``partial``        — full budget, but a request still resident at its
+                         deadline is dropped mid-flight (lane freed, its
+                         accuracy contribution lost — the paper's skipped
+                         partial results), and one finishing late scores 0.
+  * ``accuracytrader`` — per-step bucketed budget from the deadline
+                         controller against the most urgent resident
+                         request's remaining time; stage 1 always lands.
+  * ``fixed``          — constant budget (tests/parity runs; ``reissue``
+                         only exists in the simulator — replicating a
+                         component has no single-host analogue).
+
+`MeasuredStepBackend` exports the engine's measured per-bucket step
+latencies back to the simulator (`ScatterGatherService(step_backend=...)`)
+so the fleet-scale simulation runs on real component service times.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deadline import BudgetController, LatencyModel
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.serve import kv_cache as kvc
+from repro.serve import synopsis_kv as skv
+from repro.serve.prefill import make_prefill_step
+from repro.serve.serve_step import make_serve_step, resolve_impl
+from repro.serving.latency import TailTracker
+from repro.serving.service import _default_concentration
+from repro.serving.workload import poisson_arrivals
+
+POLICIES = ("basic", "partial", "accuracytrader", "fixed")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+  """Engine knobs (model shape comes from the ModelConfig)."""
+  n_slots: int = 4                 # batch lanes == max resident requests
+  prompt_len: int = 128            # tokens per admitted prompt
+  max_new_tokens: int = 8          # decode steps per request (<= recent)
+  deadline_ms: float = 80.0        # per-request service deadline
+  policy: str = "accuracytrader"
+  fixed_budget: int = 0            # for policy="fixed"
+  impl: Optional[str] = None       # kernel impl; None -> cfg.synopsis.impl
+  buckets: Optional[Sequence[int]] = None   # None -> {0, 1, 2, 4, ..., M}
+  seed: int = 0
+
+
+@dataclasses.dataclass
+class EngineRequest:
+  rid: int
+  arrival_ms: float
+  prompt: np.ndarray               # (prompt_len,) int32
+  max_new_tokens: int
+  # Filled by the engine:
+  admit_ms: float = -1.0
+  finish_ms: float = -1.0
+  tokens: List[int] = dataclasses.field(default_factory=list)
+  budgets: List[int] = dataclasses.field(default_factory=list)
+  accuracy: float = 0.0
+
+  @property
+  def latency_ms(self) -> float:
+    return self.finish_ms - self.arrival_ms
+
+  @property
+  def queue_ms(self) -> float:
+    return self.admit_ms - self.arrival_ms
+
+
+@dataclasses.dataclass
+class _Slot:
+  req: EngineRequest
+  remaining: int
+
+
+class ServingEngine:
+  """Continuous-batching AccuracyTrader engine over the kernel serve path.
+
+  ``accuracy_fn`` maps the fraction of ranked clusters refined in a step
+  to result accuracy; the default is the simulator's fig-4 concentration
+  curve, so engine and simulator report on the same scale."""
+
+  def __init__(self, cfg: cm.ModelConfig, ecfg: EngineConfig,
+               params=None,
+               accuracy_fn: Optional[Callable[[float], float]] = None):
+    if kvc.n_attn_positions(cfg) == 0:
+      raise ValueError(f"{cfg.name}: no attention positions — nothing to "
+                       "synopsize (DESIGN.md §5); use mode='exact' serving")
+    C = cfg.synopsis.cluster_size
+    if ecfg.prompt_len % C != 0:
+      raise ValueError(f"prompt_len {ecfg.prompt_len} % cluster_size {C}")
+    if ecfg.max_new_tokens > cfg.synopsis.recent:
+      raise ValueError(
+          f"max_new_tokens {ecfg.max_new_tokens} > recent ring "
+          f"{cfg.synopsis.recent}: a slot's decode residency must fit the "
+          "ring (absorb_recent is a whole-cache offline program)")
+    if ecfg.policy not in POLICIES:
+      raise ValueError(f"policy {ecfg.policy!r} not in {POLICIES}")
+    self.cfg = cfg
+    self.ecfg = ecfg
+    self.M = ecfg.prompt_len // C
+    self.impl = resolve_impl(ecfg.impl if ecfg.impl is not None
+                             else cfg.synopsis.impl)
+    if ecfg.buckets is not None:
+      buckets = tuple(sorted({int(b) for b in ecfg.buckets}))
+    else:
+      buckets = [0]
+      b = 1
+      while b < self.M:
+        buckets.append(b)
+        b *= 2
+      buckets = tuple(buckets + [self.M])
+    if any(b < 0 or b > self.M for b in buckets):
+      raise ValueError(f"buckets {buckets} outside [0, M={self.M}]")
+    self.buckets = buckets
+    if ecfg.policy == "fixed" and ecfg.fixed_budget not in buckets:
+      self.buckets = tuple(sorted(set(buckets) | {ecfg.fixed_budget}))
+    self.controller = BudgetController(
+        LatencyModel(base=2.0, slope=0.5, alpha=0.1),
+        buckets=self.buckets, i_max_cap=self.M)
+    self.accuracy_fn = accuracy_fn or _default_concentration
+
+    if params is None:
+      params, _ = cm.split(tf.init_model(jax.random.PRNGKey(ecfg.seed), cfg))
+      params = jax.tree.map(lambda p: p.astype(cfg.dtype), params)
+    self.params = params
+
+    self._prefill = jax.jit(make_prefill_step(cfg, impl=self.impl))
+    self._build = jax.jit(lambda c: skv.build(c, cfg, impl=self.impl))
+    self._bx = kvc.slot_batch_axes(cfg, ecfg.n_slots, ecfg.prompt_len,
+                                   synopsis=True)
+    bx = self._bx
+    self._write = jax.jit(
+        lambda cache, sub, slot: kvc.write_slot(cache, sub, slot, bx))
+    self._append = jax.jit(skv.append_recent_slots)
+    self._step_cache: Dict[int, Callable] = {}
+    self._warming = False
+
+    self.reset()
+    self._warmup()
+
+  # -- state ----------------------------------------------------------------
+  def reset(self, reset_controller: bool = False) -> None:
+    """Fresh slots/cache/clock for a new measurement window.  The latency
+    model persists across windows by default (as in the simulator's
+    ``run_open_loop``)."""
+    e = self.ecfg
+    self.cache = kvc.zeros_cache(self.cfg, e.n_slots, e.prompt_len,
+                                 synopsis=True)
+    self.tok = jnp.zeros((e.n_slots, 1), jnp.int32)
+    self.slots: List[Optional[_Slot]] = [None] * e.n_slots
+    self.now_ms = 0.0
+    self.completed: List[EngineRequest] = []
+    self.events: List[Tuple[str, int, int, float]] = []
+    self.step_log: List[Tuple[int, float, int]] = []   # (budget, ms, active)
+    if reset_controller:
+      self.controller = BudgetController(
+          LatencyModel(base=2.0, slope=0.5, alpha=0.1),
+          buckets=self.buckets, i_max_cap=self.M)
+
+  def _step_fn(self, budget: int):
+    if budget not in self._step_cache:
+      self._step_cache[budget] = jax.jit(make_serve_step(
+          self.cfg, mode="synopsis", i_max=budget, impl=self.impl))
+    return self._step_cache[budget]
+
+  def _warm_buckets(self) -> Sequence[int]:
+    p = self.ecfg.policy
+    if p == "accuracytrader":
+      return self.buckets
+    if p == "fixed":
+      return (self.ecfg.fixed_budget,)
+    return (self.M,)
+
+  def _warmup(self) -> None:
+    """Compile every program the run can dispatch (one serve step per
+    bucket + prefill + build + the slot writes) by driving the *real*
+    admit/step paths on a dummy request, so measured latencies are
+    steady-state from the first trace request; warmup state is then
+    discarded and never observed by the controller."""
+    self._warming = True
+    warm = self._warm_buckets()
+    req = EngineRequest(rid=-1, arrival_ms=0.0,
+                        prompt=np.zeros((self.ecfg.prompt_len,), np.int32),
+                        max_new_tokens=len(warm))
+    self._admit(req, 0)
+    for b in warm:
+      self._decode_step([0], budget=b)
+    self._warming = False
+    self.reset()
+
+  # -- scheduling -----------------------------------------------------------
+  def _admit(self, req: EngineRequest, slot: int) -> None:
+    # queue_ms measures pure waiting: the clock *before* this request's
+    # own prefill+build advances it.
+    req.admit_ms = self.now_ms
+    t0 = time.perf_counter()
+    prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+    logits, cache1 = self._prefill(self.params, prompt)
+    syn = self._build(cache1)
+    self.cache = self._write(self.cache, syn, slot)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+    self.tok = self.tok.at[slot, 0].set(first[0])
+    jax.block_until_ready((self.cache, self.tok))
+    self.now_ms += (time.perf_counter() - t0) * 1e3
+    req.tokens.append(int(first[0]))
+    self.slots[slot] = _Slot(req, req.max_new_tokens)
+    self.events.append(("admit", req.rid, slot, self.now_ms))
+
+  def _pick_budget(self, active: Sequence[int]) -> int:
+    e = self.ecfg
+    if e.policy in ("basic", "partial"):
+      return self.M
+    if e.policy == "fixed":
+      return e.fixed_budget
+    remaining = min(self.slots[i].req.arrival_ms + e.deadline_ms
+                    - self.now_ms for i in active)
+    return self.controller.budget_for(max(remaining, 0.0))
+
+  def _retire(self, slot: int) -> None:
+    s = self.slots[slot]
+    req = s.req
+    req.finish_ms = self.now_ms
+    e = self.ecfg
+    if e.policy == "basic":
+      req.accuracy = 1.0
+    elif e.policy == "partial":
+      # Partial execution: a result missing at the deadline is skipped —
+      # its entire accuracy contribution is lost (paper §5).
+      req.accuracy = 1.0 if req.latency_ms <= e.deadline_ms else 0.0
+    else:
+      # Stage 1 always landed; each step covered budget/M of the ranked
+      # clusters exactly plus the synopsis estimate of the rest.
+      fr = [min(b, self.M) / self.M for b in req.budgets] or [0.0]
+      req.accuracy = float(np.mean([self.accuracy_fn(f) for f in fr]))
+    self.slots[slot] = None
+    self.completed.append(req)
+    self.events.append(("retire", req.rid, slot, self.now_ms))
+
+  def _decode_step(self, active: Sequence[int],
+                   budget: Optional[int] = None) -> None:
+    if budget is None:
+      budget = self._pick_budget(active)
+    step = self._step_fn(budget)
+    t0 = time.perf_counter()
+    logits, st = step(self.params, self.cache, self.tok)
+    new_tok = jnp.argmax(logits, -1).astype(jnp.int32)        # (n_slots,)
+    mask = np.zeros((self.ecfg.n_slots,), bool)
+    mask[list(active)] = True
+    amask = jnp.asarray(mask)
+    self.cache = self._append(self.cache, st["k_delta"], st["v_delta"],
+                              amask)
+    self.cache["pos"] = jnp.where(amask, st["pos"], self.cache["pos"])
+    # Hybrid archs: SSM decode state advances every step too (per-slot).
+    for name in ("conv_state", "ssd_state"):
+      if name in st:
+        shape = [1] * self.cache[name].ndim
+        shape[self._bx[name]] = self.ecfg.n_slots
+        m = amask.reshape(shape)
+        self.cache[name] = jnp.where(m, st[name], self.cache[name])
+    self.tok = jnp.where(amask[:, None], new_tok[:, None], self.tok)
+    jax.block_until_ready((self.cache, self.tok))
+    dt = (time.perf_counter() - t0) * 1e3
+    self.now_ms += dt
+    if self.ecfg.policy == "accuracytrader" and not self._warming:
+      self.controller.observe(budget, dt)
+    self.step_log.append((budget, dt, len(active)))
+    toks = np.asarray(new_tok)
+    for i in active:
+      s = self.slots[i]
+      s.req.tokens.append(int(toks[i]))
+      s.req.budgets.append(budget)
+      s.remaining -= 1
+      if s.remaining <= 0:
+        self._retire(i)
+
+  # -- driving --------------------------------------------------------------
+  def run(self, requests: Sequence[EngineRequest]) -> Dict[str, float]:
+    """Drive the engine over an arrival trace; returns the window summary.
+
+    The clock is hybrid: arrivals advance on the trace's clock, service
+    advances by *measured* wall time of each dispatched program — so
+    queueing delay under load is real, not modelled."""
+    pending = collections.deque(
+        sorted(requests, key=lambda r: (r.arrival_ms, r.rid)))
+    while pending or any(s is not None for s in self.slots):
+      # Admit every arrived request that fits a free lane.
+      free = [i for i, s in enumerate(self.slots) if s is None]
+      while free and pending and pending[0].arrival_ms <= self.now_ms:
+        self._admit(pending.popleft(), free.pop(0))
+      if self.ecfg.policy == "partial":
+        # Partial execution sheds unfinished work AT the deadline: the
+        # result is skipped (accuracy 0 via _retire) and the lane frees
+        # for the queue — a doomed request must not keep burning steps.
+        for i, s in enumerate(self.slots):
+          if s is not None and self.now_ms >= (
+              s.req.arrival_ms + self.ecfg.deadline_ms):
+            self._retire(i)
+      active = [i for i, s in enumerate(self.slots) if s is not None]
+      if not active:
+        if not pending:
+          break
+        # Idle: jump to the next arrival.
+        self.now_ms = max(self.now_ms, pending[0].arrival_ms)
+        continue
+      self._decode_step(active)
+    return self.summary()
+
+  def summary(self) -> Dict[str, float]:
+    tracker = TailTracker()
+    for r in self.completed:
+      tracker.observe(r.latency_ms)
+    s = tracker.summary()
+    accs = [r.accuracy for r in self.completed]
+    s["accuracy_loss_pct"] = 100.0 * (1.0 - float(np.mean(accs))) \
+        if accs else 0.0
+    s["deadline_miss_pct"] = 100.0 * float(np.mean(
+        [r.latency_ms > self.ecfg.deadline_ms for r in self.completed])) \
+        if self.completed else 0.0
+    s["mean_budget"] = float(np.mean([b for b, _, _ in self.step_log])) \
+        if self.step_log else 0.0
+    s["steps"] = len(self.step_log)
+    s["queue_p99"] = float(np.percentile(
+        [r.queue_ms for r in self.completed], 99)) if self.completed else 0.0
+    return s
+
+  # -- probes ---------------------------------------------------------------
+  def probe_step_ms(self, budget: int, iters: int = 3) -> float:
+    """Median measured latency of one bucketed serve step on the current
+    resident cache (state is not mutated) — the calibration source for
+    :class:`MeasuredStepBackend`."""
+    if budget not in self.buckets:
+      raise ValueError(f"budget {budget} not a bucket {self.buckets}")
+    step = self._step_fn(budget)
+    jax.block_until_ready(step(self.params, self.cache, self.tok))
+    ts = []
+    for _ in range(iters):
+      t0 = time.perf_counter()
+      jax.block_until_ready(step(self.params, self.cache, self.tok))
+      ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+class MeasuredStepBackend:
+  """Measured per-bucket step latencies for the discrete-event simulator.
+
+  The simulator's ``accuracytrader`` technique can delegate component
+  service times to this table (``ScatterGatherService(step_backend=...)``):
+  a component "processing i ranked clusters" then costs what the real
+  kernel path *measured* for the corresponding budget bucket, closing the
+  simulated-time -> measured-time loop (DESIGN.md §8).
+
+  Budget units differ between the stacks: the simulator budgets clusters
+  out of ``ServiceConfig.full_items`` (default 100), the engine out of
+  its M = prompt_len / cluster_size.  ``full_items`` sets the conversion
+  — a simulator budget of ``i`` costs what the engine measured at the
+  bucket nearest ``i / full_items * M``, so the measured latency *slope*
+  over the budget range survives the translation instead of collapsing
+  onto the top engine bucket."""
+
+  def __init__(self, engine: ServingEngine, iters: int = 3,
+               full_items: int = 100):
+    self.buckets = engine.buckets
+    self.M = engine.M
+    self.full_items = full_items
+    self.table = {b: engine.probe_step_ms(b, iters=iters)
+                  for b in self.buckets}
+
+  def step_ms(self, budget: int) -> float:
+    scaled = budget / max(self.full_items, 1) * self.M
+    nearest = min(self.buckets, key=lambda b: abs(b - scaled))
+    return self.table[nearest]
+
+
+def make_requests(arrivals_ms: Sequence[float], prompt_len: int,
+                  max_new_tokens: int, vocab: int,
+                  seed: int = 0) -> List[EngineRequest]:
+  """Random-prompt requests at the given arrival offsets (ms)."""
+  rng = np.random.default_rng(seed)
+  return [EngineRequest(rid=i, arrival_ms=float(t),
+                        prompt=rng.integers(0, vocab, prompt_len,
+                                            dtype=np.int32),
+                        max_new_tokens=max_new_tokens)
+          for i, t in enumerate(arrivals_ms)]
+
+
+def run_open_loop(engine: ServingEngine, rate_per_s: float,
+                  duration_s: float, seed: int = 0) -> Dict[str, float]:
+  """One measurement window of Poisson arrivals at ``rate_per_s`` — the
+  engine-side mirror of ``ScatterGatherService.run_open_loop``."""
+  engine.reset()
+  arrivals = poisson_arrivals(rate_per_s, duration_s, seed=seed)
+  reqs = make_requests(arrivals, engine.ecfg.prompt_len,
+                       engine.ecfg.max_new_tokens, engine.cfg.vocab,
+                       seed=seed)
+  return engine.run(reqs)

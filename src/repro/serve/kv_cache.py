@@ -11,7 +11,10 @@ scans them exactly like the parameters):
   * SSMState    — (conv_state, ssd_state) for mamba blocks.
 
 ``cache_specs`` returns ShapeDtypeStructs (dry-run contract) and
-``init_cache`` real zeros (tests).  Sharding axes follow the same logical
+``init_cache`` real zeros (tests).  For continuous batching the batch
+axis doubles as a *slot* axis: ``zeros_cache`` allocates the shared slot
+pool and ``write_slot`` admits one request's B=1 cache into a lane
+mid-flight (DESIGN.md §8).  Sharding axes follow the same logical
 names as params; under SERVE_RULES the sequence axis of caches/synopses
 shards over `model` — each shard is one paper "component" and the
 online-softmax merge is the result composer.
@@ -108,6 +111,43 @@ def cache_axes(cfg, B, S, *, synopsis: bool):
   return {k: ax
           for k, (sh, dt, ax) in cache_struct(cfg, B, S,
                                               synopsis=synopsis).items()}
+
+
+def zeros_cache(cfg, B, S, *, synopsis: bool):
+  """All-zeros cache — the continuous-batching engine's shared slot pool
+  (DESIGN.md §8).  Each batch lane is one request *slot*; admission writes
+  a freshly prefilled+built B=1 cache into a lane (`write_slot`) and
+  retirement simply frees the lane (a zeroed lane attends over zeros,
+  which is numerically safe and ignored by the engine)."""
+  return {name: jnp.zeros(sh, dt)
+          for name, (sh, dt, _) in cache_struct(cfg, B, S,
+                                                synopsis=synopsis).items()}
+
+
+def slot_batch_axes(cfg, B, S, *, synopsis: bool) -> Dict[str, int]:
+  """Per-leaf index of the batch ("slot") axis, derived from the logical
+  axis names in ``cache_struct`` — the admit/retire write path uses it so
+  slot updates work for every cache family (GQA, MLA, SSM, cross)."""
+  return {k: ax.index("batch")
+          for k, ax in cache_axes(cfg, B, S, synopsis=synopsis).items()}
+
+
+def write_slot(cache: Dict[str, jax.Array], sub: Dict[str, jax.Array],
+               slot, batch_axes: Dict[str, int]) -> Dict[str, jax.Array]:
+  """Write a B=1 per-request cache ``sub`` into lane ``slot`` of the
+  shared slot cache (continuous-batching admission, DESIGN.md §8).
+
+  ``slot`` may be a traced scalar (the engine jits this once); leaves of
+  ``cache`` with no counterpart in ``sub`` pass through untouched."""
+  out = {}
+  for name, dst in cache.items():
+    if name not in sub:
+      out[name] = dst
+      continue
+    ax = batch_axes[name]
+    upd = sub[name].astype(dst.dtype)
+    out[name] = jax.lax.dynamic_update_slice_in_dim(dst, upd, slot, axis=ax)
+  return out
 
 
 def init_cache(cfg, B, S, *, synopsis: bool, key=None):

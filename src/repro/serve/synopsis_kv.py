@@ -92,6 +92,25 @@ def append_recent(cache: Dict[str, jax.Array], k_delta, v_delta):
           "recent_len": cache["recent_len"] + 1}
 
 
+def append_recent_slots(cache: Dict[str, jax.Array], k_delta, v_delta,
+                        active: jax.Array):
+  """Per-slot recent-ring write for the continuous-batching engine
+  (DESIGN.md §8): slot ``b``'s new KV lands at its *own* ``recent_len[b]``
+  and only ``active`` slots advance — unlike :func:`append_recent`, slots
+  need not move in lockstep.  ``active``: (B,) bool.  Slots whose ring is
+  full neither write nor advance (the engine bounds residency so this is
+  unreachable; the guard keeps the op total)."""
+  rl = cache["recent_len"]                                    # (B,)
+  R = cache["recent_k"].shape[4]
+  ok = active & (rl < R)
+  hit = (jnp.arange(R)[None, :] == rl[:, None]) & ok[:, None]   # (B, R)
+  sel = hit[None, None, :, None, :, None]                     # (1,1,B,1,R,1)
+  rk = jnp.where(sel, k_delta, cache["recent_k"])
+  rv = jnp.where(sel, v_delta, cache["recent_v"])
+  return {**cache, "recent_k": rk, "recent_v": rv,
+          "recent_len": rl + ok.astype(rl.dtype)}
+
+
 def absorb_recent(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
                   impl: Optional[str] = None) -> Dict[str, jax.Array]:
   """Incremental synopsis update: recent tokens -> new clusters appended

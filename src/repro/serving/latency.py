@@ -59,17 +59,26 @@ class ComponentModel:
     self.rng = np.random.default_rng(self.seed)
     self.busy_until = 0.0
 
-  def service_time(self, items: int) -> float:
-    t = self.base_ms + self.per_item_ms * items
+  def service_time(self, items: int,
+                   base_ms: Optional[float] = None) -> float:
+    """Service time for ``items``; ``base_ms`` replaces the modelled
+    ``base + per_item * items`` with an externally *measured* duration
+    (the engine's per-bucket step latency) — interference noise and
+    stragglers still apply on top (they model the co-located jobs, which
+    the single-host measurement cannot see)."""
+    t = base_ms if base_ms is not None \
+        else self.base_ms + self.per_item_ms * items
     t *= float(self.rng.lognormal(0.0, self.interference))
     if self.rng.random() < self.straggler_prob:
       t *= self.straggler_scale
     return t
 
-  def submit(self, arrival_ms: float, items: int) -> float:
-    """FIFO queue: returns completion time."""
+  def submit(self, arrival_ms: float, items: int,
+             service_ms: Optional[float] = None) -> float:
+    """FIFO queue: returns completion time.  ``service_ms`` optionally
+    pins the pre-noise service duration to a measured value."""
     start = max(arrival_ms, self.busy_until)
-    done = start + self.service_time(items)
+    done = start + self.service_time(items, base_ms=service_ms)
     self.busy_until = done
     return done
 

@@ -20,6 +20,16 @@ it needs, so the p99.9 of component latency is the service latency
 Components are the discrete-event models in serving/latency.py; accuracy
 accounting is exact (fractions of accuracy-relevant data actually
 processed come from the real engine's correlation ranking).
+
+``step_backend`` (optional) closes the loop with the real kernel path
+(DESIGN.md §8): when set, the ``accuracytrader`` technique's component
+service times come from the serving engine's *measured* per-bucket decode
+latencies (`repro.serve.engine.MeasuredStepBackend`) instead of the
+modelled ``base + slope * items`` — simulated time, measured step time.
+The simulator and the engine share the `core.deadline` BudgetController
+implementation and the fig-4 concentration curve; budget units differ
+(clusters out of ``full_items`` here vs the engine's M), which the
+backend converts (see ``MeasuredStepBackend.full_items``).
 """
 from __future__ import annotations
 
@@ -56,8 +66,12 @@ class ServiceConfig:
 
 class ScatterGatherService:
   def __init__(self, cfg: ServiceConfig,
-               accuracy_fn: Optional[Callable[[float], float]] = None):
+               accuracy_fn: Optional[Callable[[float], float]] = None,
+               step_backend=None):
     self.cfg = cfg
+    # Measured per-budget step latencies (engine.MeasuredStepBackend) —
+    # accuracytrader components serve in measured, not modelled, time.
+    self.step_backend = step_backend
     self.components = [
         ComponentModel(seed=cfg.seed * 1000 + i,
                        full_items=cfg.full_items)
@@ -91,9 +105,12 @@ class ScatterGatherService:
     for i, comp in enumerate(self.components):
       if tech in ("basic", "partial", "reissue"):
         items = cfg.full_items
+        service_ms = None
       else:
         items = budget
-      t_done = comp.submit(req.arrival_ms, items)
+        service_ms = (self.step_backend.step_ms(budget)
+                      if self.step_backend is not None else None)
+      t_done = comp.submit(req.arrival_ms, items, service_ms=service_ms)
       done_times.append(t_done)
       processed_frac.append(items / cfg.full_items)
 

@@ -4,11 +4,19 @@
                       rates {20, 40, 60, 80, 100} req/s (Tables 1-2).
 * ``sogou_hourly``  — a 24-hour diurnal arrival-rate profile shaped like
                       the Sogou query log (Fig 7a): low 2-8 am, morning
-                      ramp (hour 9 increasing), midday plateau (hour 10
-                      steady), evening peak, midnight decay (hour 24
-                      decreasing).
+                      ramp (hour 9 increasing), midday plateau, evening
+                      peak (~90 req/s at 21:00), midnight decay.
 * ``hour_trace``    — within-hour 60 x 1-minute sessions with the hour's
                       trend (increasing / steady / decreasing) — Fig 5/6.
+* ``poisson_arrivals`` — request arrival offsets for one open-loop window
+                      (the engine's arrival source; the simulator draws
+                      its own equivalent stream inline).
+
+Hour convention: ``SOGOU_HOURLY[h]`` is the rate at *0-based* hour of day
+``h`` (index 21 = 21:00, the peak).  ``canonical_hour`` is the single
+place both conventions meet: callers may pass 0..23 or the 1-based 1..24,
+and hour 24 — the 1-based name for midnight — aliases hour 0 (same rate,
+same trend, same trace).
 """
 from __future__ import annotations
 
@@ -18,26 +26,41 @@ import numpy as np
 
 CF_RATES = (20, 40, 60, 80, 100)
 
-# req/s per hour-of-day, shaped like Fig 7(a) (peak ~ 90 req/s at 21:00).
+# req/s at 0-based hour-of-day h (peak ~ 90 req/s at 21:00, Fig 7a).
 SOGOU_HOURLY: List[float] = [
     35, 22, 14, 10, 8, 8, 10, 16, 28, 45, 55, 60,
     62, 58, 56, 58, 60, 62, 66, 74, 84, 90, 70, 50,
 ]
 
 
+def canonical_hour(hour: int) -> int:
+  """Normalise an hour in either the 0-based (0..23) or 1-based (1..24)
+  convention to the 0-based index into ``SOGOU_HOURLY``; 24 == 0."""
+  return hour % 24
+
+
+def hour_rate(hour: int) -> float:
+  """Arrival rate (req/s) at the given hour of day (either convention)."""
+  return SOGOU_HOURLY[canonical_hour(hour)]
+
+
 def hour_trend(hour: int) -> str:
-  if hour in (9,):
+  h = canonical_hour(hour)
+  if h == 9:
     return "increasing"
-  if hour in (24, 23):
+  if h in (23, 0):        # 23:00 decay into midnight (hour 24 == hour 0)
     return "decreasing"
   return "steady"
 
 
 def hour_trace(hour: int, sessions: int = 60, seed: int = 0) -> np.ndarray:
-  """Per-minute arrival rates (req/s) for one hour."""
-  rng = np.random.default_rng(seed + hour)
-  base = SOGOU_HOURLY[(hour - 1) % 24]
-  trend = hour_trend(hour)
+  """Per-minute arrival rates (req/s) for one hour.  ``hour`` follows
+  ``canonical_hour``, so ``hour_trace(0)`` and ``hour_trace(24)`` are the
+  same trace."""
+  h = canonical_hour(hour)
+  rng = np.random.default_rng(seed + h)
+  base = SOGOU_HOURLY[h]
+  trend = hour_trend(h)
   t = np.linspace(0, 1, sessions)
   if trend == "increasing":
     shape = 0.55 + 0.9 * t
@@ -47,3 +70,18 @@ def hour_trace(hour: int, sessions: int = 60, seed: int = 0) -> np.ndarray:
     shape = np.ones_like(t)
   noise = rng.lognormal(0, 0.08, sessions)
   return base * shape * noise
+
+
+def poisson_arrivals(rate_per_s: float, duration_s: float,
+                     seed: int = 0) -> np.ndarray:
+  """Arrival offsets (ms, sorted, starting at 0) of an open-loop Poisson
+  process at ``rate_per_s`` over one ``duration_s`` window."""
+  rng = np.random.default_rng(seed)
+  out, t = [], 0.0
+  end = duration_s * 1000.0
+  while True:
+    t += rng.exponential(1000.0 / max(rate_per_s, 1e-9))
+    if t >= end:
+      break
+    out.append(t)
+  return np.asarray(out)

@@ -1,0 +1,220 @@
+"""Continuous-batching serving engine (DESIGN.md §8): slot admit/retire
+invariants, deadline->budget monotonicity, xla-vs-interpret parity through
+the full engine loop, the budget-0 stage-1 floor, and the measured-latency
+delegation into the discrete-event simulator."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.deadline import BudgetController, LatencyModel
+from repro.serve import synopsis_kv as skv
+from repro.serve.engine import (EngineConfig, EngineRequest,
+                                MeasuredStepBackend, ServingEngine,
+                                make_requests, run_open_loop)
+from repro.serving.latency import ComponentModel
+from repro.serving.service import ScatterGatherService, ServiceConfig
+
+N_SLOTS, PROMPT, NEW = 2, 64, 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+  return get_config("llama3-8b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def engine(cfg):
+  return ServingEngine(cfg, EngineConfig(
+      n_slots=N_SLOTS, prompt_len=PROMPT, max_new_tokens=NEW,
+      deadline_ms=60.0, policy="accuracytrader", impl="xla"))
+
+
+def _deterministic_requests(cfg, arrivals):
+  return make_requests(arrivals, PROMPT, NEW, cfg.vocab, seed=7)
+
+
+def test_slot_admit_retire_invariants(cfg, engine):
+  engine.reset()
+  reqs = _deterministic_requests(cfg, [0.0, 0.0, 0.0, 2.0, 2.0, 250.0])
+  engine.run(reqs)
+
+  assert len(engine.completed) == len(reqs)
+  admits = {r: [] for r in range(len(reqs))}
+  occupied = {}
+  for kind, rid, slot, t in engine.events:
+    assert 0 <= slot < N_SLOTS
+    if kind == "admit":
+      assert slot not in occupied, "admit into an occupied slot"
+      occupied[slot] = rid
+      admits[rid].append(t)
+    else:
+      assert occupied.get(slot) == rid, "retire of a non-resident request"
+      del occupied[slot]
+    assert len(occupied) <= N_SLOTS
+  assert not occupied, "every admitted request retires"
+  for r in reqs:
+    assert len(admits[r.rid]) == 1, "each request admitted exactly once"
+    assert r.admit_ms >= r.arrival_ms      # no time travel
+    assert r.finish_ms > r.admit_ms
+    assert len(r.tokens) == NEW + 1        # prefill token + NEW decodes
+    assert len(r.budgets) == NEW
+    assert 0.0 <= r.accuracy <= 1.0
+  # The late arrival found an idle engine: it queued for ~no time.
+  late = next(r for r in reqs if r.arrival_ms == 250.0)
+  assert late.queue_ms < 50.0
+
+
+def test_budget_monotone_in_deadline(cfg, engine):
+  # Controller law (deterministic): tighter deadline => never more
+  # clusters, whatever the calibrated model says.
+  ctrl = BudgetController(LatencyModel(base=2.0, slope=0.5),
+                          buckets=engine.buckets, i_max_cap=engine.M)
+  for b, lat in [(0, 2.0), (2, 3.1), (4, 4.2), (4, 4.0), (2, 3.0)]:
+    ctrl.observe(b, lat)
+  budgets = [ctrl.budget_for(d) for d in np.linspace(0.0, 50.0, 200)]
+  assert budgets == sorted(budgets)
+  assert budgets[0] == engine.buckets[0]
+
+  # Through the engine loop: a tight deadline's mean budget never exceeds
+  # a loose one's on the same trace.
+  means = {}
+  for deadline in (2.0, 500.0):
+    engine.reset()
+    engine.ecfg.deadline_ms = deadline
+    engine.run(_deterministic_requests(cfg, [0.0, 1.0, 2.0, 3.0]))
+    means[deadline] = np.mean([b for b, _, _ in engine.step_log])
+  engine.ecfg.deadline_ms = 60.0
+  assert means[2.0] <= means[500.0]
+  assert means[500.0] == engine.M          # unloaded loose run refines all
+
+
+def test_xla_interpret_token_parity(cfg):
+  toks = {}
+  for impl in ("xla", "interpret"):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=32, max_new_tokens=2, policy="fixed",
+        fixed_budget=1, impl=impl))
+    reqs = make_requests([0.0, 0.0, 4.0], 32, 2, cfg.vocab, seed=11)
+    eng.run(reqs)
+    toks[impl] = [r.tokens for r in sorted(reqs, key=lambda r: r.rid)]
+  assert toks["xla"] == toks["interpret"]
+
+
+def test_stage1_always_produced_at_budget_zero(cfg):
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=PROMPT, max_new_tokens=NEW, policy="fixed",
+      fixed_budget=0, impl="xla"))
+  reqs = _deterministic_requests(cfg, [0.0, 0.0, 1.0])
+  eng.run(reqs)
+  floor = eng.accuracy_fn(0.0)
+  for r in reqs:
+    assert r.budgets == [0] * NEW
+    assert len(r.tokens) == NEW + 1        # a result ALWAYS comes back
+    assert all(0 <= t < cfg.vocab for t in r.tokens)
+    assert r.accuracy == pytest.approx(floor)
+  s = eng.summary()
+  assert s["accuracy_loss_pct"] == pytest.approx(100.0 * (1.0 - floor))
+
+
+def test_append_recent_slots_per_slot_positions():
+  nb, na, B, H, R, D = 1, 1, 3, 1, 4, 2
+  cache = {
+      "recent_k": jnp.zeros((nb, na, B, H, R, D)),
+      "recent_v": jnp.zeros((nb, na, B, H, R, D)),
+      "recent_len": jnp.array([0, 2, 3], jnp.int32),
+  }
+  delta = jnp.arange(B, dtype=jnp.float32).reshape(1, 1, B, 1, 1, 1) + 1.0
+  delta = jnp.broadcast_to(delta, (nb, na, B, H, 1, D))
+  active = jnp.array([True, False, True])
+  out = skv.append_recent_slots(cache, delta, 2.0 * delta, active)
+  rk = np.asarray(out["recent_k"])[0, 0, :, 0, :, 0]          # (B, R)
+  np.testing.assert_allclose(rk[0], [1.0, 0, 0, 0])           # slot 0 @ 0
+  np.testing.assert_allclose(rk[1], [0, 0, 0, 0])             # inactive
+  np.testing.assert_allclose(rk[2], [0, 0, 0, 3.0])           # slot 2 @ 3
+  np.testing.assert_array_equal(np.asarray(out["recent_len"]), [1, 2, 4])
+  np.testing.assert_allclose(np.asarray(out["recent_v"])[0, 0, 2, 0, 3, 0],
+                             6.0)
+  # Full ring: neither writes nor advances.
+  out2 = skv.append_recent_slots(out, delta, delta,
+                                 jnp.array([False, False, True]))
+  assert int(out2["recent_len"][2]) == 4
+  np.testing.assert_allclose(np.asarray(out2["recent_k"]),
+                             np.asarray(out["recent_k"]))
+
+
+def test_partial_drops_at_deadline_and_frees_lane(cfg):
+  """Partial execution sheds a request still resident at its deadline:
+  the lane frees mid-flight and the skipped result scores 0."""
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=1, prompt_len=PROMPT, max_new_tokens=NEW, deadline_ms=1.0,
+      policy="partial", impl="xla"))
+  reqs = _deterministic_requests(cfg, [0.0, 0.0, 0.0])
+  eng.run(reqs)
+  assert len(eng.completed) == len(reqs)      # dropped, not stuck
+  for r in reqs:
+    assert r.accuracy == 0.0                  # all missed the 1 ms deadline
+    assert len(r.tokens) < NEW + 1            # decode abandoned mid-flight
+  occupied = set()
+  for kind, rid, slot, _ in eng.events:       # lanes still cycle cleanly
+    occupied.add(slot) if kind == "admit" else occupied.discard(slot)
+  assert not occupied
+
+
+def test_hybrid_ssm_state_advances_per_step():
+  """Regression: decode must write conv/ssd deltas back per slot — with
+  the states frozen at prefill, one and two decode steps would leave
+  identical SSM state."""
+  jcfg = get_config("jamba-v0.1-52b", smoke=True)
+  states = {}
+  for n_new in (1, 2):
+    eng = ServingEngine(jcfg, EngineConfig(
+        n_slots=1, prompt_len=64, max_new_tokens=n_new, policy="fixed",
+        fixed_budget=1, impl="xla"))
+    eng.run(make_requests([0.0], 64, n_new, jcfg.vocab, seed=3))
+    states[n_new] = np.asarray(eng.cache["ssd_state"])
+  assert not np.allclose(states[1], states[2])
+
+
+def test_measured_backend_feeds_simulator(engine):
+  backend = MeasuredStepBackend(engine, iters=1, full_items=100)
+  assert set(backend.table) == set(engine.buckets)
+  assert all(v > 0 for v in backend.table.values())
+  # Simulator budgets (out of full_items=100) rescale onto engine buckets
+  # (out of M) instead of collapsing onto the top bucket.
+  assert backend.step_ms(200) == backend.table[engine.buckets[-1]]
+  assert backend.step_ms(0) == backend.table[0]
+  mid = min(engine.buckets, key=lambda b: abs(b - 0.5 * engine.M))
+  assert backend.step_ms(50) == backend.table[mid]
+
+  # The component queue serves in exactly the measured time when asked.
+  comp = ComponentModel(seed=0, interference=0.0, straggler_prob=0.0)
+  done = comp.submit(10.0, 5, service_ms=7.5)
+  assert done == pytest.approx(17.5)
+
+  svc = ScatterGatherService(
+      ServiceConfig(n_components=8, technique="accuracytrader",
+                    deadline_ms=100.0, seed=0),
+      step_backend=backend)
+  s = svc.run_open_loop(20.0, 1.0)
+  assert s["n"] > 0 and s["p999"] > 0.0
+  assert 0.0 <= s["accuracy_loss_pct"] <= 100.0
+
+
+def test_run_open_loop_summary_fields(engine):
+  s = run_open_loop(engine, rate_per_s=30.0, duration_s=0.3, seed=5)
+  for k in ("p50", "p99", "p999", "accuracy_loss_pct",
+            "deadline_miss_pct", "mean_budget", "queue_p99", "steps"):
+    assert k in s
+  assert s["n"] == len(engine.completed)
+
+
+def test_engine_rejects_inapplicable_configs(cfg):
+  with pytest.raises(ValueError):
+    ServingEngine(get_config("mamba2-370m", smoke=True),
+                  EngineConfig(prompt_len=64))   # no KV cache to synopsize
+  with pytest.raises(ValueError):
+    ServingEngine(cfg, EngineConfig(prompt_len=65))  # not cluster-aligned
+  with pytest.raises(ValueError):
+    ServingEngine(cfg, EngineConfig(
+        prompt_len=64, max_new_tokens=cfg.synopsis.recent + 1))

@@ -10,7 +10,8 @@ from repro.serving.apps import (CFRecommender, SearchEngine, movielens_like,
                                 webpages_like)
 from repro.serving.latency import ComponentModel, TailTracker
 from repro.serving.service import Request, ScatterGatherService, ServiceConfig
-from repro.serving.workload import SOGOU_HOURLY, hour_trace
+from repro.serving.workload import (SOGOU_HOURLY, canonical_hour, hour_rate,
+                                    hour_trace, hour_trend, poisson_arrivals)
 
 
 def _run(tech, rate, seed=0, duration=4.0, deadline=100.0):
@@ -73,6 +74,27 @@ def test_workload_traces():
   assert tr[-5:].mean() > tr[:5].mean()       # hour 9 increases
   tr24 = hour_trace(24, sessions=60)
   assert tr24[-5:].mean() < tr24[:5].mean()   # hour 24 decreases
+
+
+def test_workload_hour_convention_endpoints():
+  """Hour 24 (the 1-based name for midnight) and hour 0 are the same
+  hour: one canonical index, one rate, one trend, one trace."""
+  assert canonical_hour(0) == canonical_hour(24) == 0
+  assert hour_rate(24) == hour_rate(0) == SOGOU_HOURLY[0]
+  assert hour_trend(24) == hour_trend(0) == "decreasing"
+  np.testing.assert_array_equal(hour_trace(24, sessions=30),
+                                hour_trace(0, sessions=30))
+  # 0-based indexing end to end: the Fig-7a peak sits at 21:00.
+  assert hour_rate(21) == max(SOGOU_HOURLY) == 90
+  assert hour_trend(9) == "increasing"
+  assert hour_trend(23) == "decreasing"
+
+
+def test_poisson_arrivals():
+  arr = poisson_arrivals(100.0, 2.0, seed=0)
+  assert (np.diff(arr) > 0).all() and arr[0] >= 0
+  assert arr[-1] < 2000.0
+  assert 100 < len(arr) < 320                 # ~200 expected
 
 
 class TestApps:

@@ -46,7 +46,12 @@ def serving_sweep(rates: Sequence[float],
   out: Dict = {"sweep": {}, "config": {
       "arch": arch, "n_slots": n_slots, "prompt_len": prompt_len,
       "max_new_tokens": max_new_tokens, "deadline_ms": deadline_ms,
-      "duration_s": duration_s, "rates": list(rates), "seed": seed}}
+      "duration_s": duration_s, "rates": list(rates), "seed": seed,
+      # Arrival traces are seeded per (policy, rate) run below, so every
+      # policy sees the identical trace at each rate and re-running the
+      # bench reproduces the same arrivals — JSON diffs across PRs only
+      # reflect code changes, not RNG drift.
+      "trace_seed_rule": "seed*1000 + rate_index"}}
   for policy in policies:
     eng = ServingEngine(cfg, EngineConfig(
         n_slots=n_slots, prompt_len=prompt_len,
@@ -55,16 +60,37 @@ def serving_sweep(rates: Sequence[float],
     out["config"]["impl"] = eng.impl
     out["config"]["buckets"] = list(eng.buckets)
     rows = {}
-    for rate in rates:
+    for ri, rate in enumerate(rates):
       s = run_open_loop(eng, rate_per_s=float(rate),
-                        duration_s=duration_s, seed=seed)
+                        duration_s=duration_s, seed=seed * 1000 + ri)
       rows[str(rate)] = {k: round(float(v), 3) for k, v in s.items()}
       print(f"serving_{policy}_rate{rate},{s['mean'] * 1e3:.1f},"
             f"p99={s['p99']:.1f}ms p999={s['p999']:.1f}ms "
             f"loss={s['accuracy_loss_pct']:.2f}% "
+            f"shed={s['shed_pct']:.1f}% "
             f"miss={s['deadline_miss_pct']:.1f}% "
             f"budget={s['mean_budget']:.2f}")
     out["sweep"][policy] = rows
+  # Admission/decode overlap A/B (ROADMAP: serialized admission was the
+  # saturation point): same policy + top rate with the overlap disabled.
+  ab_policy = "accuracytrader" if "accuracytrader" in policies \
+      else policies[-1]
+  ab = {}
+  for on in (True, False):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=n_slots, prompt_len=prompt_len,
+        max_new_tokens=max_new_tokens, deadline_ms=deadline_ms,
+        policy=ab_policy, impl=impl, seed=seed, overlap_admission=on))
+    s = run_open_loop(eng, rate_per_s=float(rates[-1]),
+                      duration_s=duration_s,
+                      seed=seed * 1000 + len(rates) - 1)
+    ab["overlap_on" if on else "overlap_off"] = {
+        k: round(float(v), 3) for k, v in s.items()}
+    print(f"serving_admission_{'overlap' if on else 'serial'},"
+          f"{s['mean'] * 1e3:.1f},p99={s['p99']:.1f}ms "
+          f"queue_p99={s['queue_p99']:.1f}ms")
+  out["admission_overlap"] = {"policy": ab_policy,
+                              "rate": float(rates[-1]), **ab}
   top = str(rates[-1])
   if {"partial", "accuracytrader"} <= set(out["sweep"]):
     at = out["sweep"]["accuracytrader"][top]["accuracy_loss_pct"]

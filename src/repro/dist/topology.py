@@ -1,0 +1,115 @@
+"""Component topology: partitioning the corpus over parallel components.
+
+The paper's service tier fans one request out to ``n`` parallel components,
+each owning a *subset of the input data* (paper §1).  For the serving tier
+(`repro.serve.cluster`, DESIGN.md §9) a component owns a contiguous range
+of the M synopsis clusters of every resident request's corpus:
+
+  * :func:`ComponentTopology.plan` sizes the ranges — uniform, or skewed by
+    a Zipf law so "hot" components own more of the corpus (the regime where
+    partial gather and accuracy-aware budget allocation earn their keep);
+  * per-component ranges are padded to a common ``m_max`` so the component
+    axis is a regular array dim (shard_map-able); padded clusters carry
+    ``counts == 0`` and are masked out of stage-1 by the kernels facade
+    (``ops.synopsis_stage1(valid=...)``).
+
+Mesh construction is a FUNCTION (like launch/mesh.py) so importing this
+module never touches jax device state: :func:`make_component_mesh` returns
+a 1-axis ``("component",)`` mesh when enough devices exist, else ``None``
+— the tier then falls back to the stacked single-device execution of the
+same math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def zipf_weights(n: int, s: float) -> np.ndarray:
+  """Normalised Zipf(s) weights over ``n`` ranks (s=0 -> uniform)."""
+  ranks = np.arange(1, n + 1, dtype=np.float64)
+  w = ranks ** (-float(s))
+  return w / w.sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentTopology:
+  """Static partition of ``m_total`` corpus clusters over components.
+
+  ``counts[c]`` clusters live on component ``c`` as the contiguous range
+  ``[offsets[c], offsets[c] + counts[c])`` of the cluster-contiguous
+  corpus; every component's slice is padded to ``m_max`` slots."""
+  n_components: int
+  m_total: int
+  counts: Tuple[int, ...]
+  skew: float = 0.0
+
+  def __post_init__(self):
+    assert len(self.counts) == self.n_components
+    assert sum(self.counts) == self.m_total, (self.counts, self.m_total)
+    assert all(c >= 1 for c in self.counts), self.counts
+
+  @property
+  def m_max(self) -> int:
+    return max(self.counts)
+
+  @property
+  def offsets(self) -> Tuple[int, ...]:
+    return tuple(int(x) for x in
+                 np.concatenate([[0], np.cumsum(self.counts)[:-1]]))
+
+  @property
+  def shares(self) -> np.ndarray:
+    """Fraction of the corpus each component owns (accuracy weights)."""
+    return np.asarray(self.counts, np.float64) / float(self.m_total)
+
+  def cluster_owner(self) -> np.ndarray:
+    """(m_total,) component id owning each global cluster index."""
+    return np.repeat(np.arange(self.n_components), self.counts)
+
+  @staticmethod
+  def plan(m_total: int, n_components: int,
+           skew: float = 0.0) -> "ComponentTopology":
+    """Largest-remainder partition of ``m_total`` clusters by Zipf(skew)
+    weights; every component owns at least one cluster."""
+    n = int(n_components)
+    if n < 1 or n > m_total:
+      raise ValueError(f"n_components {n} outside [1, m_total={m_total}]")
+    w = zipf_weights(n, skew)
+    ideal = w * m_total
+    counts = np.maximum(np.floor(ideal).astype(int), 1)
+    # Largest-remainder (then lowest rank) for the leftover clusters;
+    # steal from the biggest owners if the min-1 floor oversubscribed.
+    while counts.sum() < m_total:
+      rem = ideal - counts
+      counts[int(np.argmax(rem))] += 1
+    while counts.sum() > m_total:
+      over = np.where(counts > 1, counts - ideal, -np.inf)
+      counts[int(np.argmax(over))] -= 1
+    return ComponentTopology(n, int(m_total), tuple(int(c) for c in counts),
+                             skew=float(skew))
+
+
+def force_host_devices(n: int) -> None:
+  """Request ``n`` placeholder host devices via XLA_FLAGS.  Must run
+  BEFORE jax initialises its backend (no-op if the flag is already set,
+  whatever its count — an explicit user choice wins)."""
+  import os  # noqa: PLC0415
+  flags = os.environ.get("XLA_FLAGS", "")
+  if "xla_force_host_platform_device_count" not in flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={int(n)}").strip()
+
+
+def make_component_mesh(n_components: int):
+  """1-axis ``("component",)`` mesh over the first ``n`` local devices, or
+  ``None`` when the host has fewer devices (the tier then runs the stacked
+  fallback).  Deferred jax import keeps module import device-free."""
+  import jax  # noqa: PLC0415 — deferred so module import is device-free
+  from jax.sharding import Mesh  # noqa: PLC0415
+  devs = jax.devices()
+  if len(devs) < n_components:
+    return None
+  return Mesh(np.array(devs[:n_components]), ("component",))

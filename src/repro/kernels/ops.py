@@ -153,17 +153,30 @@ def synopsis_build(
 # ---------------------------------------------------------------------------
 
 def synopsis_stage1(q, k_syn, v_syn, counts, *, sm_scale: float,
-                    cap: Optional[float] = None, impl: str = "pallas"):
+                    cap: Optional[float] = None, impl: str = "pallas",
+                    valid: Optional[jax.Array] = None):
   """One pass over the synopsis: (scores (B,Hkv,M), partials over ALL
   centroids with log-count bias).  Selection masking happens
-  decrementally in stage 2."""
+  decrementally in stage 2.
+
+  ``valid`` (B, M) bool optionally masks *padding* centroid slots — the
+  cluster tier pads every component's shard to a common ``m_max``
+  (DESIGN.md §9).  Invalid slots get a NEG_INF bias (excluded from the
+  stage-1 partial inside the kernel) and NEG_INF scores (never ranked by
+  the frontend's top-k)."""
   cbias = count_bias(counts)
+  if valid is not None:
+    cbias = jnp.where(valid, cbias, NEG_INF)
   if impl == "xla":
-    return ref.fused_synopsis_score_attention_ref(
+    scores, part = ref.fused_synopsis_score_attention_ref(
         q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap)
-  return fused_synopsis_score_attention(
-      q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap,
-      interpret=(impl == "interpret"))
+  else:
+    scores, part = fused_synopsis_score_attention(
+        q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap,
+        interpret=(impl == "interpret"))
+  if valid is not None:
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+  return scores, part
 
 
 def refine_stage2(q, k, v, selected, k_syn, v_syn, counts, *,

@@ -38,7 +38,9 @@ import time
 
 
 def _engine_main(args):
-  """Continuous-batching engine over an arrival trace (DESIGN.md §8)."""
+  """Continuous-batching engine over an arrival trace (DESIGN.md §8);
+  with ``--cluster N`` the decode steps run the multi-component
+  scatter-gather tier (DESIGN.md §9) across N components."""
   import json
 
   from repro.configs.registry import get_config
@@ -49,12 +51,25 @@ def _engine_main(args):
   C = cfg.synopsis.cluster_size
   prompt_len = max(C, (args.prompt_len // C) * C)
   max_new = min(args.tokens, cfg.synopsis.recent)
+  backend = None
+  if args.cluster:
+    from repro.serve.cluster import ClusterConfig, ClusterStepBackend
+    backend = ClusterStepBackend(ClusterConfig(
+        n_components=args.cluster, skew=args.skew, alloc=args.alloc,
+        route=args.route))
   eng = ServingEngine(cfg, EngineConfig(
       n_slots=args.n_slots, prompt_len=prompt_len, max_new_tokens=max_new,
-      deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl))
+      deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl),
+      backend=backend)
   print(f"[engine] impl={eng.impl!r} policy={args.policy} "
         f"slots={args.n_slots} prompt={prompt_len} tokens={max_new} "
         f"M={eng.M} buckets={eng.buckets} deadline={args.deadline_ms}ms")
+  if backend is not None:
+    import jax
+    mesh = "mesh" if backend.mesh is not None else "stacked"
+    print(f"[cluster] N={args.cluster} ({mesh}, {len(jax.devices())} "
+          f"devices) counts={backend.topo.counts} alloc={args.alloc} "
+          f"route={args.route} skew={args.skew}")
 
   if args.trace == "cf_rates":
     points = [(f"rate{r}", r * args.rate_scale) for r in CF_RATES]
@@ -73,10 +88,21 @@ def _engine_main(args):
           f"p999={s['p999']:7.1f}ms loss={s['accuracy_loss_pct']:5.2f}% "
           f"miss={s['deadline_miss_pct']:5.1f}% "
           f"budget={s['mean_budget']:.2f}")
+  out = {"trace": args.trace, "policy": args.policy, "results": results}
+  if backend is not None:
+    exp = backend.export()
+    out["cluster"] = {
+        "n_components": args.cluster, "skew": args.skew,
+        "alloc": args.alloc, "route": args.route,
+        "counts": list(backend.topo.counts),
+        "comp_ms_full": [round(float(v), 4)
+                         for v in exp.step_ms_per_component(100)],
+    }
+    print(f"[cluster] measured per-component ms at full budget: "
+          f"{out['cluster']['comp_ms_full']}")
   if args.json:
     with open(args.json, "w") as f:
-      json.dump({"trace": args.trace, "policy": args.policy,
-                 "results": results}, f, indent=1, sort_keys=True)
+      json.dump(out, f, indent=1, sort_keys=True)
     print(f"# wrote {args.json}")
 
 
@@ -106,6 +132,22 @@ def main():
                   help="run the deadline-driven continuous-batching "
                        "engine over an arrival trace (DESIGN.md §8) "
                        "instead of the single-batch demo loop")
+  ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                  help="run decode steps on the N-component scatter-"
+                       "gather tier (DESIGN.md §9; implies --engine): "
+                       "shard_map over a component mesh when N host "
+                       "devices exist (forced automatically on CPU), "
+                       "stacked execution of the same math otherwise")
+  ap.add_argument("--skew", type=float, default=0.0,
+                  help="Zipf exponent over component corpus shares "
+                       "(hot components own more clusters)")
+  ap.add_argument("--alloc", default="mass", choices=["mass", "topk"],
+                  help="frontend refinement-budget allocation across "
+                       "components: proportional to synopsis relevance "
+                       "mass, or pure global top-k")
+  ap.add_argument("--route", default="fixed", choices=["fixed", "rotate"],
+                  help="per-slot cluster->component routing (rotate "
+                       "spreads skewed ranges across components)")
   ap.add_argument("--trace", default="cf_rates",
                   choices=["cf_rates", "sogou_hourly"],
                   help="arrival-rate source for --engine")
@@ -125,6 +167,14 @@ def main():
   ap.add_argument("--json", default=None, metavar="PATH",
                   help="write the --engine sweep results as JSON")
   args = ap.parse_args()
+
+  if args.cluster:
+    # The component mesh wants one device per component; on a CPU host
+    # force placeholder devices BEFORE jax initialises (same mechanism as
+    # launch/dryrun.py).  No-op if the user already set the flag.
+    from repro.dist.topology import force_host_devices
+    force_host_devices(args.cluster)
+    return _engine_main(args)
 
   if args.engine:
     return _engine_main(args)

@@ -1,0 +1,607 @@
+"""Multi-component scatter-gather serving tier (DESIGN.md §9).
+
+The paper's architecture — a frontend scatter-gathering over massively
+parallel components, each answering instantly from its local synopsis and
+then refining the corpus parts most related to the request — realised
+over the kernel serve path:
+
+  * the corpus KV of every resident request is partitioned across N
+    *components* laid out on the device mesh
+    (`repro.dist.topology.ComponentTopology`; a ``("component",)`` mesh
+    when the host has enough devices, a stacked single-device execution
+    of the same math otherwise);
+  * stage 1 runs the fused synopsis scoring on **all** components in
+    parallel — one ``shard_map``-ed ``ops.synopsis_stage1`` over each
+    component's ``k_syn``/``v_syn``/``counts`` shard;
+  * the *frontend aggregator* merges the per-component score partials
+    with a global top-k and allocates the per-step refinement budget
+    across components proportionally to their synopsis relevance mass
+    (:func:`allocate_budget`) — the paper's accuracy-aware part
+    selection, generalized from clusters-within-a-component to
+    components-within-a-cluster-of-machines;
+  * the gather is *deadline-driven*: per step, each component is marked
+    FULL (stage 1 + refinement), STAGE1 (its refinement is predicted to
+    miss the step deadline — the synopsis answer, which always returns
+    instantly, stands in) or DROP (partial execution: the component's
+    entire contribution is skipped), and the online-softmax result
+    composer folds exactly the granted partials.
+
+`ClusterStepBackend` plugs the tier into `ServingEngine` as a drop-in
+step backend: admission scatters each slot's built synopsis across the
+components (per-slot routing, optionally rotated for balance), decode
+steps run one compiled program per budget bucket, and the backend keeps a
+measured-latency attribution per component (`ClusterMeasuredExport`)
+that round-trips into the discrete-event simulator
+(``ScatterGatherService(step_backend=...)`` /
+``ComponentModel.submit(service_ms=<per-component vector>)``).
+
+CPU-proxy caveat (EXPERIMENTS.md §Cluster): on a single host the N
+components execute as one program, so the *total* step wall time is
+measured and attributed to components in proportion to their corpus
+share and allocated budget (``l_c = base·share_c + slope·b_c``); the
+per-step interference noise and straggler draws model the co-located
+jobs the measurement cannot see, exactly as `serving.latency
+.ComponentModel` does for the simulator.  The engine clock then advances
+by the *parallel* completion time (max over gathered components), which
+is what the frontend of a real N-machine deployment would observe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+from repro.dist.topology import ComponentTopology, make_component_mesh
+from repro.kernels import ops
+from repro.serve import kv_cache as kvc
+from repro.serve.serve_step import make_serve_step
+
+NEG_INF = ops.NEG_INF
+
+# Per-component gather modes (the fe_mode vector fed into the step).
+MODE_DROP, MODE_STAGE1, MODE_FULL = 0, 1, 2
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+  """Scatter-gather tier knobs (model shape comes from the ModelConfig)."""
+  n_components: int = 4
+  skew: float = 0.0            # Zipf exponent over component corpus shares
+  alloc: str = "mass"          # "mass" (∝ relevance mass) | "topk" (global)
+  route: str = "fixed"         # per-slot cluster routing; "rotate" balances
+  interference: float = 0.25   # lognormal sigma (co-located jobs, per step)
+  straggler_prob: float = 0.02
+  straggler_scale: float = 8.0
+  use_mesh: Optional[bool] = None   # None -> auto (mesh iff devices >= N)
+  seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Frontend aggregator: global ranking + budget allocation across components.
+# ---------------------------------------------------------------------------
+
+def allocate_budget(mass: jax.Array, total: int,
+                    caps: jax.Array) -> jax.Array:
+  """Split ``total`` refinement clusters over components ∝ relevance mass.
+
+  ``mass`` (..., N) non-negative; ``caps`` (..., N) per-component valid
+  cluster counts.  Largest-remainder rounding on top of the proportional
+  floor; monotone in mass (more synopsis relevance mass never means a
+  smaller budget).  A budget covering the whole corpus saturates every
+  cap exactly (the ``basic`` full gather stays exact); below that, budget
+  stranded by a binding cap is not re-circulated (the step simply
+  refines less — re-circulation is a ROADMAP item)."""
+  caps = caps.astype(jnp.int32)
+  share = total * mass / jnp.maximum(
+      jnp.sum(mass, axis=-1, keepdims=True), 1e-30)
+  floor = jnp.floor(share)
+  base = jnp.minimum(floor, caps).astype(jnp.int32)
+  rem = share - floor
+  left = total - jnp.sum(base, axis=-1, keepdims=True)
+  order = jnp.argsort(-rem, axis=-1)
+  rank = jnp.argsort(order, axis=-1)
+  extra = (rank < left).astype(jnp.int32)
+  alloc = jnp.minimum(base + extra, caps)
+  capsum = jnp.sum(caps, axis=-1, keepdims=True)
+  return jnp.where(total >= capsum, caps, alloc)
+
+
+def _frontend_rank(sc_all: jax.Array, i_max: int):
+  """Global ranking over the gathered per-component scores.
+
+  sc_all (B, Hkv, N, Mp) with padded slots at NEG_INF.  Returns
+  (gsel (B, Hkv, K) flat cluster ids with -1 pads — or None at budget 0 —
+  and the per-component relevance mass (B, Hkv, N))."""
+  B, Hkv, N, Mp = sc_all.shape
+  flat = sc_all.reshape(B, Hkv, N * Mp)
+  gmax = jnp.max(flat, axis=-1)                               # (B, Hkv)
+  mass = jnp.sum(jnp.exp(sc_all - gmax[:, :, None, None]), axis=-1)
+  if i_max <= 0:
+    return None, mass
+  K = min(i_max, N * Mp)
+  tsc, gsel = jax.lax.top_k(flat, K)
+  gsel = jnp.where(tsc > NEG_INF / 2, gsel.astype(jnp.int32), -1)
+  return gsel, mass
+
+
+def _select_local(c, sc_local, gsel, budgets, alloc, i_max, Mp):
+  """Per-component stage-2 selection (local cluster ids, -1 pads).
+
+  ``alloc="topk"``: the component refines exactly the globally top-ranked
+  clusters it owns (two-level top-k — equals the single-component
+  reference).  ``alloc="mass"``: the component refines its own top-scored
+  clusters up to the budget the frontend allocated it."""
+  if alloc == "topk":
+    comp_of = jnp.where(gsel >= 0, gsel // Mp, -1)
+    return jnp.where(comp_of == c, gsel % Mp, -1).astype(jnp.int32)
+  Kc = min(i_max, Mp)
+  tsc, sel = jax.lax.top_k(sc_local, Kc)
+  b_c = jnp.take(budgets, c, axis=-1)[..., None]              # (B, Hkv, 1)
+  keep = (jnp.arange(Kc)[None, None, :] < b_c) & (tsc > NEG_INF / 2)
+  return jnp.where(keep, sel.astype(jnp.int32), -1)
+
+
+def _pick_mode(mode, full, syn):
+  """Deadline-driven partial gather: FULL -> merged stage-1+2 partial,
+  STAGE1 -> the synopsis answer alone, DROP -> a zero-weight partial."""
+  drop = (jnp.zeros_like(full[0]), jnp.full_like(full[1], NEG_INF),
+          jnp.zeros_like(full[2]))
+  return tuple(
+      jnp.where(mode == MODE_FULL, f,
+                jnp.where(mode == MODE_STAGE1, s, d))
+      for f, s, d in zip(full, syn, drop))
+
+
+def _extras_partial(q, csl, self_kv, *, sm_scale, cap, impl):
+  """Frontend-owned recent-ring + self-KV partial, merged exactly once at
+  the composer (never routed to a component, so partial gather can never
+  lose the new token)."""
+  extras = ops.build_extras(csl.get("recent_k"), csl.get("recent_v"),
+                            csl.get("recent_len"), self_kv)
+  if extras is None:
+    return None
+  ek, ev, eb = extras
+  bias = jnp.broadcast_to(eb[:, None, :],
+                          (eb.shape[0], ek.shape[1], eb.shape[1]))
+  return ops.decode_partials(q, ek, ev, bias, sm_scale=sm_scale, cap=cap,
+                             impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# The scatter-gather attention body (stacked + shard_map executions of the
+# same math).  Plugged into make_serve_step(attention_fn=...).
+# ---------------------------------------------------------------------------
+
+def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
+                           mesh=None):
+  """Returns ``attention_fn(q, cache_sl, ...) -> (ctx, aux)`` over the
+  component-partitioned cache layout (DESIGN.md §9):
+
+    k/v          (B, Hkv, N, m_max*C, D)   per-component corpus shards
+    k_syn/v_syn  (B, Hkv, N, m_max, D)     per-component centroid tables
+    counts       (B, N, m_max)             0 on padded slots
+    fe_mode      (N,) int32                per-component gather mode
+
+  ``aux`` carries per-layer telemetry: ``fe_cover`` (N,) mean refined
+  clusters per component and ``fe_mass`` (N,) mean relevance-mass share.
+  """
+  N, Mp = topo.n_components, topo.m_max
+
+  def attention(q, csl, *, i_max, cluster_size, sm_scale, cap=None,
+                self_kv=None, impl="xla"):
+    if mesh is not None:
+      return _cluster_sharded(
+          q, csl, topo, alloc, mesh, i_max=i_max,
+          cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
+          self_kv=self_kv, impl=impl)
+    return _cluster_stacked(
+        q, csl, topo, alloc, i_max=i_max, cluster_size=cluster_size,
+        sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl)
+
+  return attention
+
+
+def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
+                     cap, self_kv, impl):
+  """Single-device execution: the N components run as an unrolled loop
+  over the component axis — identical math to the shard_map body."""
+  k, v = csl["k"], csl["v"]
+  k_syn, v_syn, counts = csl["k_syn"], csl["v_syn"], csl["counts"]
+  fe_mode = csl["fe_mode"]
+  N, Mp = k_syn.shape[2], k_syn.shape[3]
+
+  scs, psyns = [], []
+  for c in range(N):
+    sc_c, p_c = ops.synopsis_stage1(
+        q, k_syn[:, :, c], v_syn[:, :, c], counts[:, c],
+        sm_scale=sm_scale, cap=cap, impl=impl, valid=counts[:, c] > 0)
+    scs.append(sc_c)
+    psyns.append(p_c)
+  sc_all = jnp.stack(scs, axis=2)                         # (B, Hkv, N, Mp)
+  gsel, mass = _frontend_rank(sc_all, i_max)
+  budgets = None
+  if gsel is not None and alloc == "mass":
+    caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)         # (B, Hkv, N)
+    budgets = allocate_budget(mass, i_max, caps)
+
+  acc = None
+  cover = []
+  for c in range(N):
+    if gsel is None:
+      p_full = psyns[c]
+      cover.append(jnp.float32(0.0))
+    else:
+      sel = _select_local(c, scs[c], gsel, budgets, alloc, i_max, Mp)
+      p_ref = ops.refine_stage2(
+          q, k[:, :, c], v[:, :, c], sel, k_syn[:, :, c], v_syn[:, :, c],
+          counts[:, c], cluster_size=cluster_size, sm_scale=sm_scale,
+          cap=cap, impl=impl)
+      p_full = ops.merge_partials(psyns[c], p_ref)
+      cover.append(jnp.mean(jnp.sum((sel >= 0).astype(jnp.float32), -1)))
+    contrib = _pick_mode(fe_mode[c], p_full, psyns[c])
+    acc = contrib if acc is None else ops.merge_partials(acc, contrib)
+
+  p_ex = _extras_partial(q, csl, self_kv, sm_scale=sm_scale, cap=cap,
+                         impl=impl)
+  if p_ex is not None:
+    acc = ops.merge_partials(acc, p_ex)
+  mass_frac = mass / jnp.maximum(jnp.sum(mass, -1, keepdims=True), 1e-30)
+  aux = {"fe_cover": jnp.stack(cover),
+         "fe_mass": jnp.mean(mass_frac, axis=(0, 1))}
+  return acc[0], aux
+
+
+def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
+                     sm_scale, cap, self_kv, impl):
+  """shard_map execution over the ``("component",)`` mesh: every device is
+  one component; the score all-gather + replicated frontend logic is the
+  aggregator, the partials all-gather + fold is the result composer."""
+  from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+  N, Mp = topo.n_components, topo.m_max
+  corpus = P(None, None, "component", None, None)
+  specs = {"k": corpus, "v": corpus, "k_syn": corpus, "v_syn": corpus,
+           "counts": P(None, "component", None),
+           "fe_mode": P("component")}
+  for name in ("recent_k", "recent_v"):
+    if name in csl:
+      specs[name] = P(None, None, None, None)
+  if "recent_len" in csl:
+    specs["recent_len"] = P(None)
+  csl = {kk: csl[kk] for kk in specs}
+  q_spec = P(None, None, None)
+  self_spec = (P(None, None, None, None),) * 2 if self_kv is not None \
+      else P()
+
+  def body(q, cache, self_kv):
+    with shd.manual_axes({"component"}):
+      sid = jax.lax.axis_index("component")
+      k_l, v_l = cache["k"][:, :, 0], cache["v"][:, :, 0]
+      ks_l, vs_l = cache["k_syn"][:, :, 0], cache["v_syn"][:, :, 0]
+      counts_l = cache["counts"][:, 0]
+      mode_l = cache["fe_mode"][0]
+
+      sc_l, p_syn = ops.synopsis_stage1(
+          q, ks_l, vs_l, counts_l, sm_scale=sm_scale, cap=cap, impl=impl,
+          valid=counts_l > 0)
+      sc = jax.lax.all_gather(sc_l, "component", axis=2, tiled=True)
+      B, Hkv = sc.shape[:2]
+      sc_all = sc.reshape(B, Hkv, N, Mp)
+      gsel, mass = _frontend_rank(sc_all, i_max)
+
+      if gsel is None:
+        p_full = p_syn
+        cover_l = jnp.zeros((1,), jnp.float32)
+      else:
+        budgets = None
+        if alloc == "mass":
+          caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)    # (B, Hkv, N)
+          budgets = allocate_budget(mass, i_max, caps)
+        sel = _select_local(sid, sc_l, gsel, budgets, alloc, i_max, Mp)
+        p_ref = ops.refine_stage2(
+            q, k_l, v_l, sel, ks_l, vs_l, counts_l,
+            cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
+            impl=impl)
+        p_full = ops.merge_partials(p_syn, p_ref)
+        cover_l = jnp.mean(
+            jnp.sum((sel >= 0).astype(jnp.float32), -1))[None]
+      contrib = _pick_mode(mode_l, p_full, p_syn)
+
+      gathered = [jax.lax.all_gather(x[None], "component", axis=0,
+                                     tiled=True) for x in contrib]
+      og, mg, lg = gathered
+      acc = (og[0], mg[0], lg[0])
+      for i in range(1, N):
+        acc = ops.merge_partials(acc, (og[i], mg[i], lg[i]))
+      p_ex = _extras_partial(q, cache, self_kv, sm_scale=sm_scale,
+                             cap=cap, impl=impl)
+      if p_ex is not None:
+        acc = ops.merge_partials(acc, p_ex)
+      cover = jax.lax.all_gather(cover_l, "component", axis=0, tiled=True)
+      mass_frac = mass / jnp.maximum(jnp.sum(mass, -1, keepdims=True),
+                                     1e-30)
+      return acc[0], cover, jnp.mean(mass_frac, axis=(0, 1))
+
+  out, cover, massv = shd.shard_map(
+      body, mesh=mesh, in_specs=(q_spec, specs, self_spec),
+      out_specs=(P(), P(), P()), axis_names=("component",),
+      check_vma=False)(q, csl, self_kv)
+  return out, {"fe_cover": cover, "fe_mass": massv}
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine step backend: per-slot routing, plan/account around each
+# dispatched step, measured-latency attribution per component.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _StepPlan:
+  """One step's pre-dispatch gather decision + this step's noise draws
+  (the same draws price the realized completion once the wall time is
+  measured, so decision and accounting see one consistent world)."""
+  fe_mode: jax.Array           # (N,) int32 device array fed into the step
+  mode: np.ndarray             # same, host-side
+  noise: np.ndarray            # per-component interference multipliers
+  b_est: np.ndarray            # frontend's expected per-component budget
+  deadline_ms: float
+
+
+class ClusterStepBackend:
+  """Drop-in `ServingEngine` step backend running the scatter-gather tier.
+
+  The engine calls ``plan_step`` (frontend gather decision from the
+  calibrated per-component latency attribution + this step's interference
+  draws), dispatches the returned program, and calls ``account`` with the
+  measured wall time — which recalibrates the attribution, computes the
+  per-request accuracy contribution and the *parallel* completion time
+  the engine clock advances by (see module docstring, CPU-proxy note)."""
+
+  def __init__(self, ccfg: ClusterConfig):
+    self.ccfg = ccfg
+    self.engine = None
+
+  # -- binding ---------------------------------------------------------------
+  def bind(self, engine) -> None:
+    """Called by ServingEngine.__init__ once shapes are known."""
+    cc = self.ccfg
+    self.engine = engine
+    self.cfg = engine.cfg
+    self.impl = engine.impl
+    self.M = engine.M
+    self.n_slots = engine.ecfg.n_slots
+    self.prompt_len = engine.ecfg.prompt_len
+    self.accuracy_fn = engine.accuracy_fn
+    if cc.alloc not in ("mass", "topk"):
+      raise ValueError(f"alloc {cc.alloc!r} not in ('mass', 'topk')")
+    if cc.route not in ("fixed", "rotate"):
+      raise ValueError(f"route {cc.route!r} not in ('fixed', 'rotate')")
+    self.topo = ComponentTopology.plan(self.M, cc.n_components,
+                                       skew=cc.skew)
+    use_mesh = cc.use_mesh
+    self.mesh = make_component_mesh(cc.n_components) \
+        if use_mesh or use_mesh is None else None
+    if use_mesh and self.mesh is None:
+      raise RuntimeError(
+          f"use_mesh=True but < {cc.n_components} devices; run under "
+          f"XLA_FLAGS=--xla_force_host_platform_device_count="
+          f"{cc.n_components}")
+    self.attention = make_cluster_attention(self.topo, alloc=cc.alloc,
+                                            mesh=self.mesh)
+    # Per-component corpus share: the latency/accuracy attribution
+    # weights.  Rotation mixes ownership across slots -> uniform.
+    if cc.route == "rotate":
+      self.comp_share = np.full((cc.n_components,),
+                                1.0 / cc.n_components)
+    else:
+      self.comp_share = np.asarray(self.topo.shares)
+    # Measured wall-time EWMA per budget bucket: the attribution base.
+    # Pre-dispatch predictions use it; post-step accounting attributes
+    # the just-measured wall directly (no fitted model in the clock).
+    self.wall_ewma: Dict[int, float] = {}
+    self.mass_ewma = self.comp_share.copy()
+    self.rng = np.random.default_rng(cc.seed)
+    self._write = self._make_write()
+
+  # -- cache layout ----------------------------------------------------------
+  def zeros_cache(self) -> Dict[str, jax.Array]:
+    """The engine slot pool with corpus leaves in component layout."""
+    base = kvc.zeros_cache(self.cfg, self.n_slots, self.prompt_len,
+                           synopsis=True)
+    nb, na, B, Hkv, S, D = base["k"].shape
+    C = self.cfg.synopsis.cluster_size
+    N, Mp = self.topo.n_components, self.topo.m_max
+    base["k"] = jnp.zeros((nb, na, B, Hkv, N, Mp * C, D),
+                          base["k"].dtype)
+    base["v"] = jnp.zeros_like(base["k"])
+    base["k_syn"] = jnp.zeros((nb, na, B, Hkv, N, Mp, D),
+                              base["k_syn"].dtype)
+    base["v_syn"] = jnp.zeros_like(base["k_syn"])
+    base["counts"] = jnp.zeros((nb, na, B, N, Mp), jnp.float32)
+    return base
+
+  def _scatter(self, syn: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Route one request's built synopsis cache (B=1, cluster-contiguous)
+    into per-component shards padded to m_max (counts 0 on pads)."""
+    C = self.cfg.synopsis.cluster_size
+    topo = self.topo
+    Mp = topo.m_max
+
+    def split(x, axis, unit):
+      parts = []
+      for c in range(topo.n_components):
+        off, cnt = topo.offsets[c] * unit, topo.counts[c] * unit
+        sl = jax.lax.slice_in_dim(x, off, off + cnt, axis=axis)
+        pad = Mp * unit - cnt
+        if pad:
+          widths = [(0, 0)] * x.ndim
+          widths[axis] = (0, pad)
+          sl = jnp.pad(sl, widths)
+        parts.append(sl)
+      return jnp.stack(parts, axis=axis)
+
+    out = dict(syn)
+    out["k"] = split(syn["k"], axis=4, unit=C)
+    out["v"] = split(syn["v"], axis=4, unit=C)
+    out["k_syn"] = split(syn["k_syn"], axis=4, unit=1)
+    out["v_syn"] = split(syn["v_syn"], axis=4, unit=1)
+    out["counts"] = split(syn["counts"], axis=3, unit=1)
+    return out
+
+  def _make_write(self):
+    bx = kvc.slot_batch_axes(self.cfg, self.n_slots, self.prompt_len,
+                             synopsis=True)
+    rotate = self.ccfg.route == "rotate"
+
+    def write(cache, syn, slot):
+      sub = self._scatter(syn)
+      if rotate:
+        # Per-slot routing: slot s's cluster range r lands on component
+        # (r + s) % N, spreading skewed ranges across components.
+        for name in ("k", "v", "k_syn", "v_syn"):
+          sub[name] = jnp.roll(sub[name], slot, axis=4)
+        sub["counts"] = jnp.roll(sub["counts"], slot, axis=3)
+      return kvc.write_slot(cache, sub, slot, bx)
+
+    return jax.jit(write)
+
+  def write_slot(self, cache, syn, slot):
+    return self._write(cache, syn, slot)
+
+  # -- the compiled step -----------------------------------------------------
+  def step_fn(self, budget: int):
+    """One jitted program per budget bucket; ``fe_mode`` is a traced
+    input, so gather decisions never recompile."""
+    step = make_serve_step(self.cfg, mode="synopsis", i_max=budget,
+                           impl=self.impl, attention_fn=self.attention)
+
+    @jax.jit
+    def run(params, cache, tok, fe_mode):
+      cache = dict(cache)
+      cache["fe_mode"] = fe_mode
+      return step(params, cache, tok)
+
+    return run
+
+  def full_mode(self) -> jax.Array:
+    return jnp.full((self.topo.n_components,), MODE_FULL, jnp.int32)
+
+  # -- frontend plan / account ----------------------------------------------
+  def _units(self, b_vec: np.ndarray) -> np.ndarray:
+    """Rows-read compute attribution per component: stage 1 streams the
+    component's ``share_c * M`` centroids, refinement streams ``b_c``
+    clusters of C original tokens each."""
+    C = self.cfg.synopsis.cluster_size
+    return self.comp_share * self.M + np.maximum(b_vec, 0.0) * C
+
+  def _wall_guess(self, budget: int) -> float:
+    if budget in self.wall_ewma:
+      return self.wall_ewma[budget]
+    if self.wall_ewma:
+      nearest = min(self.wall_ewma, key=lambda b: abs(b - budget))
+      return self.wall_ewma[nearest]
+    return 5.0                   # prior before the first measured step
+
+  def plan_step(self, budget: int, step_deadline_ms: float,
+                policy: str) -> _StepPlan:
+    """Pre-dispatch gather decision: predict each component's completion
+    (measured-wall EWMA for this bucket, attributed by rows read, times
+    this step's interference / straggler draws) and mark components that
+    cannot make the step deadline STAGE1 (accuracytrader: the synopsis
+    answer stands in) or DROP (partial execution: the result is
+    skipped)."""
+    cc = self.ccfg
+    N = self.topo.n_components
+    massf = self.mass_ewma / max(self.mass_ewma.sum(), 1e-30)
+    b_est = float(budget) * massf
+    u = self._units(b_est)
+    f = u / max(u.sum(), 1e-30)
+    noise = self.rng.lognormal(0.0, cc.interference, N)
+    noise = np.where(self.rng.random(N) < cc.straggler_prob,
+                     noise * cc.straggler_scale, noise)
+    t_pred = self._wall_guess(budget) * f * noise
+    if policy == "partial":
+      mode = np.where(t_pred <= step_deadline_ms, MODE_FULL, MODE_DROP)
+    elif policy == "accuracytrader":
+      mode = np.where(t_pred <= step_deadline_ms, MODE_FULL, MODE_STAGE1)
+    else:                       # basic / fixed: always full gather
+      mode = np.full((N,), MODE_FULL)
+    mode = mode.astype(np.int32)
+    return _StepPlan(fe_mode=jnp.asarray(mode), mode=mode, noise=noise,
+                     b_est=b_est, deadline_ms=step_deadline_ms)
+
+  def account(self, budget: int, wall_ms: float, plan: _StepPlan, st,
+              warming: bool = False) -> Dict[str, float]:
+    """Post-step accounting: fold the measured wall into this bucket's
+    EWMA, attribute it to components by the *actually refined* rows, and
+    return the parallel completion time (max over the gathered
+    components' attributed+noised times — what the frontend of a real
+    N-machine deployment would wait for) plus the step's accuracy
+    contribution."""
+    full = plan.mode == MODE_FULL
+    if not warming:
+      prev = self.wall_ewma.get(budget)
+      self.wall_ewma[budget] = wall_ms if prev is None \
+          else 0.7 * prev + 0.3 * wall_ms
+      if "fe_mass" in st:
+        m = np.asarray(st["fe_mass"]).mean(axis=(0, 1))
+        mix = 0.7 * self.mass_ewma + 0.3 * m
+        self.mass_ewma = mix / max(mix.sum(), 1e-30)
+    cover = np.asarray(st["fe_cover"]).mean(axis=(0, 1)) \
+        if "fe_cover" in st else np.zeros_like(self.comp_share)
+    u = self._units(np.where(full, cover, 0.0))
+    f = u / max(u.sum(), 1e-30)
+    u0 = self._units(np.zeros_like(cover))       # stage-1-only compute
+    f0 = u0 / max(u.sum(), 1e-30)
+    t_real = wall_ms * f * plan.noise
+    t_stage1 = wall_ms * f0 * plan.noise
+    done = np.where(full, t_real,
+                    np.where(plan.mode == MODE_STAGE1, t_stage1, 0.0))
+    valid = np.maximum(self.comp_share * self.M, 1.0)
+    frac = np.minimum(cover / valid, 1.0)
+    acc_c = np.where(
+        full, [self.accuracy_fn(x) for x in frac],
+        np.where(plan.mode == MODE_STAGE1, self.accuracy_fn(0.0), 0.0))
+    step_acc = float(np.sum(self.comp_share * acc_c))
+    parallel_ms = float(max(done.max(), 1e-3))
+    return {"parallel_ms": parallel_ms, "step_acc": step_acc,
+            "wall_ms": wall_ms, "gathered": int(full.sum()),
+            "comp_ms": done}
+
+  def export(self, full_items: int = 100) -> "ClusterMeasuredExport":
+    return ClusterMeasuredExport(self, full_items=full_items)
+
+
+class ClusterMeasuredExport:
+  """Measured per-component step latencies for the discrete-event
+  simulator — the cluster-tier counterpart of
+  `repro.serve.engine.MeasuredStepBackend`.
+
+  ``step_ms_per_component(budget)`` returns the (N,) vector the simulator
+  feeds straight into ``ComponentModel.submit(service_ms=...)`` (each
+  simulated component indexes its own entry), so hot components serve in
+  the time the real tier attributed to them; ``step_ms(budget)`` is the
+  frontend-observed parallel completion (max over components).  Budget
+  conversion follows MeasuredStepBackend: a simulator budget out of
+  ``full_items`` rescales onto the tier's M clusters; the nearest
+  measured bucket's wall EWMA is attributed by rows read."""
+
+  def __init__(self, backend: ClusterStepBackend, full_items: int = 100):
+    self.share = backend.comp_share.copy()
+    self.massf = backend.mass_ewma / max(backend.mass_ewma.sum(), 1e-30)
+    self.walls = dict(backend.wall_ewma) or {0: 5.0}
+    self.M = backend.M
+    self.cluster_size = backend.cfg.synopsis.cluster_size
+    self.full_items = full_items
+    self.n_components = backend.topo.n_components
+
+  def step_ms_per_component(self, budget: int) -> np.ndarray:
+    b = budget / max(self.full_items, 1) * self.M
+    nearest = min(self.walls, key=lambda x: abs(x - b))
+    u = self.share * self.M + b * self.massf * self.cluster_size
+    return self.walls[nearest] * u / max(u.sum(), 1e-30)
+
+  def step_ms(self, budget: int) -> float:
+    return float(self.step_ms_per_component(budget).max())

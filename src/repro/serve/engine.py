@@ -76,6 +76,11 @@ class EngineConfig:
   impl: Optional[str] = None       # kernel impl; None -> cfg.synopsis.impl
   buckets: Optional[Sequence[int]] = None   # None -> {0, 1, 2, 4, ..., M}
   seed: int = 0
+  # Overlap admission (prefill+build+write) of new requests with the
+  # resident slots' decode step: both are dispatched without an
+  # intervening block, so the runtime's async dispatch queue pipelines
+  # them (ROADMAP: serialized admission was the saturation point).
+  overlap_admission: bool = True
 
 
 @dataclasses.dataclass
@@ -89,7 +94,13 @@ class EngineRequest:
   finish_ms: float = -1.0
   tokens: List[int] = dataclasses.field(default_factory=list)
   budgets: List[int] = dataclasses.field(default_factory=list)
+  # Per-step accuracy contributions from a cluster step backend (the
+  # scatter-gather tier reports corpus-share-weighted coverage per step;
+  # empty on the single-component path, which derives accuracy from
+  # ``budgets``).
+  step_acc: List[float] = dataclasses.field(default_factory=list)
   accuracy: float = 0.0
+  dropped: bool = False            # shed mid-flight (partial execution)
 
   @property
   def latency_ms(self) -> float:
@@ -115,7 +126,8 @@ class ServingEngine:
 
   def __init__(self, cfg: cm.ModelConfig, ecfg: EngineConfig,
                params=None,
-               accuracy_fn: Optional[Callable[[float], float]] = None):
+               accuracy_fn: Optional[Callable[[float], float]] = None,
+               backend=None):
     if kvc.n_attn_positions(cfg) == 0:
       raise ValueError(f"{cfg.name}: no attention positions — nothing to "
                        "synopsize (DESIGN.md §5); use mode='exact' serving")
@@ -152,6 +164,12 @@ class ServingEngine:
         LatencyModel(base=2.0, slope=0.5, alpha=0.1),
         buckets=self.buckets, i_max_cap=self.M)
     self.accuracy_fn = accuracy_fn or _default_concentration
+    # Optional scatter-gather step backend (repro.serve.cluster,
+    # DESIGN.md §9): owns the component cache layout, the per-step gather
+    # plan and the measured per-component latency attribution.
+    self.backend = backend
+    if backend is not None:
+      backend.bind(self)
 
     if params is None:
       params, _ = cm.split(tf.init_model(jax.random.PRNGKey(ecfg.seed), cfg))
@@ -163,11 +181,15 @@ class ServingEngine:
     self._bx = kvc.slot_batch_axes(cfg, ecfg.n_slots, ecfg.prompt_len,
                                    synopsis=True)
     bx = self._bx
-    self._write = jax.jit(
-        lambda cache, sub, slot: kvc.write_slot(cache, sub, slot, bx))
+    if backend is not None:
+      self._write = backend.write_slot
+    else:
+      self._write = jax.jit(
+          lambda cache, sub, slot: kvc.write_slot(cache, sub, slot, bx))
     self._append = jax.jit(skv.append_recent_slots)
     self._step_cache: Dict[int, Callable] = {}
     self._warming = False
+    self._warm_syn = None
 
     self.reset()
     self._warmup()
@@ -178,8 +200,11 @@ class ServingEngine:
     model persists across windows by default (as in the simulator's
     ``run_open_loop``)."""
     e = self.ecfg
-    self.cache = kvc.zeros_cache(self.cfg, e.n_slots, e.prompt_len,
-                                 synopsis=True)
+    if self.backend is not None:
+      self.cache = self.backend.zeros_cache()
+    else:
+      self.cache = kvc.zeros_cache(self.cfg, e.n_slots, e.prompt_len,
+                                   synopsis=True)
     self.tok = jnp.zeros((e.n_slots, 1), jnp.int32)
     self.slots: List[Optional[_Slot]] = [None] * e.n_slots
     self.now_ms = 0.0
@@ -193,8 +218,11 @@ class ServingEngine:
 
   def _step_fn(self, budget: int):
     if budget not in self._step_cache:
-      self._step_cache[budget] = jax.jit(make_serve_step(
-          self.cfg, mode="synopsis", i_max=budget, impl=self.impl))
+      if self.backend is not None:
+        self._step_cache[budget] = self.backend.step_fn(budget)
+      else:
+        self._step_cache[budget] = jax.jit(make_serve_step(
+            self.cfg, mode="synopsis", i_max=budget, impl=self.impl))
     return self._step_cache[budget]
 
   def _warm_buckets(self) -> Sequence[int]:
@@ -210,29 +238,59 @@ class ServingEngine:
     bucket + prefill + build + the slot writes) by driving the *real*
     admit/step paths on a dummy request, so measured latencies are
     steady-state from the first trace request; warmup state is then
-    discarded and never observed by the controller."""
+    discarded and never observed by the controller.
+
+    Each bucket is driven TWICE, re-writing the warm slot in between:
+    a step consuming a freshly *written* cache and one consuming the
+    previous step's *append*-produced cache are distinct jit signatures
+    (output shardings/layouts differ, especially with a shard_map-ing
+    backend), and an unwarmed signature would recompile mid-window and
+    pollute the first measured latencies."""
     self._warming = True
     warm = self._warm_buckets()
     req = EngineRequest(rid=-1, arrival_ms=0.0,
                         prompt=np.zeros((self.ecfg.prompt_len,), np.int32),
-                        max_new_tokens=len(warm))
+                        max_new_tokens=2 * len(warm) + 1)
     self._admit(req, 0)
-    for b in warm:
-      self._decode_step([0], budget=b)
+    for i, b in enumerate(warm):
+      self._decode_step([0], budget=b)     # post-write cache lineage
+      self._decode_step([0], budget=b)     # post-append cache lineage
+      if i < len(warm) - 1:
+        self.cache = self._write(self.cache, self._warm_syn, 0)
+    # A throwaway mini-window through the real run() loop: admission
+    # bursts, retire/re-admit and the post-retire step compose cache
+    # lineages the enumeration above cannot, and any leftover signature
+    # must compile NOW, not inside the first measured window.
+    self.reset()
+    mini = [EngineRequest(
+        rid=-2 - i, arrival_ms=0.0,
+        prompt=np.zeros((self.ecfg.prompt_len,), np.int32),
+        max_new_tokens=min(2, self.ecfg.max_new_tokens))
+        for i in range(min(2, self.ecfg.n_slots) + 1)]
+    self.run(mini)
+    self._warm_syn = None
     self._warming = False
     self.reset()
 
   # -- scheduling -----------------------------------------------------------
+  def _dispatch_admission(self, req: EngineRequest, slot: int, cache):
+    """Dispatch one admission's prefill -> build -> slot-write chain
+    WITHOUT blocking; returns (first-token array, written cache).  Both
+    the serial and the overlapped admission paths go through here."""
+    prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+    logits, cache1 = self._prefill(self.params, prompt)
+    syn = self._build(cache1)
+    if self._warming:
+      self._warm_syn = syn       # reused to warm re-write cache lineages
+    cache = self._write(cache, syn, slot)
+    return jnp.argmax(logits, -1).astype(jnp.int32), cache    # (1,), cache
+
   def _admit(self, req: EngineRequest, slot: int) -> None:
     # queue_ms measures pure waiting: the clock *before* this request's
     # own prefill+build advances it.
     req.admit_ms = self.now_ms
     t0 = time.perf_counter()
-    prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-    logits, cache1 = self._prefill(self.params, prompt)
-    syn = self._build(cache1)
-    self.cache = self._write(self.cache, syn, slot)
-    first = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+    first, self.cache = self._dispatch_admission(req, slot, self.cache)
     self.tok = self.tok.at[slot, 0].set(first[0])
     jax.block_until_ready((self.cache, self.tok))
     self.now_ms += (time.perf_counter() - t0) * 1e3
@@ -240,27 +298,43 @@ class ServingEngine:
     self.slots[slot] = _Slot(req, req.max_new_tokens)
     self.events.append(("admit", req.rid, slot, self.now_ms))
 
-  def _pick_budget(self, active: Sequence[int]) -> int:
+  def _pick_budget(self, active: Sequence[int],
+                   extra: Sequence[EngineRequest] = ()) -> int:
+    """``extra``: requests being admitted concurrently with this step
+    (admission overlap) — not decoding yet, but the step stands between
+    them and their first token, so their deadlines clamp the budget the
+    same way they would on the serial path."""
     e = self.ecfg
     if e.policy in ("basic", "partial"):
       return self.M
     if e.policy == "fixed":
       return e.fixed_budget
-    remaining = min(self.slots[i].req.arrival_ms + e.deadline_ms
-                    - self.now_ms for i in active)
+    remaining = min(
+        [self.slots[i].req.arrival_ms + e.deadline_ms - self.now_ms
+         for i in active] +
+        [r.arrival_ms + e.deadline_ms - self.now_ms for r in extra])
     return self.controller.budget_for(max(remaining, 0.0))
 
   def _retire(self, slot: int) -> None:
     s = self.slots[slot]
     req = s.req
     req.finish_ms = self.now_ms
+    req.dropped = s.remaining > 0      # shed mid-flight, not finished
     e = self.ecfg
+    # With a cluster backend, each step reported the corpus-share-weighted
+    # accuracy of its gather (components refined / stage-1 floor / skipped).
+    stepwise = float(np.mean(req.step_acc)) if req.step_acc else None
     if e.policy == "basic":
-      req.accuracy = 1.0
+      req.accuracy = stepwise if stepwise is not None else 1.0
     elif e.policy == "partial":
       # Partial execution: a result missing at the deadline is skipped —
       # its entire accuracy contribution is lost (paper §5).
-      req.accuracy = 1.0 if req.latency_ms <= e.deadline_ms else 0.0
+      if req.dropped or req.latency_ms > e.deadline_ms:
+        req.accuracy = 0.0
+      else:
+        req.accuracy = stepwise if stepwise is not None else 1.0
+    elif stepwise is not None:
+      req.accuracy = stepwise
     else:
       # Stage 1 always landed; each step covered budget/M of the ranked
       # clusters exactly plus the synopsis estimate of the rest.
@@ -270,18 +344,43 @@ class ServingEngine:
     self.completed.append(req)
     self.events.append(("retire", req.rid, slot, self.now_ms))
 
+  def _step_deadline(self, active: Sequence[int]) -> float:
+    """Per-step deadline slice for the cluster frontend's gather decision:
+    the most urgent resident request's remaining time, spread over its
+    remaining decode steps."""
+    e = self.ecfg
+    vals = [max(self.slots[i].req.arrival_ms + e.deadline_ms - self.now_ms,
+                0.0) / max(self.slots[i].remaining, 1) for i in active]
+    return min(vals) if vals else float("inf")
+
   def _decode_step(self, active: Sequence[int],
-                   budget: Optional[int] = None) -> None:
+                   budget: Optional[int] = None,
+                   write_cache=None) -> None:
+    """One budgeted decode step for the ``active`` slots.  ``write_cache``
+    (admission overlap) supplies the cache the step's updates land on:
+    the step itself reads the pre-admission cache — active lanes are
+    identical in both — while freshly admitted lanes ride in via the
+    write chain, all blocked once."""
     if budget is None:
       budget = self._pick_budget(active)
+    e = self.ecfg
+    plan = None
+    if self.backend is not None:
+      deadline = self._step_deadline(active) if not self._warming \
+          else float("inf")
+      plan = self.backend.plan_step(budget, deadline, e.policy)
     step = self._step_fn(budget)
     t0 = time.perf_counter()
-    logits, st = step(self.params, self.cache, self.tok)
+    if plan is not None:
+      logits, st = step(self.params, self.cache, self.tok, plan.fe_mode)
+    else:
+      logits, st = step(self.params, self.cache, self.tok)
     new_tok = jnp.argmax(logits, -1).astype(jnp.int32)        # (n_slots,)
     mask = np.zeros((self.ecfg.n_slots,), bool)
     mask[list(active)] = True
     amask = jnp.asarray(mask)
-    self.cache = self._append(self.cache, st["k_delta"], st["v_delta"],
+    target = write_cache if write_cache is not None else self.cache
+    self.cache = self._append(target, st["k_delta"], st["v_delta"],
                               amask)
     self.cache["pos"] = jnp.where(amask, st["pos"], self.cache["pos"])
     # Hybrid archs: SSM decode state advances every step too (per-slot).
@@ -294,8 +393,15 @@ class ServingEngine:
     self.tok = jnp.where(amask[:, None], new_tok[:, None], self.tok)
     jax.block_until_ready((self.cache, self.tok))
     dt = (time.perf_counter() - t0) * 1e3
+    step_acc = None
+    if plan is not None:
+      info = self.backend.account(budget, dt, plan, st,
+                                  warming=self._warming)
+      dt = info["parallel_ms"]       # the frontend-observed completion
+      step_acc = info["step_acc"]
     self.now_ms += dt
-    if self.ecfg.policy == "accuracytrader" and not self._warming:
+    if self.ecfg.policy == "accuracytrader" and not self._warming \
+        and write_cache is None:
       self.controller.observe(budget, dt)
     self.step_log.append((budget, dt, len(active)))
     toks = np.asarray(new_tok)
@@ -303,6 +409,8 @@ class ServingEngine:
       s = self.slots[i]
       s.req.tokens.append(int(toks[i]))
       s.req.budgets.append(budget)
+      if step_acc is not None:
+        s.req.step_acc.append(step_acc)
       s.remaining -= 1
       if s.remaining <= 0:
         self._retire(i)
@@ -317,10 +425,6 @@ class ServingEngine:
     pending = collections.deque(
         sorted(requests, key=lambda r: (r.arrival_ms, r.rid)))
     while pending or any(s is not None for s in self.slots):
-      # Admit every arrived request that fits a free lane.
-      free = [i for i, s in enumerate(self.slots) if s is None]
-      while free and pending and pending[0].arrival_ms <= self.now_ms:
-        self._admit(pending.popleft(), free.pop(0))
       if self.ecfg.policy == "partial":
         # Partial execution sheds unfinished work AT the deadline: the
         # result is skipped (accuracy 0 via _retire) and the lane frees
@@ -329,6 +433,24 @@ class ServingEngine:
           if s is not None and self.now_ms >= (
               s.req.arrival_ms + self.ecfg.deadline_ms):
             self._retire(i)
+      # Every arrived request that fits a free lane is admitted this
+      # iteration — overlapped with the residents' decode step when
+      # possible, else serially.
+      free = [i for i, s in enumerate(self.slots) if s is None]
+      admissions = []
+      while free and pending and pending[0].arrival_ms <= self.now_ms:
+        admissions.append((pending.popleft(), free.pop(0)))
+      active = [i for i, s in enumerate(self.slots) if s is not None]
+      # Overlap applies to the local single-component path only: the
+      # cluster backend advances the clock by the *modelled parallel*
+      # step completion, which would hide the admissions' real wall time
+      # if they were folded into the same measured window.
+      if admissions and active and self.ecfg.overlap_admission \
+          and self.backend is None:
+        self._admit_overlapped(admissions, active)
+        continue
+      for req, slot in admissions:
+        self._admit(req, slot)
       active = [i for i, s in enumerate(self.slots) if s is not None]
       if not active:
         if not pending:
@@ -338,6 +460,29 @@ class ServingEngine:
         continue
       self._decode_step(active)
     return self.summary()
+
+  def _admit_overlapped(self, admissions, active: Sequence[int]) -> None:
+    """Admission/decode overlap (ROADMAP Perf): dispatch the admitted
+    requests' prefill + synopsis build + slot writes WITHOUT blocking,
+    dispatch the residents' decode step behind them (the step reads the
+    pre-admission cache; its updates land on the written one), and block
+    once for the whole window inside ``_decode_step`` — the runtime's
+    async dispatch queue pipelines admission with decode instead of
+    serializing a blocking admit per request."""
+    t_admit = self.now_ms
+    budget = self._pick_budget(active, extra=[r for r, _ in admissions])
+    cache_adm = self.cache
+    firsts = []
+    for req, slot in admissions:
+      req.admit_ms = t_admit
+      first, cache_adm = self._dispatch_admission(req, slot, cache_adm)
+      firsts.append(first)
+    self._decode_step(active, budget=budget, write_cache=cache_adm)
+    for (req, slot), first in zip(admissions, firsts):
+      self.tok = self.tok.at[slot, 0].set(first[0])
+      req.tokens.append(int(first[0]))
+      self.slots[slot] = _Slot(req, req.max_new_tokens)
+      self.events.append(("admit", req.rid, slot, self.now_ms))
 
   def summary(self) -> Dict[str, float]:
     tracker = TailTracker()
@@ -355,6 +500,12 @@ class ServingEngine:
     s["steps"] = len(self.step_log)
     s["queue_p99"] = float(np.percentile(
         [r.queue_ms for r in self.completed], 99)) if self.completed else 0.0
+    # Shed rate + per-request accuracy percentiles (BENCH_serving.json
+    # reproducibility: the distribution, not just the mean, is recorded).
+    s["shed_pct"] = 100.0 * float(np.mean(
+        [r.dropped for r in self.completed])) if self.completed else 0.0
+    for p in (10, 50, 90):
+      s[f"acc_p{p}"] = float(np.percentile(accs, p)) if accs else 0.0
     return s
 
   # -- probes ---------------------------------------------------------------
@@ -365,11 +516,14 @@ class ServingEngine:
     if budget not in self.buckets:
       raise ValueError(f"budget {budget} not a bucket {self.buckets}")
     step = self._step_fn(budget)
-    jax.block_until_ready(step(self.params, self.cache, self.tok))
+    args = (self.params, self.cache, self.tok)
+    if self.backend is not None:
+      args = args + (self.backend.full_mode(),)
+    jax.block_until_ready(step(*args))
     ts = []
     for _ in range(iters):
       t0 = time.perf_counter()
-      jax.block_until_ready(step(self.params, self.cache, self.tok))
+      jax.block_until_ready(step(*args))
       ts.append((time.perf_counter() - t0) * 1e3)
     return float(np.median(ts))
 

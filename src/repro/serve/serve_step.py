@@ -236,9 +236,25 @@ def exact_decode_attention(q, k, v, *, sm_scale, cap=None, self_kv=None,
 # ---------------------------------------------------------------------------
 
 def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
-                       mode, i_max, impl):
-  """x (B,1,d); cache_sl: this layer's cache slice.  Returns (y, delta)."""
+                       mode, i_max, impl, attention_fn=None):
+  """x (B,1,d); cache_sl: this layer's cache slice.
+  Returns (y, delta, aux) — ``aux`` is None unless an ``attention_fn``
+  override (the cluster tier, DESIGN.md §9) reports per-component
+  telemetry to thread out of the layer scan."""
   B = x.shape[0]
+  aux = None
+
+  def synopsis_attn(q, csl, *, sm_scale, cap=None, self_kv=None):
+    nonlocal aux
+    if attention_fn is None:
+      return sharded_synopsis_attention(
+          q, csl, i_max=i_max, cluster_size=cfg.synopsis.cluster_size,
+          sm_scale=sm_scale, cap=cap, self_kv=self_kv,
+          seq_axes=_seq_axes(), impl=impl)
+    ctx, aux = attention_fn(
+        q, csl, i_max=i_max, cluster_size=cfg.synopsis.cluster_size,
+        sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl)
+    return ctx
   positions = pos[:, None]                                    # (B,1)
   if cfg.mla:
     m = cfg.mla
@@ -251,10 +267,8 @@ def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
     self_kv = (lat_new[:, None], lat_new[:, None])            # (B,1,1,Dk)
     sm_scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     if mode == "synopsis":
-      ctx = sharded_synopsis_attention(
-          q_eff, cache_sl, i_max=i_max,
-          cluster_size=cfg.synopsis.cluster_size, sm_scale=sm_scale,
-          self_kv=self_kv, seq_axes=_seq_axes(), impl=impl)
+      ctx = synopsis_attn(q_eff, cache_sl, sm_scale=sm_scale,
+                          self_kv=self_kv)
     else:
       ctx = exact_decode_attention(q_eff, cache_sl["k"], cache_sl["v"],
                                    sm_scale=sm_scale, self_kv=self_kv,
@@ -277,17 +291,15 @@ def _attn_decode_layer(x, lp, cfg: cm.ModelConfig, spec, cache_sl, pos,
           cap=cfg.attn_softcap, self_kv=(kd, vd),
           window=cfg.sliding_window, impl=impl)
     elif mode == "synopsis":
-      ctx = sharded_synopsis_attention(
-          q, cache_sl, i_max=i_max, cluster_size=cfg.synopsis.cluster_size,
-          sm_scale=sm_scale, cap=cfg.attn_softcap, self_kv=(kd, vd),
-          seq_axes=_seq_axes(), impl=impl)
+      ctx = synopsis_attn(q, cache_sl, sm_scale=sm_scale,
+                          cap=cfg.attn_softcap, self_kv=(kd, vd))
     else:
       ctx = exact_decode_attention(
           q, cache_sl["k"], cache_sl["v"], sm_scale=sm_scale,
           cap=cfg.attn_softcap, self_kv=(kd, vd), impl=impl)
     y = attn_lib.out_proj(ctx[:, None].astype(x.dtype), lp, x.dtype)
     delta = (kd, vd)
-  return y, delta
+  return y, delta, aux
 
 
 def _cross_decode_layer(x, lp, cfg, cache_sl, impl):
@@ -306,12 +318,23 @@ def _cross_decode_layer(x, lp, cfg, cache_sl, impl):
 
 def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
                     i_max: Optional[int] = None,
-                    impl: Optional[str] = None):
+                    impl: Optional[str] = None,
+                    attention_fn=None):
   """Returns serve_step(params, cache, tokens) ->
   (logits (B, vocab), new_state dict with ssm/kv deltas).
 
   ``impl`` overrides ``cfg.synopsis.impl``; both default to "auto"
-  (fused Pallas kernels on TPU, XLA reference elsewhere)."""
+  (fused Pallas kernels on TPU, XLA reference elsewhere).
+
+  ``attention_fn`` optionally replaces the synopsis decode attention with
+  a custom scatter-gather body (the multi-component cluster tier,
+  DESIGN.md §9).  It is called as ``attention_fn(q, cache_sl, i_max=...,
+  cluster_size=..., sm_scale=..., cap=..., self_kv=..., impl=...)`` and
+  must return ``(ctx, aux)`` where ``aux`` is a dict of small per-layer
+  telemetry arrays threaded out of the scan as extra ``new_state``
+  entries.  Cache keys starting with ``"fe_"`` (frontend inputs, e.g. the
+  per-component gather-mode vector) are broadcast to every layer instead
+  of scanned."""
   i_max = cfg.synopsis.i_max if i_max is None else i_max
   impl = resolve_impl(impl if impl is not None else cfg.synopsis.impl)
   pattern = cfg.block_pattern
@@ -337,14 +360,19 @@ def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
         if spec.kind == "attn":
           layer_cache = {kk: csl[kk][ai] for kk in csl
                          if kk not in ("conv_state", "ssd_state",
-                                       "recent_len")}
-          if "recent_len" in csl:
-            layer_cache["recent_len"] = csl["recent_len"]
-          mix, delta = _attn_decode_layer(h, lp["attn"], cfg, spec,
-                                          layer_cache, pos, mode, i_max,
-                                          impl)
+                                       "recent_len")
+                         and not kk.startswith("fe_")}
+          for kk in csl:
+            if kk == "recent_len" or kk.startswith("fe_"):
+              layer_cache[kk] = csl[kk]
+          mix, delta, aux = _attn_decode_layer(h, lp["attn"], cfg, spec,
+                                               layer_cache, pos, mode,
+                                               i_max, impl, attention_fn)
           deltas.setdefault("k_delta", []).append(delta[0])
           deltas.setdefault("v_delta", []).append(delta[1])
+          if aux:
+            for ak, av in aux.items():
+              deltas.setdefault(ak, []).append(av)
           ai += 1
         else:
           st = (csl["conv_state"][si], csl["ssd_state"][si])
@@ -375,7 +403,8 @@ def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
       return (x,), ys
 
     cache_xs = {kk: vv for kk, vv in cache.items()
-                if kk not in ("pos", "recent_len")}
+                if kk not in ("pos", "recent_len")
+                and not kk.startswith("fe_")}
     (x,), ys = jax.lax.scan(
         functools.partial(_scan_body, superblock, cache, cfg),
         (x,), (params["blocks"], cache_xs))
@@ -395,7 +424,9 @@ def make_serve_step(cfg: cm.ModelConfig, *, mode: str = "exact",
 
 def _scan_body(superblock, cache, cfg, carry, xs):
   blk, csl = xs
-  if "recent_len" in cache:
+  bcast = [kk for kk in cache if kk == "recent_len" or kk.startswith("fe_")]
+  if bcast:
     csl = dict(csl)
-    csl["recent_len"] = cache["recent_len"]
+    for kk in bcast:
+      csl[kk] = cache[kk]
   return superblock(carry, (blk, csl))

@@ -46,7 +46,14 @@ class TailTracker:
 
 @dataclasses.dataclass
 class ComponentModel:
-  """Service-time model of one parallel component."""
+  """Service-time model of one parallel component.
+
+  ``comp_id`` names this component inside its service: a *measured*
+  ``service_ms`` may be a per-component vector (the cluster tier's
+  ``ClusterMeasuredExport.step_ms_per_component``), from which the
+  component picks its own entry.  ``work_scale`` multiplies the service
+  time — the Zipf component-skew knob (hot components own more of the
+  corpus and serve slower)."""
   base_ms: float = 2.0            # synopsis / fixed overhead
   per_item_ms: float = 0.15       # per refined cluster (or per data part)
   full_items: int = 100           # items for exact full computation
@@ -54,29 +61,43 @@ class ComponentModel:
   straggler_prob: float = 0.02    # chance of a severe slowdown
   straggler_scale: float = 8.0
   seed: int = 0
+  comp_id: int = 0
+  work_scale: float = 1.0
 
   def __post_init__(self):
     self.rng = np.random.default_rng(self.seed)
     self.busy_until = 0.0
 
+  def _resolve_base(self, base_ms) -> Optional[float]:
+    if base_ms is None:
+      return None
+    arr = np.asarray(base_ms, dtype=np.float64).ravel()
+    if arr.size == 1:
+      return float(arr[0])
+    return float(arr[self.comp_id % arr.size])
+
   def service_time(self, items: int,
                    base_ms: Optional[float] = None) -> float:
     """Service time for ``items``; ``base_ms`` replaces the modelled
     ``base + per_item * items`` with an externally *measured* duration
-    (the engine's per-bucket step latency) — interference noise and
-    stragglers still apply on top (they model the co-located jobs, which
-    the single-host measurement cannot see)."""
-    t = base_ms if base_ms is not None \
+    (the engine's per-bucket step latency — a scalar, or a per-component
+    vector indexed by ``comp_id``) — interference noise and stragglers
+    still apply on top (they model the co-located jobs, which the
+    single-host measurement cannot see)."""
+    base = self._resolve_base(base_ms)
+    t = base if base is not None \
         else self.base_ms + self.per_item_ms * items
+    t *= self.work_scale
     t *= float(self.rng.lognormal(0.0, self.interference))
     if self.rng.random() < self.straggler_prob:
       t *= self.straggler_scale
     return t
 
   def submit(self, arrival_ms: float, items: int,
-             service_ms: Optional[float] = None) -> float:
+             service_ms=None) -> float:
     """FIFO queue: returns completion time.  ``service_ms`` optionally
-    pins the pre-noise service duration to a measured value."""
+    pins the pre-noise service duration to a measured value (scalar or
+    per-component vector, see ``service_time``)."""
     start = max(arrival_ms, self.busy_until)
     done = start + self.service_time(items, base_ms=service_ms)
     self.busy_until = done

@@ -61,6 +61,11 @@ class ServiceConfig:
   full_items: int = 100            # clusters per component (exact = all)
   i_max_cap: int = 40              # paper: top-40% ranked sets
   reissue_pct: float = 95.0
+  # Zipf exponent over per-component work: skew > 0 makes low-rank
+  # components "hot" (they own more of the corpus and serve slower) —
+  # the regime where partial execution's skipped stragglers carry the
+  # most accuracy mass.  0 = the paper's uniform components.
+  skew: float = 0.0
   seed: int = 0
 
 
@@ -68,12 +73,25 @@ class ScatterGatherService:
   def __init__(self, cfg: ServiceConfig,
                accuracy_fn: Optional[Callable[[float], float]] = None,
                step_backend=None):
+    from repro.dist.topology import zipf_weights  # noqa: PLC0415
     self.cfg = cfg
-    # Measured per-budget step latencies (engine.MeasuredStepBackend) —
-    # accuracytrader components serve in measured, not modelled, time.
+    # Measured per-budget step latencies (engine.MeasuredStepBackend, or
+    # the cluster tier's ClusterMeasuredExport with per-component
+    # vectors) — accuracytrader components serve in measured, not
+    # modelled, time.
     self.step_backend = step_backend
+    self.per_component_ms = step_backend is not None and hasattr(
+        step_backend, "step_ms_per_component")
+    # Component skew: hot components carry proportionally more work.  A
+    # per-component measured export already encodes the real tier's
+    # skew, so the modelled multiplier stays 1 in that case.
+    if cfg.skew and not self.per_component_ms:
+      scales = zipf_weights(cfg.n_components, cfg.skew) * cfg.n_components
+    else:
+      scales = np.ones((cfg.n_components,))
     self.components = [
-        ComponentModel(seed=cfg.seed * 1000 + i,
+        ComponentModel(seed=cfg.seed * 1000 + i, comp_id=i,
+                       work_scale=float(scales[i]),
                        full_items=cfg.full_items)
         for i in range(cfg.n_components)
     ]
@@ -102,14 +120,21 @@ class ScatterGatherService:
       queue_delay = float(np.mean([
           max(0.0, c.busy_until - req.arrival_ms) for c in self.components]))
       budget = self.controller.budget_for(cfg.deadline_ms, queue_delay)
+      measured = None
+      if self.step_backend is not None:
+        # Per-component vector when the backend exports one (the cluster
+        # tier's measured attribution); each ComponentModel indexes its
+        # own entry by comp_id.
+        measured = (self.step_backend.step_ms_per_component(budget)
+                    if self.per_component_ms
+                    else self.step_backend.step_ms(budget))
     for i, comp in enumerate(self.components):
       if tech in ("basic", "partial", "reissue"):
         items = cfg.full_items
         service_ms = None
       else:
         items = budget
-        service_ms = (self.step_backend.step_ms(budget)
-                      if self.step_backend is not None else None)
+        service_ms = measured
       t_done = comp.submit(req.arrival_ms, items, service_ms=service_ms)
       done_times.append(t_done)
       processed_frac.append(items / cfg.full_items)

@@ -101,6 +101,32 @@ def test_xla_interpret_token_parity(cfg):
   assert toks["xla"] == toks["interpret"]
 
 
+def test_admission_overlap_token_parity(cfg):
+  """Overlapping admission with resident decode changes dispatch order,
+  never results: tokens match the serial-admission engine exactly, and
+  slot invariants hold (each arrival admitted once, lanes cycle)."""
+  toks = {}
+  for overlap in (True, False):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=32, max_new_tokens=2, policy="fixed",
+        fixed_budget=1, impl="xla", overlap_admission=overlap))
+    reqs = make_requests([0.0, 0.0, 1.0, 2.0, 3.0], 32, 2, cfg.vocab,
+                         seed=13)
+    eng.run(reqs)
+    toks[overlap] = [r.tokens for r in sorted(reqs, key=lambda r: r.rid)]
+    occupied = {}
+    for kind, rid, slot, _ in eng.events:
+      if kind == "admit":
+        assert slot not in occupied
+        occupied[slot] = rid
+      else:
+        assert occupied.pop(slot) == rid
+    assert not occupied
+    for r in reqs:
+      assert len(r.tokens) == 3 and r.admit_ms >= r.arrival_ms
+  assert toks[True] == toks[False]
+
+
 def test_stage1_always_produced_at_budget_zero(cfg):
   eng = ServingEngine(cfg, EngineConfig(
       n_slots=2, prompt_len=PROMPT, max_new_tokens=NEW, policy="fixed",

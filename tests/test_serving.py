@@ -35,6 +35,34 @@ def test_component_queueing():
   assert t2 > t1                      # FIFO queue builds up
 
 
+def test_component_vector_service_and_work_scale():
+  # Per-component measured service vectors: each component indexes its
+  # own entry by comp_id (the cluster tier's export format).
+  vec = np.asarray([3.0, 5.0, 9.0])
+  for cid, want in [(0, 3.0), (1, 5.0), (2, 9.0), (4, 5.0)]:  # mod len
+    c = ComponentModel(seed=1, comp_id=cid, interference=0.0,
+                       straggler_prob=0.0)
+    assert c.submit(0.0, 7, service_ms=vec) == pytest.approx(want)
+  # Scalars keep working, and work_scale multiplies (hot component).
+  c = ComponentModel(seed=1, interference=0.0, straggler_prob=0.0,
+                     work_scale=2.0)
+  assert c.submit(0.0, 7, service_ms=4.0) == pytest.approx(8.0)
+
+
+def test_zipf_skew_makes_hot_components_slower():
+  """ServiceConfig.skew: low-rank components own more of the corpus and
+  serve slower — the service's tail follows the hottest component."""
+  cfg = dict(n_components=12, technique="basic", deadline_ms=100.0, seed=3)
+  uni = ScatterGatherService(ServiceConfig(**cfg, skew=0.0))
+  hot = ScatterGatherService(ServiceConfig(**cfg, skew=1.2))
+  scales = [c.work_scale for c in hot.components]
+  assert scales[0] > 1.0 > scales[-1]          # rank 0 is the hot one
+  assert all(c.work_scale == 1.0 for c in uni.components)
+  su = uni.run_open_loop(20, 4.0)
+  sh = hot.run_open_loop(20, 4.0)
+  assert sh["p999"] > su["p999"]               # straggler-dominated tail
+
+
 def test_accuracytrader_tail_stable_under_load():
   light = _run("accuracytrader", 20)
   heavy = _run("accuracytrader", 100)

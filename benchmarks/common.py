@@ -1,0 +1,41 @@
+"""Shared bench-artifact metadata.
+
+Every BENCH_*.json carries a ``schema_version`` (bumped when a bench's
+JSON layout changes incompatibly) and the git revision that produced it,
+so a committed baseline is always attributable to the code that measured
+it and downstream readers can gate on the layout they understand.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+
+SCHEMA_VERSION = 2
+
+
+def git_describe() -> str:
+  try:
+    # Pin cwd to THIS repo: a bench launched from elsewhere (absolute
+    # PYTHONPATH) must not record some other checkout's revision.
+    out = subprocess.run(
+        ["git", "describe", "--always", "--dirty", "--tags"],
+        capture_output=True, text=True, timeout=10, check=False,
+        cwd=os.path.dirname(os.path.abspath(__file__)))
+    return out.stdout.strip() or "unknown"
+  except Exception:
+    return "unknown"
+
+
+def bench_meta(**extra) -> dict:
+  """Provenance block merged into every bench JSON's ``meta``:
+  schema version, producing git revision, and (when jax is importable)
+  the backend + device count the numbers were measured on."""
+  meta = {"schema_version": SCHEMA_VERSION, "git": git_describe()}
+  try:
+    import jax  # noqa: PLC0415 — benches have already initialised it
+    meta["backend"] = jax.default_backend()
+    meta["devices"] = jax.device_count()
+  except Exception:
+    pass
+  meta.update(extra)
+  return meta

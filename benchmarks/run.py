@@ -3,6 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline benchmark
 reads the dry-run artifacts (run ``python -m repro.launch.dryrun --all``
 first for the full 40-cell table; missing cells are skipped here).
+
+All four committed baselines regenerate from this one entry point:
+
+  python -m benchmarks.run --kernels-only --json BENCH_decode.json
+  python -m benchmarks.run --prefill-only --json BENCH_prefill.json
+  python -m benchmarks.run --serving-only --json BENCH_serving.json
+  python -m benchmarks.run --cluster-only --json BENCH_cluster.json
+
+(``--serving-only`` / ``--cluster-only`` pass through to
+``benchmarks.serving_bench`` / ``benchmarks.cluster_bench``; ``--smoke``
+forwards too.)  Every JSON carries ``meta.schema_version`` and the git
+revision that produced it (benchmarks/common.py).
 """
 from __future__ import annotations
 
@@ -150,7 +162,31 @@ def main() -> None:
   ap.add_argument("--prefill-only", action="store_true",
                   help="run only the prefill + synopsis-build sweeps "
                        "(BENCH_prefill.json baseline)")
+  ap.add_argument("--serving-only", action="store_true",
+                  help="pass through to benchmarks.serving_bench "
+                       "(BENCH_serving.json baseline)")
+  ap.add_argument("--cluster-only", action="store_true",
+                  help="pass through to benchmarks.cluster_bench "
+                       "(BENCH_cluster.json baseline; forces host "
+                       "devices before jax initialises)")
+  ap.add_argument("--smoke", action="store_true",
+                  help="forwarded to --serving-only / --cluster-only")
+  ap.add_argument("--impl", default=None,
+                  choices=["auto", "pallas", "xla", "interpret"],
+                  help="forwarded to --serving-only / --cluster-only")
   args = ap.parse_args()
+
+  if args.serving_only or args.cluster_only:
+    # Dispatch BEFORE anything imports jax: cluster_bench must force the
+    # per-component host devices first.
+    sub = ["--json", args.json] if args.json else []
+    sub += ["--smoke"] if args.smoke else []
+    sub += ["--impl", args.impl] if args.impl else []
+    if args.cluster_only:
+      from benchmarks.cluster_bench import main as cluster_main
+      return cluster_main(sub)
+    from benchmarks.serving_bench import main as serving_main
+    return serving_main(sub)
 
   print("name,us_per_call,derived")
   collect = {} if args.json else None
@@ -166,9 +202,8 @@ def main() -> None:
     bench_prefill(collect)
     bench_roofline()
   if args.json:
-    import jax
-    meta = {"backend": jax.default_backend(),
-            "devices": jax.device_count()}
+    from benchmarks.common import bench_meta
+    meta = bench_meta()
     with open(args.json, "w") as f:
       json.dump({"meta": meta, **collect}, f, indent=1, sort_keys=True)
     print(f"# wrote {args.json}")

@@ -104,7 +104,7 @@ def serving_sweep(rates: Sequence[float],
   return out
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--json", default=None, metavar="PATH",
                   help="dump the sweep as a JSON baseline "
@@ -117,7 +117,7 @@ def main() -> None:
                   help="multiplier on the paper's cf_rates (default: 3.0 "
                        "full, 4.0 smoke — sized so the top rate saturates "
                        "the CPU proxy)")
-  args = ap.parse_args()
+  args = ap.parse_args(argv)
 
   from repro.serving.workload import CF_RATES
 
@@ -137,13 +137,9 @@ def main() -> None:
     scale = args.rate_scale if args.rate_scale is not None else 3.0
     res = serving_sweep(rates=[r * scale for r in CF_RATES],
                         impl=args.impl)
-  res["meta"] = {"wall_s": round(time.perf_counter() - t0, 1),
-                 "smoke": bool(args.smoke)}
-  try:
-    import jax
-    res["meta"]["backend"] = jax.default_backend()
-  except Exception:
-    pass
+  from benchmarks.common import bench_meta
+  res["meta"] = bench_meta(wall_s=round(time.perf_counter() - t0, 1),
+                           smoke=bool(args.smoke))
   if args.json:
     with open(args.json, "w") as f:
       json.dump(res, f, indent=1, sort_keys=True)

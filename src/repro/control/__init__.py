@@ -1,0 +1,18 @@
+"""The latency-control plane (DESIGN.md §10): pluggable per-component
+latency predictors, the deadline->budget policy (with stranded-budget
+recirculation), and the hedged replica-gather decision — the ONE
+implementation shared by the serving engine, the scatter-gather cluster
+tier and the discrete-event simulator."""
+from repro.control.policy import (MODE_DROP, MODE_FULL, MODE_STAGE1,
+                                  POLICIES, BudgetController,
+                                  DeadlineBudgetPolicy, allocate_budget)
+from repro.control.predictors import (AffinePredictor, EwmaPredictor,
+                                      QuantilePredictor, TailTracker,
+                                      make_predictor, percentile)
+
+__all__ = [
+    "MODE_DROP", "MODE_FULL", "MODE_STAGE1", "POLICIES",
+    "BudgetController", "DeadlineBudgetPolicy", "allocate_budget",
+    "AffinePredictor", "EwmaPredictor", "QuantilePredictor",
+    "TailTracker", "make_predictor", "percentile",
+]

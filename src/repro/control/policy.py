@@ -1,0 +1,190 @@
+"""Deadline -> budget policy: the control plane's decision layer
+(DESIGN.md §10).
+
+One object — :class:`DeadlineBudgetPolicy` — owns every budget decision
+the serving stack makes, for all four techniques
+(``basic`` / ``partial`` / ``accuracytrader`` / ``fixed``):
+
+  * ``budget_for``: (deadline, queue delay) -> bucketed refinement budget,
+    by scanning the static bucket set against the configured latency
+    predictor (any :mod:`repro.control.predictors` implementation) — the
+    hardware adaptation of the paper's in-loop ``l_ela < l_spe`` check.
+  * :func:`allocate_budget`: split the step budget over components in
+    proportion to synopsis relevance mass, with **stranded-budget
+    recirculation**: budget a binding per-component cap would strand is
+    redistributed over the unsaturated components instead of dropped.
+  * ``gather_modes``: the per-component FULL / STAGE1 / DROP decision for
+    the scatter-gather frontend, including the **hedged replica reissue**
+    min (a component predicted to miss the step deadline is reissued to
+    its replica and the earlier completion counts).
+
+:class:`BudgetController` is the bare (predictor, buckets) -> budget
+mapper, kept for callers that need no technique dispatch (the simulator,
+the single-batch demo loop); ``repro.core.deadline`` re-exports it for
+backwards compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.control.predictors import AffinePredictor
+
+# Per-component gather modes (the fe_mode vector fed into the step).
+MODE_DROP, MODE_STAGE1, MODE_FULL = 0, 1, 2
+
+POLICIES = ("basic", "partial", "accuracytrader", "fixed")
+
+
+def allocate_budget(mass, total: int, caps, recirculate: bool = True):
+  """Split ``total`` refinement clusters over components ∝ relevance mass.
+
+  ``mass`` (..., N) non-negative; ``caps`` (..., N) per-component valid
+  cluster counts.  Largest-remainder rounding on top of the proportional
+  floor; monotone in mass (more synopsis relevance mass never means a
+  smaller budget).  A budget covering the whole corpus saturates every
+  cap exactly (the ``basic`` full gather stays exact).
+
+  ``recirculate=True`` (the default): budget stranded by a binding cap is
+  redistributed over the still-unsaturated components — two rounds ∝
+  mass (the residue almost always drains in one; the second covers a
+  cascading saturation), then one round ∝ remaining *capacity* that
+  provably drains whatever is left: when ``left <= sum(caps - alloc)``
+  every component's capacity-proportional share (largest-remainder
+  rounded) fits under its cap, so nothing clips and exactly ``left`` is
+  spent.  Conservation — ``sum(alloc) == min(total, sum(caps))`` — thus
+  holds even when unsaturated components carry zero mass (f32 exp
+  underflow on far-from-max scores), and the unrolled work on the decode
+  hot path is three fixed rounds, not N.  ``recirculate=False`` keeps
+  the legacy cap-and-drop behaviour (the step simply refines less)."""
+  import jax.numpy as jnp  # noqa: PLC0415 — keep module import light
+
+  caps = caps.astype(jnp.int32)
+  share = total * mass / jnp.maximum(
+      jnp.sum(mass, axis=-1, keepdims=True), 1e-30)
+  floor = jnp.floor(share)
+  base = jnp.minimum(floor, caps).astype(jnp.int32)
+  rem = share - floor
+  left = total - jnp.sum(base, axis=-1, keepdims=True)
+  order = jnp.argsort(-rem, axis=-1)
+  rank = jnp.argsort(order, axis=-1)
+  extra = (rank < left).astype(jnp.int32)
+  alloc = jnp.minimum(base + extra, caps)
+
+  if recirculate:
+    def respend(alloc, weights):
+      """One largest-remainder round of the residue ∝ ``weights``
+      (zero-weight components sort last for the integer units)."""
+      left = (total - jnp.sum(alloc, axis=-1, keepdims=True)) \
+          .astype(jnp.float32)
+      share = left * weights / jnp.maximum(
+          jnp.sum(weights, axis=-1, keepdims=True), 1e-30)
+      floor = jnp.floor(share)
+      rem = jnp.where(weights > 0, share - floor, -1.0)
+      order = jnp.argsort(-rem, axis=-1)
+      rank = jnp.argsort(order, axis=-1)
+      ints = left - jnp.sum(floor, axis=-1, keepdims=True)
+      extra = floor.astype(jnp.int32) + (rank < ints).astype(jnp.int32)
+      return jnp.minimum(alloc + extra, caps)
+
+    for _ in range(2):
+      alloc = respend(alloc, jnp.where(alloc < caps, mass, 0.0))
+    alloc = respend(alloc, (caps - alloc).astype(jnp.float32))
+
+  capsum = jnp.sum(caps, axis=-1, keepdims=True)
+  return jnp.where(total >= capsum, caps, alloc)
+
+
+@dataclasses.dataclass
+class BudgetController:
+  """Maps (deadline, queue delay) -> the largest static budget bucket the
+  predictor expects to finish in time (always at least the smallest
+  bucket: stage 1 runs no matter what)."""
+  model: AffinePredictor         # any control.predictors implementation
+  buckets: Sequence[int] = (0, 1, 2, 4, 8, 16, 32, 64, 128)
+  i_max_cap: Optional[int] = None   # paper's i_max (e.g. top-40% clusters)
+
+  def budget_for(self, deadline: float, queue_delay: float = 0.0) -> int:
+    slack = deadline - queue_delay
+    candidates = self.buckets
+    if not getattr(self.model, "extrapolates", True):
+      # Bucketed predictors guess an untried budget from the NEAREST
+      # tried one, which makes a cold controller see the biggest bucket
+      # as cheap as the smallest and blow early deadlines.  Slow-start:
+      # trust tried buckets, explore at most ONE bucket above the
+      # largest tried so far.  (Keys-only accessor: this runs on every
+      # decode step and must not evaluate the predictions themselves.)
+      seen = self.model.observed_buckets()
+      top = max(seen) if seen else -1
+      untried = [b for b in self.buckets if b > top]
+      candidates = [b for b in self.buckets
+                    if b <= top or b in untried[:1]]
+    chosen = self.buckets[0]
+    for b in candidates:
+      if self.i_max_cap is not None and b > self.i_max_cap:
+        continue
+      if self.model.predict(b) <= slack and b > chosen:
+        chosen = b
+    return chosen
+
+  def observe(self, budget: int, latency: float) -> None:
+    self.model.observe(budget, latency)
+
+
+@dataclasses.dataclass
+class DeadlineBudgetPolicy:
+  """Technique-aware budget + gather-mode decisions on one predictor.
+
+  ``basic``/``partial`` always spend the full budget (``i_max_cap``);
+  ``fixed`` always spends ``fixed_budget``; ``accuracytrader`` asks the
+  controller for the largest bucket predicted to make the deadline."""
+  policy: str
+  buckets: Tuple[int, ...]
+  i_max_cap: int
+  predictor: AffinePredictor = dataclasses.field(
+      default_factory=AffinePredictor)
+  fixed_budget: int = 0
+
+  def __post_init__(self):
+    if self.policy not in POLICIES:
+      raise ValueError(f"policy {self.policy!r} not in {POLICIES}")
+    self.controller = BudgetController(
+        self.predictor, buckets=self.buckets, i_max_cap=self.i_max_cap)
+
+  def budget_for(self, deadline: float, queue_delay: float = 0.0) -> int:
+    if self.policy in ("basic", "partial"):
+      return self.i_max_cap
+    if self.policy == "fixed":
+      return self.fixed_budget
+    return self.controller.budget_for(deadline, queue_delay)
+
+  def observe(self, budget: int, latency: float) -> None:
+    self.predictor.observe(budget, latency)
+
+  def gather_modes(self, t_pred, deadline_ms: float, t_hedged=None):
+    """Per-component gather decision from predicted completion times.
+
+    ``t_pred`` (N,): each component's predicted completion for this step.
+    ``t_hedged`` (N,) or None: the predicted completion of the same
+    shard's reissue on its replica — when given, a component flagged as
+    likely to miss is hedged and the *earlier* of the two completions
+    decides (and later prices) its gather.
+
+    Returns ``(mode, hedged)``: the int32 FULL/STAGE1/DROP vector fed to
+    the device step, and the bool mask of components whose reissue was
+    actually dispatched."""
+    t_pred = np.asarray(t_pred, np.float64)
+    hedged = np.zeros(t_pred.shape, bool)
+    eff = t_pred
+    if t_hedged is not None:
+      hedged = t_pred > deadline_ms
+      eff = np.where(hedged, np.minimum(t_pred, t_hedged), t_pred)
+    if self.policy == "partial":
+      mode = np.where(eff <= deadline_ms, MODE_FULL, MODE_DROP)
+    elif self.policy == "accuracytrader":
+      mode = np.where(eff <= deadline_ms, MODE_FULL, MODE_STAGE1)
+    else:                       # basic / fixed: always full gather
+      mode = np.full(t_pred.shape, MODE_FULL)
+    return mode.astype(np.int32), hedged

@@ -1,79 +1,13 @@
-"""Deadline -> refinement-budget controller (hardware adaptation of the
-paper's in-loop ``l_ela < l_spe`` check).
+"""Backwards-compatible aliases for the latency-control plane.
 
-The component latency for a dispatch is modelled as
-
-    lat(i) = base + per_cluster * i + queue_delay
-
-with ``base`` (synopsis/stage-1 cost) and ``per_cluster`` (stage-2 cost per
-refined cluster) calibrated online by exponentially-weighted least squares
-over observed (i, latency) pairs.  Given the service deadline ``l_spe`` and
-the current queueing delay, the controller returns the largest budget
-``i_max`` expected to finish in time — bucketed to a small static set so the
-number of compiled programs stays bounded.
-
-This reproduces the paper's behaviour (process as many ranked clusters as
-the deadline allows; always at least the synopsis) while keeping device
-programs static-shaped.
+The deadline->budget controller and the calibrated latency model used to
+live here; they are now part of the unified control plane
+(`repro.control`, DESIGN.md §10), which the serving engine, the
+scatter-gather cluster tier and the discrete-event simulator all share.
+``LatencyModel`` is the control plane's :class:`AffinePredictor` — one of
+several predictors (EWMA, sliding-window quantile) behind one interface.
 """
-from __future__ import annotations
+from repro.control.policy import BudgetController
+from repro.control.predictors import AffinePredictor as LatencyModel
 
-import dataclasses
-from typing import Sequence
-
-
-@dataclasses.dataclass
-class LatencyModel:
-  """Exponentially-weighted least-squares fit of lat(i) = base + slope*i.
-
-  Sufficient statistics decay by (1 - alpha) per observation, so the model
-  tracks drifting service times (load changes, interference)."""
-  base: float = 1.0
-  slope: float = 0.1
-  alpha: float = 0.05          # forgetting rate
-
-  def __post_init__(self):
-    self._sw = self._sb = self._sl = self._sbb = self._sbl = 0.0
-
-  def observe(self, budget: int, latency: float) -> None:
-    g = 1.0 - self.alpha
-    b = float(budget)
-    self._sw = self._sw * g + 1.0
-    self._sb = self._sb * g + b
-    self._sl = self._sl * g + latency
-    self._sbb = self._sbb * g + b * b
-    self._sbl = self._sbl * g + b * latency
-    det = self._sw * self._sbb - self._sb * self._sb
-    if det > 1e-9 and self._sw > 3.0:
-      slope = (self._sw * self._sbl - self._sb * self._sl) / det
-      base = (self._sl - slope * self._sb) / self._sw
-      self.slope = max(slope, 1e-6)
-      self.base = max(base, 1e-6)
-    else:
-      self.base = max(self._sl / max(self._sw, 1e-9), 1e-6)
-
-  def predict(self, budget: int) -> float:
-    return self.base + self.slope * budget
-
-
-@dataclasses.dataclass
-class BudgetController:
-  """Maps (deadline, queue delay) -> bucketed static budget i_max."""
-  model: LatencyModel
-  buckets: Sequence[int] = (0, 1, 2, 4, 8, 16, 32, 64, 128)
-  i_max_cap: int | None = None   # paper's i_max (e.g. top-40% of clusters)
-
-  def budget_for(self, deadline: float, queue_delay: float = 0.0) -> int:
-    slack = deadline - queue_delay - self.model.base
-    raw = int(slack / self.model.slope) if slack > 0 else 0
-    if self.i_max_cap is not None:
-      raw = min(raw, self.i_max_cap)
-    # Largest bucket <= raw; always >= smallest bucket (stage 1 always runs).
-    chosen = self.buckets[0]
-    for b in self.buckets:
-      if b <= raw:
-        chosen = b
-    return chosen
-
-  def observe(self, budget: int, latency: float) -> None:
-    self.model.observe(budget, latency)
+__all__ = ["BudgetController", "LatencyModel"]

@@ -11,7 +11,12 @@ of the M synopsis clusters of every resident request's corpus:
   * per-component ranges are padded to a common ``m_max`` so the component
     axis is a regular array dim (shard_map-able); padded clusters carry
     ``counts == 0`` and are masked out of stage-1 by the kernels facade
-    (``ops.synopsis_stage1(valid=...)``).
+    (``ops.synopsis_stage1(valid=...)``);
+  * a replication factor ``replicas`` places each shard on R components —
+    ``replica_owner(c, r)`` names the r-th holder of shard ``c`` (ring
+    placement: component ``(c + r) % N``) — so the frontend can *hedge*
+    a gather predicted to straggle by reissuing the shard's refinement to
+    its replica and taking the earlier completion (DESIGN.md §10).
 
 Mesh construction is a FUNCTION (like launch/mesh.py) so importing this
 module never touches jax device state: :func:`make_component_mesh` returns
@@ -40,16 +45,22 @@ class ComponentTopology:
 
   ``counts[c]`` clusters live on component ``c`` as the contiguous range
   ``[offsets[c], offsets[c] + counts[c])`` of the cluster-contiguous
-  corpus; every component's slice is padded to ``m_max`` slots."""
+  corpus; every component's slice is padded to ``m_max`` slots.
+  ``replicas`` R >= 2 additionally places a copy of each shard on the
+  next R-1 components of the ring (see :meth:`replica_owner`)."""
   n_components: int
   m_total: int
   counts: Tuple[int, ...]
   skew: float = 0.0
+  replicas: int = 1
 
   def __post_init__(self):
     assert len(self.counts) == self.n_components
     assert sum(self.counts) == self.m_total, (self.counts, self.m_total)
     assert all(c >= 1 for c in self.counts), self.counts
+    if not 1 <= self.replicas <= self.n_components:
+      raise ValueError(f"replicas {self.replicas} outside "
+                       f"[1, n_components={self.n_components}]")
 
   @property
   def m_max(self) -> int:
@@ -69,9 +80,24 @@ class ComponentTopology:
     """(m_total,) component id owning each global cluster index."""
     return np.repeat(np.arange(self.n_components), self.counts)
 
+  def replica_owner(self, c: int, r: int = 1) -> int:
+    """Component holding the r-th copy of shard ``c`` (r=0: the primary).
+    Ring placement: copies go to the next components, so any R
+    consecutive failures still leave R-1 shards each with a live holder
+    and hedged reissue never targets the straggler itself."""
+    if not 0 <= r < self.replicas:
+      raise ValueError(f"replica index {r} outside [0, {self.replicas})")
+    return (int(c) + r) % self.n_components
+
+  def replica_owners(self) -> np.ndarray:
+    """(n_components, replicas) holders of each shard; column 0 is the
+    primary."""
+    base = np.arange(self.n_components)[:, None]
+    return (base + np.arange(self.replicas)[None, :]) % self.n_components
+
   @staticmethod
-  def plan(m_total: int, n_components: int,
-           skew: float = 0.0) -> "ComponentTopology":
+  def plan(m_total: int, n_components: int, skew: float = 0.0,
+           replicas: int = 1) -> "ComponentTopology":
     """Largest-remainder partition of ``m_total`` clusters by Zipf(skew)
     weights; every component owns at least one cluster."""
     n = int(n_components)
@@ -89,7 +115,7 @@ class ComponentTopology:
       over = np.where(counts > 1, counts - ideal, -np.inf)
       counts[int(np.argmax(over))] -= 1
     return ComponentTopology(n, int(m_total), tuple(int(c) for c in counts),
-                             skew=float(skew))
+                             skew=float(skew), replicas=int(replicas))
 
 
 def force_host_devices(n: int) -> None:

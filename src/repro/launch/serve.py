@@ -56,10 +56,12 @@ def _engine_main(args):
     from repro.serve.cluster import ClusterConfig, ClusterStepBackend
     backend = ClusterStepBackend(ClusterConfig(
         n_components=args.cluster, skew=args.skew, alloc=args.alloc,
-        route=args.route))
+        route=args.route, replicas=args.replicas,
+        predictor=args.predictor or "ewma"))
   eng = ServingEngine(cfg, EngineConfig(
       n_slots=args.n_slots, prompt_len=prompt_len, max_new_tokens=max_new,
-      deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl),
+      deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl,
+      predictor=args.predictor or "affine"),
       backend=backend)
   print(f"[engine] impl={eng.impl!r} policy={args.policy} "
         f"slots={args.n_slots} prompt={prompt_len} tokens={max_new} "
@@ -69,7 +71,8 @@ def _engine_main(args):
     mesh = "mesh" if backend.mesh is not None else "stacked"
     print(f"[cluster] N={args.cluster} ({mesh}, {len(jax.devices())} "
           f"devices) counts={backend.topo.counts} alloc={args.alloc} "
-          f"route={args.route} skew={args.skew}")
+          f"route={args.route} skew={args.skew} R={args.replicas} "
+          f"predictor={args.predictor or 'ewma'}")
 
   if args.trace == "cf_rates":
     points = [(f"rate{r}", r * args.rate_scale) for r in CF_RATES]
@@ -148,6 +151,17 @@ def main():
   ap.add_argument("--route", default="fixed", choices=["fixed", "rotate"],
                   help="per-slot cluster->component routing (rotate "
                        "spreads skewed ranges across components)")
+  ap.add_argument("--replicas", type=int, default=1, metavar="R",
+                  help="shard copies on the component ring (R >= 2 "
+                       "enables hedged reissue: a gather predicted to "
+                       "straggle is reissued to the shard's replica and "
+                       "the earlier completion counts — DESIGN.md §10)")
+  ap.add_argument("--predictor", default=None,
+                  help="control-plane latency predictor: affine | ewma | "
+                       "quantile[:pct] (quantile makes deadlines target "
+                       "a percentile of the measured per-bucket step "
+                       "times; default: affine for the engine "
+                       "controller, ewma for the cluster tier)")
   ap.add_argument("--trace", default="cf_rates",
                   choices=["cf_rates", "sogou_hourly"],
                   help="arrival-rate source for --engine")
@@ -183,7 +197,7 @@ def main():
   import jax.numpy as jnp
 
   from repro.configs.registry import get_config
-  from repro.core.deadline import BudgetController, LatencyModel
+  from repro.control import BudgetController, make_predictor
   from repro.kernels.ops import resolve_impl
   from repro.models import common as cm
   from repro.models import transformer as tf
@@ -244,7 +258,12 @@ def main():
   # whole generation loop.
   logits, cache = logits_per_batch[0], cache_per_batch[0]
   del logits_per_batch, cache_per_batch
-  ctrl = BudgetController(LatencyModel(base=5.0, slope=1.0, alpha=0.1),
+  # --predictor applies here too (the demo loop's budget controller);
+  # the affine default keeps the old demo calibration constants.
+  pspec = args.predictor or "affine"
+  pkw = {"base": 5.0, "slope": 1.0, "alpha": 0.1} \
+      if pspec.startswith("affine") else {}
+  ctrl = BudgetController(make_predictor(pspec, **pkw),
                           buckets=(0, 1, 2, 4, 8, 16, 32),
                           i_max_cap=cfg.synopsis.i_max or 32)
 

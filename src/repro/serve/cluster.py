@@ -24,7 +24,20 @@ over the kernel serve path:
     miss the step deadline — the synopsis answer, which always returns
     instantly, stands in) or DROP (partial execution: the component's
     entire contribution is skipped), and the online-softmax result
-    composer folds exactly the granted partials.
+    composer folds exactly the granted partials;
+  * with a replication factor R >= 2 (``ClusterConfig.replicas``,
+    `ComponentTopology.replica_owner`) the gather additionally *hedges*:
+    a component the predictor flags as likely to miss the step deadline
+    has its refinement reissued to the shard's replica, the earlier of
+    the two completions counts, and only when BOTH are predicted to miss
+    does the stage-1 answer (or DROP, under partial execution) stand in.
+
+  All latency prediction and budget decisions go through the shared
+  control plane (`repro.control`, DESIGN.md §10): a pluggable per-bucket
+  latency predictor (EWMA by default, sliding-window quantile via
+  ``ClusterConfig.predictor``) and one `DeadlineBudgetPolicy` that owns
+  the FULL/STAGE1/DROP decision and the mass-proportional
+  `allocate_budget` with stranded-budget recirculation.
 
 `ClusterStepBackend` plugs the tier into `ServingEngine` as a drop-in
 step backend: admission scatters each slot's built synopsis across the
@@ -54,6 +67,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import (MODE_DROP, MODE_FULL, MODE_STAGE1,
+                           allocate_budget, make_predictor)
 from repro.dist import sharding as shd
 from repro.dist.topology import ComponentTopology, make_component_mesh
 from repro.kernels import ops
@@ -62,8 +77,9 @@ from repro.serve.serve_step import make_serve_step
 
 NEG_INF = ops.NEG_INF
 
-# Per-component gather modes (the fe_mode vector fed into the step).
-MODE_DROP, MODE_STAGE1, MODE_FULL = 0, 1, 2
+__all__ = ["MODE_DROP", "MODE_STAGE1", "MODE_FULL", "allocate_budget",
+           "ClusterConfig", "ClusterStepBackend", "ClusterMeasuredExport",
+           "make_cluster_attention"]
 
 
 @dataclasses.dataclass
@@ -73,6 +89,10 @@ class ClusterConfig:
   skew: float = 0.0            # Zipf exponent over component corpus shares
   alloc: str = "mass"          # "mass" (∝ relevance mass) | "topk" (global)
   route: str = "fixed"         # per-slot cluster routing; "rotate" balances
+  replicas: int = 1            # shard copies; R >= 2 enables hedged reissue
+  predictor: str = "ewma"      # control-plane wall predictor ("quantile:90"
+                               # makes hedging target a tail percentile)
+  recirculate: bool = True     # stranded-budget recirculation in allocate
   interference: float = 0.25   # lognormal sigma (co-located jobs, per step)
   straggler_prob: float = 0.02
   straggler_scale: float = 8.0
@@ -81,34 +101,10 @@ class ClusterConfig:
 
 
 # ---------------------------------------------------------------------------
-# Frontend aggregator: global ranking + budget allocation across components.
+# Frontend aggregator: global ranking + budget allocation across components
+# (the allocation itself — mass-proportional with stranded-budget
+# recirculation — lives in the control plane: repro.control.allocate_budget).
 # ---------------------------------------------------------------------------
-
-def allocate_budget(mass: jax.Array, total: int,
-                    caps: jax.Array) -> jax.Array:
-  """Split ``total`` refinement clusters over components ∝ relevance mass.
-
-  ``mass`` (..., N) non-negative; ``caps`` (..., N) per-component valid
-  cluster counts.  Largest-remainder rounding on top of the proportional
-  floor; monotone in mass (more synopsis relevance mass never means a
-  smaller budget).  A budget covering the whole corpus saturates every
-  cap exactly (the ``basic`` full gather stays exact); below that, budget
-  stranded by a binding cap is not re-circulated (the step simply
-  refines less — re-circulation is a ROADMAP item)."""
-  caps = caps.astype(jnp.int32)
-  share = total * mass / jnp.maximum(
-      jnp.sum(mass, axis=-1, keepdims=True), 1e-30)
-  floor = jnp.floor(share)
-  base = jnp.minimum(floor, caps).astype(jnp.int32)
-  rem = share - floor
-  left = total - jnp.sum(base, axis=-1, keepdims=True)
-  order = jnp.argsort(-rem, axis=-1)
-  rank = jnp.argsort(order, axis=-1)
-  extra = (rank < left).astype(jnp.int32)
-  alloc = jnp.minimum(base + extra, caps)
-  capsum = jnp.sum(caps, axis=-1, keepdims=True)
-  return jnp.where(total >= capsum, caps, alloc)
-
 
 def _frontend_rank(sc_all: jax.Array, i_max: int):
   """Global ranking over the gathered per-component scores.
@@ -177,7 +173,7 @@ def _extras_partial(q, csl, self_kv, *, sm_scale, cap, impl):
 # ---------------------------------------------------------------------------
 
 def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
-                           mesh=None):
+                           mesh=None, recirculate: bool = True):
   """Returns ``attention_fn(q, cache_sl, ...) -> (ctx, aux)`` over the
   component-partitioned cache layout (DESIGN.md §9):
 
@@ -197,16 +193,17 @@ def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
       return _cluster_sharded(
           q, csl, topo, alloc, mesh, i_max=i_max,
           cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
-          self_kv=self_kv, impl=impl)
+          self_kv=self_kv, impl=impl, recirculate=recirculate)
     return _cluster_stacked(
         q, csl, topo, alloc, i_max=i_max, cluster_size=cluster_size,
-        sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl)
+        sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl,
+        recirculate=recirculate)
 
   return attention
 
 
 def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
-                     cap, self_kv, impl):
+                     cap, self_kv, impl, recirculate=True):
   """Single-device execution: the N components run as an unrolled loop
   over the component axis — identical math to the shard_map body."""
   k, v = csl["k"], csl["v"]
@@ -226,7 +223,7 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
   budgets = None
   if gsel is not None and alloc == "mass":
     caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)         # (B, Hkv, N)
-    budgets = allocate_budget(mass, i_max, caps)
+    budgets = allocate_budget(mass, i_max, caps, recirculate=recirculate)
 
   acc = None
   cover = []
@@ -256,7 +253,7 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
 
 
 def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
-                     sm_scale, cap, self_kv, impl):
+                     sm_scale, cap, self_kv, impl, recirculate=True):
   """shard_map execution over the ``("component",)`` mesh: every device is
   one component; the score all-gather + replicated frontend logic is the
   aggregator, the partials all-gather + fold is the result composer."""
@@ -299,7 +296,8 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
         budgets = None
         if alloc == "mass":
           caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)    # (B, Hkv, N)
-          budgets = allocate_budget(mass, i_max, caps)
+          budgets = allocate_budget(mass, i_max, caps,
+                                    recirculate=recirculate)
         sel = _select_local(sid, sc_l, gsel, budgets, alloc, i_max, Mp)
         p_ref = ops.refine_stage2(
             q, k_l, v_l, sel, ks_l, vs_l, counts_l,
@@ -345,6 +343,8 @@ class _StepPlan:
   fe_mode: jax.Array           # (N,) int32 device array fed into the step
   mode: np.ndarray             # same, host-side
   noise: np.ndarray            # per-component interference multipliers
+  noise2: np.ndarray           # independent draws for the replica reissues
+  hedged: np.ndarray           # (N,) bool: shard c's refinement reissued
   b_est: np.ndarray            # frontend's expected per-component budget
   deadline_ms: float
 
@@ -379,7 +379,7 @@ class ClusterStepBackend:
     if cc.route not in ("fixed", "rotate"):
       raise ValueError(f"route {cc.route!r} not in ('fixed', 'rotate')")
     self.topo = ComponentTopology.plan(self.M, cc.n_components,
-                                       skew=cc.skew)
+                                       skew=cc.skew, replicas=cc.replicas)
     use_mesh = cc.use_mesh
     self.mesh = make_component_mesh(cc.n_components) \
         if use_mesh or use_mesh is None else None
@@ -389,21 +389,43 @@ class ClusterStepBackend:
           f"XLA_FLAGS=--xla_force_host_platform_device_count="
           f"{cc.n_components}")
     self.attention = make_cluster_attention(self.topo, alloc=cc.alloc,
-                                            mesh=self.mesh)
+                                            mesh=self.mesh,
+                                            recirculate=cc.recirculate)
     # Per-component corpus share: the latency/accuracy attribution
-    # weights.  Rotation mixes ownership across slots -> uniform.
+    # weights.  Rotation mixes ownership across slots via shifts
+    # 0..n_slots-1, so the attribution is the mean of exactly those
+    # rotations of the plan — uniform only once n_slots covers the
+    # component ring (fewer slots leave a skewed corpus genuinely
+    # concentrated on the first components, and the attribution must
+    # say so or plan_step underpredicts the hot components).
     if cc.route == "rotate":
-      self.comp_share = np.full((cc.n_components,),
-                                1.0 / cc.n_components)
+      self.comp_share = np.mean(
+          [np.roll(self.topo.shares, s) for s in range(self.n_slots)],
+          axis=0)
     else:
       self.comp_share = np.asarray(self.topo.shares)
-    # Measured wall-time EWMA per budget bucket: the attribution base.
-    # Pre-dispatch predictions use it; post-step accounting attributes
-    # the just-measured wall directly (no fitted model in the clock).
-    self.wall_ewma: Dict[int, float] = {}
+    # Control plane: one pluggable wall-time predictor per backend (the
+    # attribution base — pre-dispatch predictions AND the hedging
+    # decision read it).  Gather-mode decisions go through the engine's
+    # DeadlineBudgetPolicy (`engine.controller.gather_modes`): one
+    # policy object per engine owns budgets AND modes.
+    self.predictor = make_predictor(cc.predictor)
+    # Primary -> first-replica holder, per shard (ring placement).
+    self.replica_of = np.asarray(
+        [self.topo.replica_owner(c, 1) for c in range(cc.n_components)]) \
+        if cc.replicas > 1 else None
     self.mass_ewma = self.comp_share.copy()
-    self.rng = np.random.default_rng(cc.seed)
+    self.reseed(cc.seed)
     self._write = self._make_write()
+
+  def reseed(self, seed: int) -> None:
+    """Re-seed the interference/straggler draw stream.  Called per
+    measurement window (`run_open_loop`) so a window's draw sequence is a
+    pure function of (config seed, window seed) — warmup and prior
+    windows cannot shift it, and BENCH_cluster.json regenerates with the
+    same noise world every time."""
+    self.rng = np.random.default_rng(
+        np.random.SeedSequence([int(self.ccfg.seed), int(seed) & 0x7fffffff]))
 
   # -- cache layout ----------------------------------------------------------
   def zeros_cache(self) -> Dict[str, jax.Array]:
@@ -496,55 +518,67 @@ class ClusterStepBackend:
     C = self.cfg.synopsis.cluster_size
     return self.comp_share * self.M + np.maximum(b_vec, 0.0) * C
 
-  def _wall_guess(self, budget: int) -> float:
-    if budget in self.wall_ewma:
-      return self.wall_ewma[budget]
-    if self.wall_ewma:
-      nearest = min(self.wall_ewma, key=lambda b: abs(b - budget))
-      return self.wall_ewma[nearest]
-    return 5.0                   # prior before the first measured step
-
-  def plan_step(self, budget: int, step_deadline_ms: float,
-                policy: str) -> _StepPlan:
-    """Pre-dispatch gather decision: predict each component's completion
-    (measured-wall EWMA for this bucket, attributed by rows read, times
-    this step's interference / straggler draws) and mark components that
-    cannot make the step deadline STAGE1 (accuracytrader: the synopsis
-    answer stands in) or DROP (partial execution: the result is
-    skipped)."""
+  def _draw_noise(self) -> np.ndarray:
+    """One (N,) interference + straggler multiplier draw.  Two draws per
+    step (primary + replica path) are consumed regardless of the
+    replication factor, so R=1 and R=2 runs with the same seeds see the
+    same primary noise world."""
     cc = self.ccfg
     N = self.topo.n_components
+    noise = self.rng.lognormal(0.0, cc.interference, N)
+    return np.where(self.rng.random(N) < cc.straggler_prob,
+                    noise * cc.straggler_scale, noise)
+
+  def _hedge_time(self, wall: float, u: np.ndarray, usum: float,
+                  noise: np.ndarray, noise2: np.ndarray) -> np.ndarray:
+    """Completion of shard c's reissue on its replica j = replica_of[c]:
+    the replica first finishes its own shard — u[j] at noise[j], the
+    SAME draw that prices j's own completion this step, so a reissue can
+    never finish before the machine it queues behind is free — then
+    streams c's stage-1 + granted clusters again (u[c]) under the
+    reissue's independent draw noise2[j].  ONE expression shared by the
+    hedging decision (plan_step) and the realized accounting (account),
+    so they can never drift apart."""
+    j = self.replica_of
+    return wall * (u[j] * noise[j] + u * noise2[j]) / usum
+
+  def plan_step(self, budget: int, step_deadline_ms: float) -> _StepPlan:
+    """Pre-dispatch gather decision: predict each component's completion
+    (control-plane wall predictor for this bucket, attributed by rows
+    read, times this step's interference / straggler draws), hedge the
+    predicted stragglers onto their shard replicas (R >= 2: the reissue
+    queues behind the replica's own work and the earlier completion
+    counts), and let the policy mark the components that still cannot
+    make the step deadline STAGE1 (accuracytrader: the synopsis answer
+    stands in) or DROP (partial execution: the result is skipped)."""
     massf = self.mass_ewma / max(self.mass_ewma.sum(), 1e-30)
     b_est = float(budget) * massf
     u = self._units(b_est)
-    f = u / max(u.sum(), 1e-30)
-    noise = self.rng.lognormal(0.0, cc.interference, N)
-    noise = np.where(self.rng.random(N) < cc.straggler_prob,
-                     noise * cc.straggler_scale, noise)
-    t_pred = self._wall_guess(budget) * f * noise
-    if policy == "partial":
-      mode = np.where(t_pred <= step_deadline_ms, MODE_FULL, MODE_DROP)
-    elif policy == "accuracytrader":
-      mode = np.where(t_pred <= step_deadline_ms, MODE_FULL, MODE_STAGE1)
-    else:                       # basic / fixed: always full gather
-      mode = np.full((N,), MODE_FULL)
-    mode = mode.astype(np.int32)
+    usum = max(u.sum(), 1e-30)
+    noise, noise2 = self._draw_noise(), self._draw_noise()
+    wall = self.predictor.predict(budget)
+    t_pred = wall * (u / usum) * noise
+    t_hedged = None
+    if self.replica_of is not None:
+      t_hedged = self._hedge_time(wall, u, usum, noise, noise2)
+    mode, hedged = self.engine.controller.gather_modes(
+        t_pred, step_deadline_ms, t_hedged)
     return _StepPlan(fe_mode=jnp.asarray(mode), mode=mode, noise=noise,
-                     b_est=b_est, deadline_ms=step_deadline_ms)
+                     noise2=noise2, hedged=hedged, b_est=b_est,
+                     deadline_ms=step_deadline_ms)
 
   def account(self, budget: int, wall_ms: float, plan: _StepPlan, st,
               warming: bool = False) -> Dict[str, float]:
-    """Post-step accounting: fold the measured wall into this bucket's
-    EWMA, attribute it to components by the *actually refined* rows, and
-    return the parallel completion time (max over the gathered
-    components' attributed+noised times — what the frontend of a real
-    N-machine deployment would wait for) plus the step's accuracy
-    contribution."""
+    """Post-step accounting: fold the measured wall into the control-plane
+    predictor, attribute it to components by the *actually refined* rows,
+    take the hedged min for reissued shards (the same draws that made the
+    hedging decision price the realized completions), and return the
+    parallel completion time (max over the gathered components' effective
+    times — what the frontend of a real N-machine deployment would wait
+    for) plus the step's accuracy contribution."""
     full = plan.mode == MODE_FULL
     if not warming:
-      prev = self.wall_ewma.get(budget)
-      self.wall_ewma[budget] = wall_ms if prev is None \
-          else 0.7 * prev + 0.3 * wall_ms
+      self.predictor.observe(budget, wall_ms)
       if "fe_mass" in st:
         m = np.asarray(st["fe_mass"]).mean(axis=(0, 1))
         mix = 0.7 * self.mass_ewma + 0.3 * m
@@ -552,10 +586,17 @@ class ClusterStepBackend:
     cover = np.asarray(st["fe_cover"]).mean(axis=(0, 1)) \
         if "fe_cover" in st else np.zeros_like(self.comp_share)
     u = self._units(np.where(full, cover, 0.0))
-    f = u / max(u.sum(), 1e-30)
+    usum = max(u.sum(), 1e-30)
+    f = u / usum
     u0 = self._units(np.zeros_like(cover))       # stage-1-only compute
-    f0 = u0 / max(u.sum(), 1e-30)
+    f0 = u0 / usum
     t_real = wall_ms * f * plan.noise
+    if self.replica_of is not None and plan.hedged.any():
+      # A hedged shard completes at the earlier of the primary and its
+      # replica's reissue — same pricing as the plan-time decision.
+      t_hedge = self._hedge_time(wall_ms, u, usum, plan.noise,
+                                 plan.noise2)
+      t_real = np.where(plan.hedged, np.minimum(t_real, t_hedge), t_real)
     t_stage1 = wall_ms * f0 * plan.noise
     done = np.where(full, t_real,
                     np.where(plan.mode == MODE_STAGE1, t_stage1, 0.0))
@@ -568,7 +609,7 @@ class ClusterStepBackend:
     parallel_ms = float(max(done.max(), 1e-3))
     return {"parallel_ms": parallel_ms, "step_acc": step_acc,
             "wall_ms": wall_ms, "gathered": int(full.sum()),
-            "comp_ms": done}
+            "hedged": int(plan.hedged.sum()), "comp_ms": done}
 
   def export(self, full_items: int = 100) -> "ClusterMeasuredExport":
     return ClusterMeasuredExport(self, full_items=full_items)
@@ -586,12 +627,13 @@ class ClusterMeasuredExport:
   frontend-observed parallel completion (max over components).  Budget
   conversion follows MeasuredStepBackend: a simulator budget out of
   ``full_items`` rescales onto the tier's M clusters; the nearest
-  measured bucket's wall EWMA is attributed by rows read."""
+  measured bucket's predicted wall (a snapshot of the backend's
+  control-plane predictor) is attributed by rows read."""
 
   def __init__(self, backend: ClusterStepBackend, full_items: int = 100):
     self.share = backend.comp_share.copy()
     self.massf = backend.mass_ewma / max(backend.mass_ewma.sum(), 1e-30)
-    self.walls = dict(backend.wall_ewma) or {0: 5.0}
+    self.walls = backend.predictor.table() or {0: 5.0}
     self.M = backend.M
     self.cluster_size = backend.cfg.synopsis.cluster_size
     self.full_items = full_items

@@ -3,8 +3,9 @@
 This closes the loop the discrete-event simulator (`repro.serving.service`)
 only *models*: requests from an arrival trace (`repro.serving.workload`)
 occupy slots in a shared synopsis-KV cache, and each decode step picks its
-refinement budget with the same `core.deadline.BudgetController` the
-simulator uses — except here the controller is calibrated by **measured**
+refinement budget with the same `repro.control` latency-control plane the
+simulator uses (`DeadlineBudgetPolicy` over a pluggable predictor,
+DESIGN.md §10) — except here the predictor is calibrated by **measured**
 step wall times, so the accuracy-vs-tail-latency trade comes from the real
 kernel path, not a latency model.
 
@@ -17,7 +18,7 @@ retires when its token target is reached — freeing the lane mid-flight
 for the next queued request, no lockstep batches.
 
 Compiled-program count stays bounded the same way the simulator assumes:
-budgets are bucketed (`BudgetController.buckets`), so the engine jits one
+budgets are bucketed (`DeadlineBudgetPolicy.buckets`), so the engine jits one
 serve step per bucket plus one prefill and one build program, all warmed
 before the first measured step.
 
@@ -50,18 +51,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.deadline import BudgetController, LatencyModel
+from repro.control import (POLICIES, DeadlineBudgetPolicy, TailTracker,
+                           make_predictor)
 from repro.models import common as cm
 from repro.models import transformer as tf
 from repro.serve import kv_cache as kvc
 from repro.serve import synopsis_kv as skv
 from repro.serve.prefill import make_prefill_step
 from repro.serve.serve_step import make_serve_step, resolve_impl
-from repro.serving.latency import TailTracker
 from repro.serving.service import _default_concentration
 from repro.serving.workload import poisson_arrivals
-
-POLICIES = ("basic", "partial", "accuracytrader", "fixed")
 
 
 @dataclasses.dataclass
@@ -75,6 +74,11 @@ class EngineConfig:
   fixed_budget: int = 0            # for policy="fixed"
   impl: Optional[str] = None       # kernel impl; None -> cfg.synopsis.impl
   buckets: Optional[Sequence[int]] = None   # None -> {0, 1, 2, 4, ..., M}
+  # Latency-predictor spec for the budget controller (repro.control):
+  # "affine" (EW least-squares lat = base + slope*i), "ewma", or
+  # "quantile[:pct]" (deadlines target a percentile of the measured
+  # per-bucket step times instead of the mean).
+  predictor: str = "affine"
   seed: int = 0
   # Overlap admission (prefill+build+write) of new requests with the
   # resident slots' decode step: both are dispatched without an
@@ -160,9 +164,7 @@ class ServingEngine:
     self.buckets = buckets
     if ecfg.policy == "fixed" and ecfg.fixed_budget not in buckets:
       self.buckets = tuple(sorted(set(buckets) | {ecfg.fixed_budget}))
-    self.controller = BudgetController(
-        LatencyModel(base=2.0, slope=0.5, alpha=0.1),
-        buckets=self.buckets, i_max_cap=self.M)
+    self.controller = self._make_policy()
     self.accuracy_fn = accuracy_fn or _default_concentration
     # Optional scatter-gather step backend (repro.serve.cluster,
     # DESIGN.md §9): owns the component cache layout, the per-step gather
@@ -194,6 +196,17 @@ class ServingEngine:
     self.reset()
     self._warmup()
 
+  def _make_policy(self) -> DeadlineBudgetPolicy:
+    """The engine's slice of the control plane: one DeadlineBudgetPolicy
+    whose predictor is calibrated by measured step wall times."""
+    e = self.ecfg
+    kw = {"base": 2.0, "slope": 0.5, "alpha": 0.1} \
+        if e.predictor.startswith("affine") else {}
+    return DeadlineBudgetPolicy(
+        policy=e.policy, buckets=self.buckets, i_max_cap=self.M,
+        predictor=make_predictor(e.predictor, **kw),
+        fixed_budget=e.fixed_budget)
+
   # -- state ----------------------------------------------------------------
   def reset(self, reset_controller: bool = False) -> None:
     """Fresh slots/cache/clock for a new measurement window.  The latency
@@ -212,9 +225,7 @@ class ServingEngine:
     self.events: List[Tuple[str, int, int, float]] = []
     self.step_log: List[Tuple[int, float, int]] = []   # (budget, ms, active)
     if reset_controller:
-      self.controller = BudgetController(
-          LatencyModel(base=2.0, slope=0.5, alpha=0.1),
-          buckets=self.buckets, i_max_cap=self.M)
+      self.controller = self._make_policy()
 
   def _step_fn(self, budget: int):
     if budget not in self._step_cache:
@@ -260,10 +271,14 @@ class ServingEngine:
     # A throwaway mini-window through the real run() loop: admission
     # bursts, retire/re-admit and the post-retire step compose cache
     # lineages the enumeration above cannot, and any leftover signature
-    # must compile NOW, not inside the first measured window.
+    # must compile NOW, not inside the first measured window.  Arrivals
+    # are STAGGERED (not all at t=0) so later requests land while a
+    # resident slot is decoding — that drives the overlapped-admission
+    # path, whose step-reads-pre-admission-cache / append-onto-written-
+    # cache composition is its own jit signature.
     self.reset()
     mini = [EngineRequest(
-        rid=-2 - i, arrival_ms=0.0,
+        rid=-2 - i, arrival_ms=float(i),
         prompt=np.zeros((self.ecfg.prompt_len,), np.int32),
         max_new_tokens=min(2, self.ecfg.max_new_tokens))
         for i in range(min(2, self.ecfg.n_slots) + 1)]
@@ -305,14 +320,12 @@ class ServingEngine:
     them and their first token, so their deadlines clamp the budget the
     same way they would on the serial path."""
     e = self.ecfg
-    if e.policy in ("basic", "partial"):
-      return self.M
-    if e.policy == "fixed":
-      return e.fixed_budget
-    remaining = min(
-        [self.slots[i].req.arrival_ms + e.deadline_ms - self.now_ms
-         for i in active] +
-        [r.arrival_ms + e.deadline_ms - self.now_ms for r in extra])
+    remaining = 0.0
+    if e.policy == "accuracytrader":
+      remaining = min(
+          [self.slots[i].req.arrival_ms + e.deadline_ms - self.now_ms
+           for i in active] +
+          [r.arrival_ms + e.deadline_ms - self.now_ms for r in extra])
     return self.controller.budget_for(max(remaining, 0.0))
 
   def _retire(self, slot: int) -> None:
@@ -368,7 +381,7 @@ class ServingEngine:
     if self.backend is not None:
       deadline = self._step_deadline(active) if not self._warming \
           else float("inf")
-      plan = self.backend.plan_step(budget, deadline, e.policy)
+      plan = self.backend.plan_step(budget, deadline)
     step = self._step_fn(budget)
     t0 = time.perf_counter()
     if plan is not None:
@@ -574,8 +587,15 @@ def make_requests(arrivals_ms: Sequence[float], prompt_len: int,
 def run_open_loop(engine: ServingEngine, rate_per_s: float,
                   duration_s: float, seed: int = 0) -> Dict[str, float]:
   """One measurement window of Poisson arrivals at ``rate_per_s`` — the
-  engine-side mirror of ``ScatterGatherService.run_open_loop``."""
+  engine-side mirror of ``ScatterGatherService.run_open_loop``.
+
+  The window is draw-deterministic: the backend's interference/straggler
+  RNG (if any) is reseeded from ``seed``, so a re-run reproduces the same
+  noise sequence regardless of warmup or prior-window history (only the
+  measured wall times themselves vary run to run)."""
   engine.reset()
+  if engine.backend is not None and hasattr(engine.backend, "reseed"):
+    engine.backend.reseed(seed)
   arrivals = poisson_arrivals(rate_per_s, duration_s, seed=seed)
   reqs = make_requests(arrivals, engine.ecfg.prompt_len,
                        engine.ecfg.max_new_tokens, engine.cfg.vocab,

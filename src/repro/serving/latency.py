@@ -1,4 +1,4 @@
-"""Latency bookkeeping: percentile tracking + component behaviour model.
+"""Component behaviour model for the discrete-event simulator.
 
 The paper's testbed (110 Xen VMs, Storm, co-located MapReduce) is modelled
 as a discrete-event simulation whose *component service times* follow the
@@ -11,37 +11,19 @@ tail) standing in for the co-located MapReduce jobs, plus an M/G/1-style
 FIFO queue per component.  The synopsis/refinement *compute costs* fed in
 come from real measured timings of the JAX engine (benchmarks/) so the
 simulation's accuracy numbers are real, only the wall clock is modelled.
+
+Latency *tracking and prediction* live in the shared control plane
+(`repro.control`, DESIGN.md §10); ``TailTracker`` / ``percentile`` are
+re-exported here for backwards compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
-
-def percentile(xs: Sequence[float], p: float) -> float:
-  if len(xs) == 0:
-    return 0.0
-  return float(np.percentile(np.asarray(xs), p))
-
-
-class TailTracker:
-  """Streaming latency percentiles per window (p50/p99/p99.9)."""
-
-  def __init__(self):
-    self.samples: List[float] = []
-
-  def observe(self, latency: float) -> None:
-    self.samples.append(latency)
-
-  def p(self, q: float) -> float:
-    return percentile(self.samples, q)
-
-  def summary(self) -> dict:
-    return {"p50": self.p(50), "p99": self.p(99), "p999": self.p(99.9),
-            "mean": float(np.mean(self.samples)) if self.samples else 0.0,
-            "n": len(self.samples)}
+from repro.control.predictors import TailTracker, percentile  # noqa: F401
 
 
 @dataclasses.dataclass

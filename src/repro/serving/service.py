@@ -26,8 +26,9 @@ processed come from the real engine's correlation ranking).
 service times come from the serving engine's *measured* per-bucket decode
 latencies (`repro.serve.engine.MeasuredStepBackend`) instead of the
 modelled ``base + slope * items`` — simulated time, measured step time.
-The simulator and the engine share the `core.deadline` BudgetController
-implementation and the fig-4 concentration curve; budget units differ
+The simulator and the engine share the `repro.control` latency-control
+plane (predictors + BudgetController, DESIGN.md §10) and the fig-4
+concentration curve; budget units differ
 (clusters out of ``full_items`` here vs the engine's M), which the
 backend converts (see ``MeasuredStepBackend.full_items``).
 """
@@ -39,8 +40,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.deadline import BudgetController, LatencyModel
-from repro.serving.latency import ComponentModel, TailTracker
+from repro.control import AffinePredictor, BudgetController, TailTracker
+from repro.serving.latency import ComponentModel
 
 
 @dataclasses.dataclass
@@ -98,7 +99,7 @@ class ScatterGatherService:
     self.tracker = TailTracker()
     self.acc_tracker: List[float] = []
     self.controller = BudgetController(
-        LatencyModel(base=2.0, slope=0.15),
+        AffinePredictor(base=2.0, slope=0.15),
         buckets=tuple(sorted({0, 1, 2, 4, 8, 16, 24, 32, 40,
                               cfg.i_max_cap})),
         i_max_cap=cfg.i_max_cap)

@@ -198,13 +198,13 @@ def test_cluster_engine_end_to_end(cluster_engine):
     assert len(r.step_acc) == len(r.budgets)
     assert all(0.0 <= a <= 1.0 for a in r.step_acc)
     assert 0.0 <= r.accuracy <= 1.0
-  assert backend.wall_ewma                      # calibrated something
-  assert all(v > 0 for v in backend.wall_ewma.values())
+  assert backend.predictor.table()              # calibrated something
+  assert all(v > 0 for v in backend.predictor.table().values())
 
 
 def test_cluster_export_feeds_simulator(cluster_engine):
   eng, backend = cluster_engine
-  if not backend.wall_ewma:
+  if not backend.predictor.table():
     run_open_loop(eng, rate_per_s=30.0, duration_s=0.3, seed=5)
   exp = backend.export()
   vec = exp.step_ms_per_component(50)
@@ -361,6 +361,7 @@ print("RESULT:" + json.dumps(res))
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_cluster_equals_stacked():
   """The shard_map execution over 8 placeholder devices (one per
   component) must equal the stacked single-device execution — incl. a

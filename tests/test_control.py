@@ -1,0 +1,339 @@
+"""The latency-control plane (DESIGN.md §10): predictor laws (quantile
+monotone in its percentile and bracketed by its window; the high-quantile
+prediction brackets the EWMA on heavy-tailed samples), budget-allocation
+recirculation (conserves the total, never exceeds caps, dominates
+cap-and-drop), DeadlineBudgetPolicy dispatch + hedged gather modes,
+replica topology laws, the cluster backend's hedged accounting and
+draw-determinism, and engine xla-vs-interpret token parity through the
+refactored policy path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.control import (MODE_DROP, MODE_FULL, MODE_STAGE1,
+                           AffinePredictor, BudgetController,
+                           DeadlineBudgetPolicy, EwmaPredictor,
+                           QuantilePredictor, allocate_budget,
+                           make_predictor)
+from repro.dist.topology import ComponentTopology
+
+# -- predictors --------------------------------------------------------------
+
+
+def test_make_predictor_specs():
+  assert isinstance(make_predictor("affine"), AffinePredictor)
+  assert isinstance(make_predictor("ewma"), EwmaPredictor)
+  q = make_predictor("quantile:95")
+  assert isinstance(q, QuantilePredictor) and q.pct == 95.0
+  assert make_predictor("quantile").pct == 90.0
+  with pytest.raises(ValueError):
+    make_predictor("nope")
+  with pytest.raises(ValueError):
+    make_predictor("ewma:0.5")      # only quantile takes a :arg
+  with pytest.raises(ValueError):
+    make_predictor("affine:95")
+  with pytest.raises(ValueError):
+    QuantilePredictor(pct=120.0)
+
+
+def test_predictor_fallbacks_and_tables():
+  for p in (EwmaPredictor(prior_ms=7.0), QuantilePredictor(prior_ms=7.0)):
+    assert p.predict(4) == 7.0            # prior before any observation
+    p.observe(4, 10.0)
+    assert p.predict(4) == 10.0
+    assert p.predict(64) == 10.0          # nearest-bucket fallback
+    assert set(p.table()) == {4}
+  e = EwmaPredictor(beta=0.3)
+  e.observe(2, 10.0)
+  e.observe(2, 20.0)
+  assert e.predict(2) == pytest.approx(0.7 * 10.0 + 0.3 * 20.0)
+  a = AffinePredictor(base=2.0, slope=0.5)
+  a.observe(3, 3.5)
+  assert set(a.table()) == {3}
+  assert a.predict(0) == pytest.approx(a.table()[3] - 3 * a.slope)
+
+
+def test_quantile_monotone_in_window():
+  """The quantile prediction is monotone in the targeted percentile and
+  bracketed by the window's min/max; a sliding window forgets."""
+  rng = np.random.default_rng(0)
+  q = QuantilePredictor(pct=90.0, window=32)
+  xs = rng.lognormal(1.0, 1.0, 200)
+  for x in xs:
+    q.observe(1, float(x))
+  win = xs[-32:]
+  preds = [q.predict(1, pct=p) for p in np.linspace(0, 100, 21)]
+  assert all(b >= a for a, b in zip(preds, preds[1:]))    # monotone in pct
+  assert preds[0] == pytest.approx(win.min())
+  assert preds[-1] == pytest.approx(win.max())
+  assert win.min() <= q.predict(1) <= win.max()
+  # Sliding window: flooding with a new level moves the estimate there.
+  for _ in range(32):
+    q.observe(1, 100.0)
+  assert q.predict(1) == pytest.approx(100.0)
+
+
+def test_quantile_brackets_ewma_on_heavy_tails():
+  """On heavy-tailed samples the p90 quantile predictor sits above the
+  EWMA and the p10 below — the bracket that makes percentile-targeted
+  deadlines conservative exactly when step times straggle."""
+  rng = np.random.default_rng(1)
+  hi = QuantilePredictor(pct=90.0, window=256)
+  lo = QuantilePredictor(pct=10.0, window=256)
+  mid = EwmaPredictor(beta=0.1)
+  for _ in range(256):
+    x = float(rng.lognormal(0.0, 1.5))        # heavy tail
+    for p in (hi, lo, mid):
+      p.observe(2, x)
+  assert lo.predict(2) < mid.predict(2) < hi.predict(2)
+
+
+# -- allocation + recirculation ---------------------------------------------
+
+
+def test_recirculation_conserves_and_respects_caps():
+  rng = np.random.default_rng(2)
+  for it in range(60):
+    n = int(rng.integers(2, 9))
+    caps = rng.integers(1, 9, (1, n))
+    total = int(rng.integers(0, caps.sum() + 4))
+    mass = rng.uniform(0.0, 10.0, (1, n))
+    mass[0, rng.integers(0, n)] *= 10.0       # concentrate -> caps bind
+    if it % 3 == 1:
+      # Zero-mass components (f32 exp underflow on far-from-max scores)
+      # must still absorb recirculated residue — the capacity round.
+      mass[0, : rng.integers(1, n)] = 0.0
+    if it % 7 == 0:
+      mass[0, :] = 0.0                        # fully degenerate
+    out = np.asarray(allocate_budget(
+        jnp.asarray(mass), total, jnp.asarray(caps)))[0]
+    legacy = np.asarray(allocate_budget(
+        jnp.asarray(mass), total, jnp.asarray(caps),
+        recirculate=False))[0]
+    assert (out >= 0).all() and (out <= caps[0]).all()
+    # Conservation: recirculation spends the whole budget (up to capsum).
+    assert out.sum() == min(total, caps.sum()), (mass, caps, total, out)
+    # Dominance: never allocates less anywhere-summed than cap-and-drop.
+    assert out.sum() >= legacy.sum()
+    assert (legacy <= caps[0]).all() and legacy.sum() <= total
+  # The exact zero-mass non-conservation case the N-round loop got wrong.
+  out = np.asarray(allocate_budget(
+      jnp.asarray([[5.0, 0.0]]), 6, jnp.asarray([[1, 10]])))[0]
+  assert list(out) == [1, 5]
+
+
+def test_recirculation_monotone_in_mass():
+  rng = np.random.default_rng(3)
+  for _ in range(20):
+    mass = rng.uniform(0.1, 10.0, (1, 6))
+    caps = np.full((1, 6), 4)
+    out = np.asarray(allocate_budget(
+        jnp.asarray(mass), 12, jnp.asarray(caps)))[0]
+    order = np.argsort(mass[0])
+    assert (np.diff(out[order]) >= 0).all(), (mass, out)
+
+
+def test_recirculation_routes_stranded_budget():
+  # Hot component's cap binds at 2; the 5 clusters the legacy allocator
+  # strands land on the unsaturated components, ∝ mass.
+  mass = jnp.asarray([[10.0, 1.0, 1.0]])
+  caps = jnp.asarray([[2, 8, 8]])
+  out = np.asarray(allocate_budget(mass, 9, caps))[0]
+  legacy = np.asarray(allocate_budget(mass, 9, caps,
+                                      recirculate=False))[0]
+  assert list(legacy) == [2, 1, 1]            # cap-and-drop strands 5
+  assert out.sum() == 9 and out[0] == 2 and (out[1:] <= 8).all()
+
+
+# -- policy ------------------------------------------------------------------
+
+
+def test_bucketed_predictor_cold_start_ramps():
+  """A cold EWMA/quantile controller must not trust the nearest-bucket
+  fallback for untried budgets (it makes the biggest bucket look as
+  cheap as the smallest): budgets ramp one bucket past the largest
+  tried, however loose the deadline.  The affine model extrapolates
+  soundly and is exempt."""
+  buckets = (0, 2, 4, 8)
+  for pred in (EwmaPredictor(), QuantilePredictor()):
+    ctrl = BudgetController(pred, buckets=buckets, i_max_cap=8)
+    seq = []
+    for _ in range(5):
+      b = ctrl.budget_for(1e9)
+      seq.append(b)
+      ctrl.observe(b, 1.0)
+    assert seq == [0, 2, 4, 8, 8], seq
+  aff = BudgetController(AffinePredictor(base=1.0, slope=0.1),
+                         buckets=buckets, i_max_cap=8)
+  assert aff.budget_for(1e9) == 8        # extrapolating model: no ramp
+
+
+def test_budget_controller_generic_over_predictors():
+  buckets = (0, 1, 2, 4, 8, 16, 32)
+  for pred in (AffinePredictor(base=2.0, slope=1.0),
+               EwmaPredictor(), QuantilePredictor(pct=90.0)):
+    ctrl = BudgetController(pred, buckets=buckets, i_max_cap=32)
+    for b, lat in [(0, 2.0), (2, 4.0), (4, 6.0), (8, 10.0), (16, 18.0)]:
+      ctrl.observe(b, lat)
+    budgets = [ctrl.budget_for(d) for d in np.linspace(0.0, 40.0, 100)]
+    assert budgets == sorted(budgets)         # monotone in deadline
+    assert budgets[0] == buckets[0]
+    assert budgets[-1] >= 16
+
+
+def test_policy_dispatch_and_validation():
+  mk = lambda p: DeadlineBudgetPolicy(
+      policy=p, buckets=(0, 2, 4, 8), i_max_cap=8,
+      predictor=AffinePredictor(base=1.0, slope=1.0), fixed_budget=2)
+  assert mk("basic").budget_for(0.0) == 8
+  assert mk("partial").budget_for(1e9) == 8
+  assert mk("fixed").budget_for(0.0) == 2
+  at = mk("accuracytrader")
+  assert at.budget_for(100.0) == 8 and at.budget_for(0.0) == 0
+  assert at.budget_for(100.0, queue_delay=98.0) <= 2
+  with pytest.raises(ValueError):
+    mk("nope")
+
+
+def test_gather_modes_hedging():
+  t_pred = np.array([1.0, 50.0, 50.0, 2.0])
+  t_hedge = np.array([1.0, 3.0, 60.0, 2.0])
+  at = DeadlineBudgetPolicy(policy="accuracytrader", buckets=(0, 4),
+                            i_max_cap=4)
+  # No replicas: stragglers fall back to stage 1.
+  mode, hedged = at.gather_modes(t_pred, 10.0)
+  assert list(mode) == [MODE_FULL, MODE_STAGE1, MODE_STAGE1, MODE_FULL]
+  assert not hedged.any()
+  # Hedged: component 1's replica makes the deadline -> FULL; component
+  # 2 misses on both paths -> stage 1 still stands in.
+  mode, hedged = at.gather_modes(t_pred, 10.0, t_hedge)
+  assert list(mode) == [MODE_FULL, MODE_FULL, MODE_STAGE1, MODE_FULL]
+  assert list(hedged) == [False, True, True, False]
+  pe = DeadlineBudgetPolicy(policy="partial", buckets=(0, 4), i_max_cap=4)
+  mode, _ = pe.gather_modes(t_pred, 10.0, t_hedge)
+  assert list(mode) == [MODE_FULL, MODE_FULL, MODE_DROP, MODE_FULL]
+  # basic: always a full gather, but the hedge mask still prices reissues.
+  ba = DeadlineBudgetPolicy(policy="basic", buckets=(0, 4), i_max_cap=4)
+  mode, hedged = ba.gather_modes(t_pred, 10.0, t_hedge)
+  assert list(mode) == [MODE_FULL] * 4 and hedged.sum() == 2
+
+
+# -- replica topology --------------------------------------------------------
+
+
+def test_topology_replica_laws():
+  topo = ComponentTopology.plan(16, 4, skew=0.7, replicas=2)
+  assert topo.replicas == 2
+  owners = topo.replica_owners()
+  assert owners.shape == (4, 2)
+  assert (owners[:, 0] == np.arange(4)).all()       # col 0 = primary
+  assert (owners[:, 1] == (np.arange(4) + 1) % 4).all()
+  assert topo.replica_owner(3, 1) == 0              # ring wraps
+  for c in range(4):
+    assert topo.replica_owner(c, 1) != c            # never self-hedge
+  with pytest.raises(ValueError):
+    topo.replica_owner(0, 2)
+  with pytest.raises(ValueError):
+    ComponentTopology.plan(16, 4, replicas=5)
+
+
+# -- cluster backend: hedged accounting + determinism ------------------------
+
+
+@pytest.fixture(scope="module")
+def hedged_engine():
+  from repro.configs.registry import get_config
+  from repro.serve.cluster import ClusterConfig, ClusterStepBackend
+  from repro.serve.engine import EngineConfig, ServingEngine
+  cfg = get_config("llama3-8b", smoke=True)
+  backend = ClusterStepBackend(ClusterConfig(
+      n_components=2, replicas=2, seed=0, use_mesh=False,
+      interference=0.5, straggler_prob=0.0))
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=1, prompt_len=64, max_new_tokens=2, deadline_ms=60.0,
+      policy="accuracytrader", impl="xla"), backend=backend)
+  return eng, backend
+
+
+def test_plan_step_draws_are_deterministic(hedged_engine):
+  _, backend = hedged_engine
+  backend.reseed(7)
+  p1 = backend.plan_step(2, 5.0)
+  backend.reseed(7)
+  p2 = backend.plan_step(2, 5.0)
+  np.testing.assert_array_equal(p1.noise, p2.noise)
+  np.testing.assert_array_equal(p1.noise2, p2.noise2)
+  np.testing.assert_array_equal(p1.mode, p2.mode)
+  np.testing.assert_array_equal(p1.hedged, p2.hedged)
+  backend.reseed(8)
+  p3 = backend.plan_step(2, 5.0)
+  assert not np.array_equal(p1.noise, p3.noise)
+
+
+def test_hedged_account_takes_earlier_completion(hedged_engine):
+  """A hedged shard's completion is the min of the primary and the
+  replica's (own + reissued work) path — never later than unhedged."""
+  eng, backend = hedged_engine
+  backend.reseed(3)
+  # An impossible step deadline flags every component; with R=2 each is
+  # hedged and (accuracytrader) falls back to stage-1 only if BOTH paths
+  # are predicted to miss.
+  plan = backend.plan_step(1, 1e-6)
+  assert plan.hedged.all()
+  st = {"fe_cover": np.ones((1, 1, 2)),
+        "fe_mass": np.full((1, 1, 2), 0.5)}
+  info = backend.account(1, 10.0, plan, st, warming=True)
+  # Rebuild the unhedged completion from the same draws.
+  unhedged = backend.account(
+      1, 10.0,
+      type(plan)(fe_mode=plan.fe_mode, mode=plan.mode, noise=plan.noise,
+                 noise2=plan.noise2, hedged=np.zeros(2, bool),
+                 b_est=plan.b_est, deadline_ms=plan.deadline_ms),
+      st, warming=True)
+  full = plan.mode == MODE_FULL
+  assert (np.asarray(info["comp_ms"])[full]
+          <= np.asarray(unhedged["comp_ms"])[full] + 1e-12).all()
+  assert info["parallel_ms"] <= unhedged["parallel_ms"] + 1e-12
+  assert info["hedged"] == 2
+  # Physical consistency: a reissue queues behind the replica's own
+  # shard, whose completion is priced with the SAME noise[j] draw — the
+  # hedge can never finish before the machine it runs on is free.
+  u = backend._units(np.ones(2))
+  j = backend.replica_of
+  t_hedge = backend._hedge_time(10.0, u, u.sum(), plan.noise, plan.noise2)
+  own = 10.0 * u * plan.noise / u.sum()
+  assert (t_hedge >= own[j] - 1e-12).all()
+
+
+def test_hedged_engine_end_to_end(hedged_engine):
+  from repro.serve.engine import run_open_loop
+  eng, backend = hedged_engine
+  s = run_open_loop(eng, rate_per_s=30.0, duration_s=0.3, seed=5)
+  assert s["n"] > 0
+  for r in eng.completed:
+    assert 0.0 <= r.accuracy <= 1.0
+  assert backend.predictor.table()
+
+
+def test_engine_token_parity_through_policy_path():
+  """xla vs interpret through the refactored DeadlineBudgetPolicy path:
+  an unloaded accuracytrader run always refines everything (budget = M
+  regardless of measured wall times), so tokens must match exactly."""
+  from repro.configs.registry import get_config
+  from repro.serve.engine import EngineConfig, ServingEngine, make_requests
+  cfg = get_config("llama3-8b", smoke=True)
+  toks, budgets = {}, {}
+  for impl in ("xla", "interpret"):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=32, max_new_tokens=2,
+        policy="accuracytrader", deadline_ms=1e6, impl=impl,
+        predictor="quantile:90"))
+    reqs = make_requests([0.0, 0.0, 4.0], 32, 2, cfg.vocab, seed=11)
+    eng.run(reqs)
+    # Cold-start slow-start: budgets ramp up the buckets and reach M
+    # (the deadline is unbounded), identically on both impls.
+    assert max(b for r in reqs for b in r.budgets) == eng.M
+    budgets[impl] = [r.budgets for r in sorted(reqs, key=lambda r: r.rid)]
+    toks[impl] = [r.tokens for r in sorted(reqs, key=lambda r: r.rid)]
+  assert budgets["xla"] == budgets["interpret"]
+  assert toks["xla"] == toks["interpret"]

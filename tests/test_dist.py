@@ -111,6 +111,7 @@ MINI = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_mini_multipod_dryrun():
   env = dict(os.environ)
   env["PYTHONPATH"] = "src"

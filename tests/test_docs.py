@@ -38,8 +38,9 @@ def _design_refs():
 def test_design_has_sections():
   headings = _design_headings()
   assert headings, "DESIGN.md has no §N headings"
-  # The anchors the codebase has always cited.
-  assert {"3", "5"} <= headings
+  # The anchors the codebase has always cited, plus the control plane
+  # (§10: predictors, recirculation, hedged replica gather).
+  assert {"3", "5", "10"} <= headings
 
 
 def test_docstring_design_refs_resolve():

@@ -59,6 +59,7 @@ PROG = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_equals_reference():
   env = dict(os.environ)
   env["PYTHONPATH"] = "src"

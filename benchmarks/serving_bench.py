@@ -12,6 +12,12 @@ deadline-miss rate and the mean refinement budget.
       --json BENCH_serving.json          # committed baseline
   PYTHONPATH=src:. python -m benchmarks.serving_bench --smoke   # CI
 
+``admission_sweep`` (DESIGN.md §11) A/Bs the queue-aware predictive
+admission policy at the saturated top rate: FIFO-no-shed vs EDF with
+predictive shed-at-admission over two SLO classes on the identical
+trace — EDF+shed must beat FIFO on served p99 at equal-or-better
+goodput, and shed requests must burn zero prefill.
+
 CPU wall times are proxies for the TPU target (see ROADMAP's real-TPU
 validation item); the *relations* — AccuracyTrader holding accuracy loss
 near the stage-1 floor while partial execution collapses under load, at
@@ -91,6 +97,38 @@ def serving_sweep(rates: Sequence[float],
           f"queue_p99={s['queue_p99']:.1f}ms")
   out["admission_overlap"] = {"policy": ab_policy,
                               "rate": float(rates[-1]), **ab}
+  # Queue-aware predictive admission at the saturated top rate
+  # (DESIGN.md §11): two SLO classes on the identical trace — FIFO
+  # ordering with no shedding vs EDF ordering with predictive
+  # shed-at-admission.  At 3x saturation FIFO serves everything late;
+  # EDF+shed refuses the predicted-dead at admission (before prefill, so
+  # zero prefill is burned on them) and spends the reclaimed capacity on
+  # requests that can still make their deadline.
+  from repro.control import AdmissionConfig, SLOClass
+  classes = (SLOClass("interactive", deadline_ms),
+             SLOClass("batch", 5.0 * deadline_ms))
+  adm = {}
+  for name, acfg in (
+      ("fifo", AdmissionConfig(order="fifo", shed=False, classes=classes)),
+      ("edf_shed", AdmissionConfig(order="edf", shed=True,
+                                   classes=classes))):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=n_slots, prompt_len=prompt_len,
+        max_new_tokens=max_new_tokens, deadline_ms=deadline_ms,
+        policy=ab_policy, impl=impl, seed=seed, admission=acfg))
+    s = run_open_loop(eng, rate_per_s=float(rates[-1]),
+                      duration_s=duration_s,
+                      seed=seed * 1000 + len(rates) - 1,
+                      slo_of=lambda rid: classes[rid % 2].name)
+    adm[name] = {k: (v if isinstance(v, dict) else round(float(v), 3))
+                 for k, v in s.items()}
+    print(f"serving_admission_{name},{s['mean'] * 1e3:.1f},"
+          f"p99={s['p99']:.1f}ms shed={s['shed_pct']:.1f}% "
+          f"goodput={s['goodput_per_s']:.2f}/s "
+          f"prefills={s['prefills']:.0f} served={s['served_n']:.0f}")
+  out["admission_sweep"] = {
+      "policy": ab_policy, "rate": float(rates[-1]),
+      "classes": {c.name: c.deadline_ms for c in classes}, **adm}
   top = str(rates[-1])
   if {"partial", "accuracytrader"} <= set(out["sweep"]):
     at = out["sweep"]["accuracytrader"][top]["accuracy_loss_pct"]
@@ -101,6 +139,22 @@ def serving_sweep(rates: Sequence[float],
                     "accuracytrader_loss_pct": at,
                     "partial_loss_pct": pe,
                     "at_loses_less": bool(at < pe)}
+  c = out.setdefault("check", {"top_rate": float(rates[-1])})
+  c["admission_p99_fifo"] = adm["fifo"]["p99"]
+  c["admission_p99_edf"] = adm["edf_shed"]["p99"]
+  c["admission_goodput_fifo"] = adm["fifo"]["goodput_per_s"]
+  c["admission_goodput_edf"] = adm["edf_shed"]["goodput_per_s"]
+  c["admission_shed_pct"] = adm["edf_shed"]["shed_pct"]
+  c["edf_shed_beats_fifo"] = bool(
+      adm["edf_shed"]["p99"] <= adm["fifo"]["p99"]
+      and adm["edf_shed"]["goodput_per_s"]
+      >= adm["fifo"]["goodput_per_s"])
+  # Shed requests must cost zero prefill: every prefill dispatched this
+  # window belongs to a request that was actually served.
+  c["shed_burns_no_prefill"] = bool(
+      adm["edf_shed"]["prefills"] == adm["edf_shed"]["served_n"]
+      and adm["edf_shed"]["served_n"] + adm["edf_shed"]["shed_admission_n"]
+      == adm["fifo"]["served_n"] + adm["fifo"]["shed_admission_n"])
   return out
 
 
@@ -151,6 +205,17 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         f"saturated rate {c['top_rate']} (equal deadline): "
         f"at={c['accuracytrader_loss_pct']}% "
         f"partial={c['partial_loss_pct']}%")
+    assert c["shed_burns_no_prefill"], (
+        "admission-shed requests must never reach prefill: "
+        f"prefills={res['admission_sweep']['edf_shed']['prefills']} "
+        f"served={res['admission_sweep']['edf_shed']['served_n']}")
+    assert c["edf_shed_beats_fifo"], (
+        "EDF + predictive shed should beat FIFO on served p99 at equal-"
+        f"or-better goodput under saturation: edf p99="
+        f"{c['admission_p99_edf']}ms goodput="
+        f"{c['admission_goodput_edf']}/s vs fifo p99="
+        f"{c['admission_p99_fifo']}ms goodput="
+        f"{c['admission_goodput_fifo']}/s")
 
 
 if __name__ == "__main__":

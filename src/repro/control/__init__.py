@@ -1,18 +1,27 @@
-"""The latency-control plane (DESIGN.md §10): pluggable per-component
+"""The latency-control plane (DESIGN.md §10–§11): pluggable per-component
 latency predictors, the deadline->budget policy (with stranded-budget
-recirculation), and the hedged replica-gather decision — the ONE
-implementation shared by the serving engine, the scatter-gather cluster
-tier and the discrete-event simulator."""
+recirculation), the hedged replica-gather decision and its fault-aware
+recovery ladder, and the queue-aware predictive admission policy — the
+ONE implementation shared by the serving engine, the scatter-gather
+cluster tier and the discrete-event simulator."""
+from repro.control.admission import (AdmissionConfig, AdmissionPolicy,
+                                     SLOClass, TokenBucket,
+                                     parse_slo_classes)
 from repro.control.policy import (MODE_DROP, MODE_FULL, MODE_STAGE1,
                                   POLICIES, BudgetController,
                                   DeadlineBudgetPolicy, allocate_budget)
 from repro.control.predictors import (AffinePredictor, EwmaPredictor,
                                       QuantilePredictor, TailTracker,
                                       make_predictor, percentile)
+from repro.control.recovery import (RetryPolicy, plan_recovery,
+                                    realized_recovery)
 
 __all__ = [
     "MODE_DROP", "MODE_FULL", "MODE_STAGE1", "POLICIES",
     "BudgetController", "DeadlineBudgetPolicy", "allocate_budget",
     "AffinePredictor", "EwmaPredictor", "QuantilePredictor",
     "TailTracker", "make_predictor", "percentile",
+    "RetryPolicy", "plan_recovery", "realized_recovery",
+    "AdmissionConfig", "AdmissionPolicy", "SLOClass", "TokenBucket",
+    "parse_slo_classes",
 ]

@@ -58,7 +58,17 @@ def allocate_budget(mass, total: int, caps, recirculate: bool = True):
   holds even when unsaturated components carry zero mass (f32 exp
   underflow on far-from-max scores), and the unrolled work on the decode
   hot path is three fixed rounds, not N.  ``recirculate=False`` keeps
-  the legacy cap-and-drop behaviour (the step simply refines less)."""
+  the legacy cap-and-drop behaviour (the step simply refines less).
+
+  **All-saturated / all-faulted component sets** (every cap 0 — e.g. all
+  components degraded to STAGE1/DROP under mode-aware caps, DESIGN.md
+  §11): recirculation is three *fixed* rounds, so it terminates
+  unconditionally, and the final ``total >= capsum`` guard pins the
+  allocation to ``caps`` itself — conservation degrades gracefully to
+  ``sum(alloc) == sum(caps)`` (everything the components can still
+  absorb) instead of stranding or inventing budget.  Property-tested in
+  tests/test_control.py (all-zero caps, zero-cap subsets carrying all
+  the mass, ``total > capsum``, exact saturation)."""
   import jax.numpy as jnp  # noqa: PLC0415 — keep module import light
 
   caps = caps.astype(jnp.int32)
@@ -188,3 +198,16 @@ class DeadlineBudgetPolicy:
     else:                       # basic / fixed: always full gather
       mode = np.full(t_pred.shape, MODE_FULL)
     return mode.astype(np.int32), hedged
+
+  def recover_modes(self, t_pred, deadline_ms: float, t_retry=None,
+                    alive=None, retry_alive=None):
+    """Fault-aware generalization of :meth:`gather_modes` — the recovery
+    ladder FULL -> retry-on-replica -> STAGE1 -> DROP (DESIGN.md §11,
+    `repro.control.recovery`).  ``t_retry`` (K, N) carries the predicted
+    completion of each bounded backoff retry; ``alive``/``retry_alive``
+    the fault world's liveness.  Returns ``(mode, retries, eff)``; with
+    one zero-delay retry, all components alive, this is exactly the
+    legacy hedged ``gather_modes`` decision."""
+    from repro.control.recovery import plan_recovery  # noqa: PLC0415
+    return plan_recovery(self.policy, t_pred, deadline_ms, t_retry=t_retry,
+                         alive=alive, retry_alive=retry_alive)

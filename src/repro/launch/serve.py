@@ -44,24 +44,35 @@ def _engine_main(args):
   import json
 
   from repro.configs.registry import get_config
+  from repro.control import AdmissionConfig, parse_slo_classes
   from repro.serve.engine import EngineConfig, ServingEngine, run_open_loop
+  from repro.serve.resilience import parse_fault_spec
   from repro.serving.workload import CF_RATES, hour_rate
 
   cfg = get_config(args.arch, smoke=args.smoke)
   C = cfg.synopsis.cluster_size
   prompt_len = max(C, (args.prompt_len // C) * C)
   max_new = min(args.tokens, cfg.synopsis.recent)
+  faults = parse_fault_spec(args.faults)
   backend = None
   if args.cluster:
     from repro.serve.cluster import ClusterConfig, ClusterStepBackend
     backend = ClusterStepBackend(ClusterConfig(
         n_components=args.cluster, skew=args.skew, alloc=args.alloc,
         route=args.route, replicas=args.replicas,
-        predictor=args.predictor or "ewma"))
+        predictor=args.predictor or "ewma",
+        faults=faults, recovery=not args.no_recovery,
+        retries=args.retries))
+  admission = None
+  if args.admission != "off":
+    admission = AdmissionConfig(
+        order=args.admission, shed=not args.no_shed,
+        shed_margin=args.shed_margin,
+        classes=parse_slo_classes(args.slo_classes))
   eng = ServingEngine(cfg, EngineConfig(
       n_slots=args.n_slots, prompt_len=prompt_len, max_new_tokens=max_new,
       deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl,
-      predictor=args.predictor or "affine"),
+      predictor=args.predictor or "affine", admission=admission),
       backend=backend)
   print(f"[engine] impl={eng.impl!r} policy={args.policy} "
         f"slots={args.n_slots} prompt={prompt_len} tokens={max_new} "
@@ -80,17 +91,29 @@ def _engine_main(args):
     hours = [int(h) for h in args.hours.split(",")]
     points = [(f"hour{h:02d}", hour_rate(h) * args.rate_scale)
               for h in hours]
+  slo_of = None
+  if admission is not None and admission.classes:
+    names = [c.name for c in admission.classes]
+    slo_of = lambda rid: names[rid % len(names)]  # noqa: E731
   results = {}
   for name, rate in points:
     s = run_open_loop(eng, rate_per_s=rate, duration_s=args.duration,
-                      seed=0)
-    results[name] = {"rate_per_s": rate,
-                     **{k: round(float(v), 3) for k, v in s.items()}}
+                      seed=0, slo_of=slo_of)
+    results[name] = {
+        "rate_per_s": rate,
+        **{k: round(float(v), 3) for k, v in s.items()
+           if not isinstance(v, dict)},
+        **({"classes": s["classes"]} if "classes" in s else {})}
     print(f"[{name}] rate={rate:6.1f}/s n={s['n']:4.0f} "
           f"p50={s['p50']:7.1f}ms p99={s['p99']:7.1f}ms "
           f"p999={s['p999']:7.1f}ms loss={s['accuracy_loss_pct']:5.2f}% "
           f"miss={s['deadline_miss_pct']:5.1f}% "
-          f"budget={s['mean_budget']:.2f}")
+          f"budget={s['mean_budget']:.2f}"
+        + (f" shed={s['shed_pct']:.1f}% goodput={s['goodput_per_s']:.1f}/s"
+           if "shed_pct" in s else ""))
+    if backend is not None and getattr(backend, "fault_stats", None) \
+        and any(backend.fault_stats.values()):
+      print(f"  [faults] {backend.fault_stats}")
   out = {"trace": args.trace, "policy": args.policy, "results": results}
   if backend is not None:
     exp = backend.export()
@@ -156,6 +179,37 @@ def main():
                        "enables hedged reissue: a gather predicted to "
                        "straggle is reissued to the shard's replica and "
                        "the earlier completion counts — DESIGN.md §10)")
+  ap.add_argument("--faults", default=None, metavar="SPEC",
+                  help="inject component faults into the cluster tier "
+                       "(DESIGN.md §11): comma-separated key=value pairs, "
+                       "e.g. 'crash=1@8,stall_rate=0.02,seed=3' (crash "
+                       "entries are comp@step joined by +); default: none")
+  ap.add_argument("--no-recovery", action="store_true",
+                  help="disable the gather-side recovery ladder (retry to "
+                       "replica, stage-1 fallback): a dead component's "
+                       "shard stalls and is dropped — the baseline a "
+                       "resilient tier is compared against")
+  ap.add_argument("--retries", type=int, default=1, metavar="K",
+                  help="max gather-side retries per component per step "
+                       "(exponential backoff to ring replicas; 1 = the "
+                       "legacy single zero-delay hedge)")
+  ap.add_argument("--admission", default="off",
+                  choices=["off", "fifo", "edf", "slack"],
+                  help="queue-aware predictive admission for --engine "
+                       "(DESIGN.md §11): ready-queue ordering (edf = "
+                       "earliest deadline first, slack = least "
+                       "predicted slack) with predictive shedding; "
+                       "off = the legacy FIFO queue, no shedding")
+  ap.add_argument("--slo-classes", default=None, metavar="SPEC",
+                  help="SLO classes for --admission, "
+                       "'name:deadline_ms[@rate_per_s[/burst]]' joined "
+                       "by commas, e.g. 'interactive:80@60,batch:400'; "
+                       "requests round-robin across classes")
+  ap.add_argument("--shed-margin", type=float, default=1.0,
+                  help="shed a request at admission when its predicted "
+                       "completion exceeds deadline * margin")
+  ap.add_argument("--no-shed", action="store_true",
+                  help="keep the admission ordering but never shed")
   ap.add_argument("--predictor", default=None,
                   help="control-plane latency predictor: affine | ewma | "
                        "quantile[:pct] (quantile makes deadlines target "

@@ -67,12 +67,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.control import (MODE_DROP, MODE_FULL, MODE_STAGE1,
-                           allocate_budget, make_predictor)
+from repro.control import (MODE_DROP, MODE_FULL, MODE_STAGE1, RetryPolicy,
+                           allocate_budget, make_predictor,
+                           realized_recovery)
 from repro.dist import sharding as shd
 from repro.dist.topology import ComponentTopology, make_component_mesh
 from repro.kernels import ops
 from repro.serve import kv_cache as kvc
+from repro.serve.resilience import FaultPlan, FaultSpec
 from repro.serve.serve_step import make_serve_step
 
 NEG_INF = ops.NEG_INF
@@ -98,6 +100,19 @@ class ClusterConfig:
   straggler_scale: float = 8.0
   use_mesh: Optional[bool] = None   # None -> auto (mesh iff devices >= N)
   seed: int = 0
+  # -- resilience (DESIGN.md §11; all off by default: faults=None and
+  # retries=1 take the exact legacy plan/account path, bit-identical) ----
+  faults: Optional[FaultSpec] = None   # injected fault world (resilience.py)
+  recovery: bool = True        # False: no retry / no stage-1 fallback —
+                               # a dead shard stalls the gather and its
+                               # mass is dropped (the chaos baseline)
+  retries: int = 1             # bounded reissues per shard per step over
+                               # the replica ring (1 = legacy one-shot
+                               # hedge; needs replicas >= 2)
+  retry_backoff: float = 0.5   # retry r waits timeout*backoff*mult^(r-1)
+  retry_backoff_mult: float = 2.0
+  fault_stall_wait: float = 3.0   # no-recovery: gather waits this many
+                                  # step deadlines on a dead shard
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +188,8 @@ def _extras_partial(q, csl, self_kv, *, sm_scale, cap, impl):
 # ---------------------------------------------------------------------------
 
 def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
-                           mesh=None, recirculate: bool = True):
+                           mesh=None, recirculate: bool = True,
+                           mode_caps: bool = False):
   """Returns ``attention_fn(q, cache_sl, ...) -> (ctx, aux)`` over the
   component-partitioned cache layout (DESIGN.md §9):
 
@@ -184,6 +200,13 @@ def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
 
   ``aux`` carries per-layer telemetry: ``fe_cover`` (N,) mean refined
   clusters per component and ``fe_mass`` (N,) mean relevance-mass share.
+
+  ``mode_caps`` (resilience, DESIGN.md §11): a component gathered as
+  STAGE1/DROP never folds its refinement, so budget allocated to it is
+  wasted — with mode-aware caps its allocation cap is zeroed and
+  `allocate_budget`'s recirculation respends that budget on the live FULL
+  components instead.  Off by default: it changes the default path's
+  allocation, so only the resilient backend enables it.
   """
   N, Mp = topo.n_components, topo.m_max
 
@@ -193,17 +216,18 @@ def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
       return _cluster_sharded(
           q, csl, topo, alloc, mesh, i_max=i_max,
           cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
-          self_kv=self_kv, impl=impl, recirculate=recirculate)
+          self_kv=self_kv, impl=impl, recirculate=recirculate,
+          mode_caps=mode_caps)
     return _cluster_stacked(
         q, csl, topo, alloc, i_max=i_max, cluster_size=cluster_size,
         sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl,
-        recirculate=recirculate)
+        recirculate=recirculate, mode_caps=mode_caps)
 
   return attention
 
 
 def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
-                     cap, self_kv, impl, recirculate=True):
+                     cap, self_kv, impl, recirculate=True, mode_caps=False):
   """Single-device execution: the N components run as an unrolled loop
   over the component axis — identical math to the shard_map body."""
   k, v = csl["k"], csl["v"]
@@ -223,6 +247,8 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
   budgets = None
   if gsel is not None and alloc == "mass":
     caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)         # (B, Hkv, N)
+    if mode_caps:
+      caps = jnp.where(fe_mode[None, None, :] == MODE_FULL, caps, 0)
     budgets = allocate_budget(mass, i_max, caps, recirculate=recirculate)
 
   acc = None
@@ -253,7 +279,8 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
 
 
 def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
-                     sm_scale, cap, self_kv, impl, recirculate=True):
+                     sm_scale, cap, self_kv, impl, recirculate=True,
+                     mode_caps=False):
   """shard_map execution over the ``("component",)`` mesh: every device is
   one component; the score all-gather + replicated frontend logic is the
   aggregator, the partials all-gather + fold is the result composer."""
@@ -296,6 +323,10 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
         budgets = None
         if alloc == "mass":
           caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)    # (B, Hkv, N)
+          if mode_caps:
+            modes = jax.lax.all_gather(cache["fe_mode"], "component",
+                                       tiled=True)          # (N,)
+            caps = jnp.where(modes[None, None, :] == MODE_FULL, caps, 0)
           budgets = allocate_budget(mass, i_max, caps,
                                     recirculate=recirculate)
         sel = _select_local(sid, sc_l, gsel, budgets, alloc, i_max, Mp)
@@ -339,7 +370,11 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
 class _StepPlan:
   """One step's pre-dispatch gather decision + this step's noise draws
   (the same draws price the realized completion once the wall time is
-  measured, so decision and accounting see one consistent world)."""
+  measured, so decision and accounting see one consistent world).
+
+  The resilience fields (default None = legacy path, DESIGN.md §11)
+  carry this step's fault world and the recovery ladder's decisions so
+  ``account`` realizes exactly the retries ``plan_step`` dispatched."""
   fe_mode: jax.Array           # (N,) int32 device array fed into the step
   mode: np.ndarray             # same, host-side
   noise: np.ndarray            # per-component interference multipliers
@@ -347,6 +382,11 @@ class _StepPlan:
   hedged: np.ndarray           # (N,) bool: shard c's refinement reissued
   b_est: np.ndarray            # frontend's expected per-component budget
   deadline_ms: float
+  retries: Optional[np.ndarray] = None   # (N,) reissues dispatched
+  noise_r: Optional[np.ndarray] = None   # (K, N) per-retry draws
+  delays: Optional[np.ndarray] = None    # (K, N) backoff dispatch offsets
+  alive: Optional[np.ndarray] = None     # (N,) fault world: primary alive
+  slow: Optional[np.ndarray] = None      # (N,) fault slowdown multipliers
 
 
 class ClusterStepBackend:
@@ -388,9 +428,36 @@ class ClusterStepBackend:
           f"use_mesh=True but < {cc.n_components} devices; run under "
           f"XLA_FLAGS=--xla_force_host_platform_device_count="
           f"{cc.n_components}")
+    # Resilience (DESIGN.md §11): the fault world, the bounded-retry
+    # policy over the replica ring, and mode-aware allocation caps.  The
+    # default config (faults=None, recovery=True, retries=1) keeps
+    # ``resilient`` False and every fault/recovery branch below is
+    # skipped — the legacy plan/account path runs bit-identically.
+    if cc.retries < 0:
+      raise ValueError(f"retries {cc.retries} < 0")
+    self.faults = FaultPlan(cc.faults, cc.n_components)
+    self.resilient = self.faults.enabled or cc.retries != 1 \
+        or not cc.recovery
+    self.retry_policy = RetryPolicy(max_retries=cc.retries,
+                                    backoff_base=cc.retry_backoff,
+                                    backoff_mult=cc.retry_backoff_mult)
+    self.n_retries = cc.retries if cc.replicas > 1 and cc.recovery else 0
+    if self.n_retries:
+      # Retry r's holder: walk the shard's replica ring (retries beyond
+      # the materialized copies re-ask earlier holders after backoff).
+      self.retry_of = np.asarray(
+          [[self.topo.replica_owner(c, 1 + r % (cc.replicas - 1))
+            for c in range(cc.n_components)]
+           for r in range(self.n_retries)])
+    else:
+      self.retry_of = None
+    self.step_idx = 0
+    self.fault_stats = {"crash_steps": 0, "retries": 0,
+                        "stage1_fallbacks": 0, "dropped": 0}
     self.attention = make_cluster_attention(self.topo, alloc=cc.alloc,
                                             mesh=self.mesh,
-                                            recirculate=cc.recirculate)
+                                            recirculate=cc.recirculate,
+                                            mode_caps=self.resilient)
     # Per-component corpus share: the latency/accuracy attribution
     # weights.  Rotation mixes ownership across slots via shifts
     # 0..n_slots-1, so the attribution is the mean of exactly those
@@ -425,7 +492,14 @@ class ClusterStepBackend:
     windows cannot shift it, and BENCH_cluster.json regenerates with the
     same noise world every time."""
     self.rng = np.random.default_rng(
-        np.random.SeedSequence([int(self.ccfg.seed), int(seed) & 0x7fffffff]))
+        np.random.SeedSequence([int(self.ccfg.seed),
+                                int(seed) & 0x7fffffff]))
+    # The injected fault world and the step counter rewind with the draw
+    # stream: a window's faults are a pure function of (spec seed,
+    # window seed, step index), independent of warmup history.
+    self.step_idx = 0
+    if getattr(self, "faults", None) is not None:
+      self.faults.reseed(seed)
 
   # -- cache layout ----------------------------------------------------------
   def zeros_cache(self) -> Dict[str, jax.Array]:
@@ -542,6 +616,21 @@ class ClusterStepBackend:
     j = self.replica_of
     return wall * (u[j] * noise[j] + u * noise2[j]) / usum
 
+  def _retry_times(self, wall: float, u: np.ndarray, usum: float,
+                   noise: np.ndarray, noise_r: np.ndarray,
+                   slow: np.ndarray, delays: np.ndarray) -> np.ndarray:
+    """Completion of shard c's retry r on holder jr = retry_of[r, c]:
+    dispatched after the backoff delay, the holder first finishes its
+    own shard — u[jr] at its fault slowdown and the SAME noise draw that
+    prices jr's own completion this step — then streams c's stage-1 +
+    granted clusters again under the retry's independent draw.  The
+    K=1 / delay-0 / no-fault row is exactly ``_hedge_time``.  ONE
+    expression shared by plan_step and account (DESIGN.md §11)."""
+    jr = self.retry_of                                        # (K, N)
+    nr = np.take_along_axis(noise_r, jr, axis=1)              # (K, N)
+    return delays + wall * (u[jr] * slow[jr] * noise[jr]
+                            + u[None, :] * slow[jr] * nr) / usum
+
   def plan_step(self, budget: int, step_deadline_ms: float) -> _StepPlan:
     """Pre-dispatch gather decision: predict each component's completion
     (control-plane wall predictor for this bucket, attributed by rows
@@ -550,22 +639,56 @@ class ClusterStepBackend:
     queues behind the replica's own work and the earlier completion
     counts), and let the policy mark the components that still cannot
     make the step deadline STAGE1 (accuracytrader: the synopsis answer
-    stands in) or DROP (partial execution: the result is skipped)."""
+    stands in) or DROP (partial execution: the result is skipped).
+
+    With resilience on (injected faults and/or retries != 1) the single
+    hedge generalizes to the control plane's recovery ladder
+    (``recover_modes``, DESIGN.md §11): dead primaries and predicted
+    stragglers retry on the replica ring with exponential backoff, and a
+    shard with no live path inside the deadline terminally degrades to
+    its stage-1 synopsis (accuracytrader) or is dropped (partial)."""
     massf = self.mass_ewma / max(self.mass_ewma.sum(), 1e-30)
     b_est = float(budget) * massf
     u = self._units(b_est)
     usum = max(u.sum(), 1e-30)
     noise, noise2 = self._draw_noise(), self._draw_noise()
     wall = self.predictor.predict(budget)
-    t_pred = wall * (u / usum) * noise
-    t_hedged = None
-    if self.replica_of is not None:
-      t_hedged = self._hedge_time(wall, u, usum, noise, noise2)
-    mode, hedged = self.engine.controller.gather_modes(
-        t_pred, step_deadline_ms, t_hedged)
+    if not self.resilient:
+      t_pred = wall * (u / usum) * noise
+      t_hedged = None
+      if self.replica_of is not None:
+        t_hedged = self._hedge_time(wall, u, usum, noise, noise2)
+      mode, hedged = self.engine.controller.gather_modes(
+          t_pred, step_deadline_ms, t_hedged)
+      return _StepPlan(fe_mode=jnp.asarray(mode), mode=mode, noise=noise,
+                       noise2=noise2, hedged=hedged, b_est=b_est,
+                       deadline_ms=step_deadline_ms)
+    fstate = self.faults.at(self.step_idx)
+    alive, slow = fstate.alive, fstate.slow
+    t_base = wall * (u / usum)           # per-component predictor timeout
+    t_pred = t_base * noise * slow
+    k = self.n_retries
+    t_retry = retry_alive = delays = noise_r = None
+    if k:
+      noise_r = np.stack([noise2] + [self._draw_noise()
+                                     for _ in range(k - 1)])
+      delays = self.retry_policy.delays(t_base)               # (K, N)
+      t_retry = self._retry_times(wall, u, usum, noise, noise_r, slow,
+                                  delays)
+      retry_alive = alive[self.retry_of]
+    mode, retries, _ = self.engine.controller.recover_modes(
+        t_pred, step_deadline_ms, t_retry=t_retry, alive=alive,
+        retry_alive=retry_alive)
+    if not self.ccfg.recovery:
+      # Chaos baseline: no retries and no synopsis fallback — a dead
+      # shard's mass simply drops (its stall is priced in account).
+      mode = np.where(alive, mode, MODE_DROP).astype(np.int32)
+      retries = np.zeros_like(retries)
     return _StepPlan(fe_mode=jnp.asarray(mode), mode=mode, noise=noise,
-                     noise2=noise2, hedged=hedged, b_est=b_est,
-                     deadline_ms=step_deadline_ms)
+                     noise2=noise2, hedged=retries > 0, b_est=b_est,
+                     deadline_ms=step_deadline_ms, retries=retries,
+                     noise_r=noise_r, delays=delays, alive=alive,
+                     slow=slow)
 
   def account(self, budget: int, wall_ms: float, plan: _StepPlan, st,
               warming: bool = False) -> Dict[str, float]:
@@ -590,16 +713,41 @@ class ClusterStepBackend:
     f = u / usum
     u0 = self._units(np.zeros_like(cover))       # stage-1-only compute
     f0 = u0 / usum
-    t_real = wall_ms * f * plan.noise
-    if self.replica_of is not None and plan.hedged.any():
-      # A hedged shard completes at the earlier of the primary and its
-      # replica's reissue — same pricing as the plan-time decision.
-      t_hedge = self._hedge_time(wall_ms, u, usum, plan.noise,
-                                 plan.noise2)
-      t_real = np.where(plan.hedged, np.minimum(t_real, t_hedge), t_real)
+    if plan.alive is None:                       # legacy (non-resilient)
+      t_real = wall_ms * f * plan.noise
+      if self.replica_of is not None and plan.hedged.any():
+        # A hedged shard completes at the earlier of the primary and its
+        # replica's reissue — same pricing as the plan-time decision.
+        t_hedge = self._hedge_time(wall_ms, u, usum, plan.noise,
+                                   plan.noise2)
+        t_real = np.where(plan.hedged, np.minimum(t_real, t_hedge),
+                          t_real)
+      done_full = t_real
+    else:
+      # Resilient realization: the SAME fault world, draws and backoff
+      # delays that made the plan-time decision price the completions —
+      # retry r participates only where the plan dispatched it.
+      slow = plan.slow
+      t_real = wall_ms * f * plan.noise * slow
+      t_retry_real = retry_alive = None
+      if plan.noise_r is not None:
+        t_retry_real = self._retry_times(wall_ms, u, usum, plan.noise,
+                                         plan.noise_r, slow, plan.delays)
+        retry_alive = plan.alive[self.retry_of]
+      done_full = realized_recovery(t_real, t_retry_real, plan.retries,
+                                    plan.alive, retry_alive)
     t_stage1 = wall_ms * f0 * plan.noise
-    done = np.where(full, t_real,
+    done = np.where(full, done_full,
                     np.where(plan.mode == MODE_STAGE1, t_stage1, 0.0))
+    if plan.alive is not None and not self.ccfg.recovery \
+        and not plan.alive.all():
+      # No-recovery baseline: the frontend has no ladder, so it WAITS on
+      # a dead shard until a hard timeout (fault_stall_wait step
+      # deadlines) before giving up on its mass — the gather both stalls
+      # and drops.
+      wait = plan.deadline_ms if np.isfinite(plan.deadline_ms) else wall_ms
+      done = np.where(plan.alive, done,
+                      self.ccfg.fault_stall_wait * max(wait, wall_ms))
     valid = np.maximum(self.comp_share * self.M, 1.0)
     frac = np.minimum(cover / valid, 1.0)
     acc_c = np.where(
@@ -607,9 +755,22 @@ class ClusterStepBackend:
         np.where(plan.mode == MODE_STAGE1, self.accuracy_fn(0.0), 0.0))
     step_acc = float(np.sum(self.comp_share * acc_c))
     parallel_ms = float(max(done.max(), 1e-3))
+    sharesum = max(self.comp_share.sum(), 1e-30)
+    drop_share = float(np.sum(np.where(plan.mode == MODE_DROP,
+                                       self.comp_share, 0.0)) / sharesum)
+    retried = int(plan.retries.sum()) if plan.retries is not None \
+        else int(plan.hedged.sum())
+    if plan.alive is not None and not warming:
+      self.fault_stats["crash_steps"] += int(not plan.alive.all())
+      self.fault_stats["retries"] += retried
+      self.fault_stats["stage1_fallbacks"] += int(np.sum(
+          (plan.mode == MODE_STAGE1) & ~plan.alive))
+      self.fault_stats["dropped"] += int(np.sum(plan.mode == MODE_DROP))
+    self.step_idx += 1
     return {"parallel_ms": parallel_ms, "step_acc": step_acc,
             "wall_ms": wall_ms, "gathered": int(full.sum()),
-            "hedged": int(plan.hedged.sum()), "comp_ms": done}
+            "hedged": int(plan.hedged.sum()), "comp_ms": done,
+            "drop_share": drop_share, "retried": retried}
 
   def export(self, full_items: int = 100) -> "ClusterMeasuredExport":
     return ClusterMeasuredExport(self, full_items=full_items)

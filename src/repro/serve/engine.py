@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.control import (POLICIES, DeadlineBudgetPolicy, TailTracker,
+from repro.control import (POLICIES, AdmissionConfig, AdmissionPolicy,
+                           DeadlineBudgetPolicy, TailTracker,
                            make_predictor)
 from repro.models import common as cm
 from repro.models import transformer as tf
@@ -85,6 +86,11 @@ class EngineConfig:
   # intervening block, so the runtime's async dispatch queue pipelines
   # them (ROADMAP: serialized admission was the saturation point).
   overlap_admission: bool = True
+  # Queue-aware predictive admission (DESIGN.md §11,
+  # `repro.control.admission`): EDF/least-slack ordering, predictive
+  # shed-at-admission and SLO classes.  None = the legacy FIFO queue,
+  # bit-identical to the pre-resilience engine.
+  admission: Optional[AdmissionConfig] = None
 
 
 @dataclasses.dataclass
@@ -105,6 +111,13 @@ class EngineRequest:
   step_acc: List[float] = dataclasses.field(default_factory=list)
   accuracy: float = 0.0
   dropped: bool = False            # shed mid-flight (partial execution)
+  # -- resilience (DESIGN.md §11) ------------------------------------------
+  slo: str = "default"             # SLO class name (admission policy)
+  deadline_ms: Optional[float] = None   # per-request deadline override
+  shed_admission: bool = False     # refused at admission (zero prefill)
+  # Per-step dropped shard-mass fraction from a cluster backend (0 on
+  # every step = the request's full corpus answered: available).
+  step_drop: List[float] = dataclasses.field(default_factory=list)
 
   @property
   def latency_ms(self) -> float:
@@ -164,14 +177,26 @@ class ServingEngine:
     self.buckets = buckets
     if ecfg.policy == "fixed" and ecfg.fixed_budget not in buckets:
       self.buckets = tuple(sorted(set(buckets) | {ecfg.fixed_budget}))
-    self.controller = self._make_policy()
     self.accuracy_fn = accuracy_fn or _default_concentration
     # Optional scatter-gather step backend (repro.serve.cluster,
     # DESIGN.md §9): owns the component cache layout, the per-step gather
-    # plan and the measured per-component latency attribution.
+    # plan and the measured per-component latency attribution.  Bound
+    # BEFORE the policy is built: the budget controller shares the
+    # backend's wall predictor (one predictor, one truth — see
+    # _make_policy).
     self.backend = backend
     if backend is not None:
       backend.bind(self)
+    self.controller = self._make_policy()
+    # Queue-aware predictive admission (DESIGN.md §11): deadline
+    # resolution, EDF/least-slack ordering, token buckets and
+    # shed-at-admission.  None = the legacy FIFO path.
+    self.admission = None
+    if ecfg.admission is not None:
+      self.admission = AdmissionPolicy(ecfg.admission, ecfg.deadline_ms,
+                                       self._demand_ms)
+    self._admit_ms_ewma = 0.0
+    self.prefills = 0
 
     if params is None:
       params, _ = cm.split(tf.init_model(jax.random.PRNGKey(ecfg.seed), cfg))
@@ -198,14 +223,28 @@ class ServingEngine:
 
   def _make_policy(self) -> DeadlineBudgetPolicy:
     """The engine's slice of the control plane: one DeadlineBudgetPolicy
-    whose predictor is calibrated by measured step wall times."""
+    whose predictor is calibrated by measured step wall times.
+
+    With a cluster backend the policy REUSES the backend's wall
+    predictor instead of fitting its own affine model (one predictor,
+    one truth): the backend observes the raw program wall per bucket in
+    ``account`` — a conservative upper bound on the parallel completion
+    the clock advances by — and the budget controller's slow-start
+    handles its non-extrapolating bucket table.  The engine then never
+    observes the predictor itself (see ``_decode_step``): one
+    observation stream, no double counting."""
     e = self.ecfg
-    kw = {"base": 2.0, "slope": 0.5, "alpha": 0.1} \
-        if e.predictor.startswith("affine") else {}
+    shared = getattr(self.backend, "predictor", None) \
+        if self.backend is not None else None
+    if shared is not None:
+      pred = shared
+    else:
+      kw = {"base": 2.0, "slope": 0.5, "alpha": 0.1} \
+          if e.predictor.startswith("affine") else {}
+      pred = make_predictor(e.predictor, **kw)
     return DeadlineBudgetPolicy(
         policy=e.policy, buckets=self.buckets, i_max_cap=self.M,
-        predictor=make_predictor(e.predictor, **kw),
-        fixed_budget=e.fixed_budget)
+        predictor=pred, fixed_budget=e.fixed_budget)
 
   # -- state ----------------------------------------------------------------
   def reset(self, reset_controller: bool = False) -> None:
@@ -224,6 +263,9 @@ class ServingEngine:
     self.completed: List[EngineRequest] = []
     self.events: List[Tuple[str, int, int, float]] = []
     self.step_log: List[Tuple[int, float, int]] = []   # (budget, ms, active)
+    self.prefills = 0
+    if getattr(self, "admission", None) is not None:
+      self.admission.reset()
     if reset_controller:
       self.controller = self._make_policy()
 
@@ -293,6 +335,7 @@ class ServingEngine:
     WITHOUT blocking; returns (first-token array, written cache).  Both
     the serial and the overlapped admission paths go through here."""
     prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+    self.prefills += 1
     logits, cache1 = self._prefill(self.params, prompt)
     syn = self._build(cache1)
     if self._warming:
@@ -308,7 +351,13 @@ class ServingEngine:
     first, self.cache = self._dispatch_admission(req, slot, self.cache)
     self.tok = self.tok.at[slot, 0].set(first[0])
     jax.block_until_ready((self.cache, self.tok))
-    self.now_ms += (time.perf_counter() - t0) * 1e3
+    dt = (time.perf_counter() - t0) * 1e3
+    self.now_ms += dt
+    # Admission-cost EWMA: the fixed part of the demand estimate the
+    # predictive shed uses (_demand_ms).
+    if not self._warming:
+      self._admit_ms_ewma = dt if self._admit_ms_ewma == 0.0 \
+          else 0.7 * self._admit_ms_ewma + 0.3 * dt
     req.tokens.append(int(first[0]))
     self.slots[slot] = _Slot(req, req.max_new_tokens)
     self.events.append(("admit", req.rid, slot, self.now_ms))
@@ -323,10 +372,32 @@ class ServingEngine:
     remaining = 0.0
     if e.policy == "accuracytrader":
       remaining = min(
-          [self.slots[i].req.arrival_ms + e.deadline_ms - self.now_ms
+          [self._abs_deadline(self.slots[i].req) - self.now_ms
            for i in active] +
-          [r.arrival_ms + e.deadline_ms - self.now_ms for r in extra])
+          [self._abs_deadline(r) - self.now_ms for r in extra])
     return self.controller.budget_for(max(remaining, 0.0))
+
+  def _deadline_of(self, req: EngineRequest) -> float:
+    """Per-request deadline: explicit override > SLO class (admission
+    policy) > the engine default — one resolution rule everywhere
+    (budget, step deadline, partial shed, summary accounting)."""
+    if self.admission is not None:
+      return self.admission.deadline_for(req)
+    if req.deadline_ms is not None:
+      return float(req.deadline_ms)
+    return self.ecfg.deadline_ms
+
+  def _abs_deadline(self, req: EngineRequest) -> float:
+    return req.arrival_ms + self._deadline_of(req)
+
+  def _demand_ms(self, req: EngineRequest) -> float:
+    """Lower-bound service-demand estimate at arrival (the predictive
+    shed's input): the admission-cost EWMA plus one smallest-bucket
+    (stage-1-only) predicted step wall per decode token.  A lower bound
+    by construction — real steps only refine MORE — so at low load no
+    feasible request is ever shed (tests/test_resilience.py)."""
+    floor = self.controller.predictor.predict(self.buckets[0])
+    return self._admit_ms_ewma + req.max_new_tokens * floor
 
   def _retire(self, slot: int) -> None:
     s = self.slots[slot]
@@ -342,7 +413,7 @@ class ServingEngine:
     elif e.policy == "partial":
       # Partial execution: a result missing at the deadline is skipped —
       # its entire accuracy contribution is lost (paper §5).
-      if req.dropped or req.latency_ms > e.deadline_ms:
+      if req.dropped or req.latency_ms > self._deadline_of(req):
         req.accuracy = 0.0
       else:
         req.accuracy = stepwise if stepwise is not None else 1.0
@@ -361,8 +432,7 @@ class ServingEngine:
     """Per-step deadline slice for the cluster frontend's gather decision:
     the most urgent resident request's remaining time, spread over its
     remaining decode steps."""
-    e = self.ecfg
-    vals = [max(self.slots[i].req.arrival_ms + e.deadline_ms - self.now_ms,
+    vals = [max(self._abs_deadline(self.slots[i].req) - self.now_ms,
                 0.0) / max(self.slots[i].remaining, 1) for i in active]
     return min(vals) if vals else float("inf")
 
@@ -407,14 +477,19 @@ class ServingEngine:
     jax.block_until_ready((self.cache, self.tok))
     dt = (time.perf_counter() - t0) * 1e3
     step_acc = None
+    step_drop = None
     if plan is not None:
       info = self.backend.account(budget, dt, plan, st,
                                   warming=self._warming)
       dt = info["parallel_ms"]       # the frontend-observed completion
       step_acc = info["step_acc"]
+      step_drop = info.get("drop_share")
     self.now_ms += dt
+    # With a cluster backend the shared predictor was already calibrated
+    # inside account (one predictor, one observation stream); the engine
+    # only observes its own predictor on the single-component path.
     if self.ecfg.policy == "accuracytrader" and not self._warming \
-        and write_cache is None:
+        and write_cache is None and self.backend is None:
       self.controller.observe(budget, dt)
     self.step_log.append((budget, dt, len(active)))
     toks = np.asarray(new_tok)
@@ -424,6 +499,8 @@ class ServingEngine:
       s.req.budgets.append(budget)
       if step_acc is not None:
         s.req.step_acc.append(step_acc)
+      if step_drop is not None:
+        s.req.step_drop.append(step_drop)
       s.remaining -= 1
       if s.remaining <= 0:
         self._retire(i)
@@ -437,14 +514,15 @@ class ServingEngine:
     queueing delay under load is real, not modelled."""
     pending = collections.deque(
         sorted(requests, key=lambda r: (r.arrival_ms, r.rid)))
+    if self.admission is not None:
+      return self._run_admission(pending)
     while pending or any(s is not None for s in self.slots):
       if self.ecfg.policy == "partial":
         # Partial execution sheds unfinished work AT the deadline: the
         # result is skipped (accuracy 0 via _retire) and the lane frees
         # for the queue — a doomed request must not keep burning steps.
         for i, s in enumerate(self.slots):
-          if s is not None and self.now_ms >= (
-              s.req.arrival_ms + self.ecfg.deadline_ms):
+          if s is not None and self.now_ms >= self._abs_deadline(s.req):
             self._retire(i)
       # Every arrived request that fits a free lane is admitted this
       # iteration — overlapped with the residents' decode step when
@@ -474,6 +552,71 @@ class ServingEngine:
       self._decode_step(active)
     return self.summary()
 
+  def _shed(self, req: EngineRequest) -> None:
+    """Refuse a request at admission (predicted dead, DESIGN.md §11):
+    zero prefill, zero decode steps, the lane goes to a request that can
+    still make its deadline.  Scores 0 accuracy and counts as dropped —
+    the same book-keeping as a mid-flight partial-execution shed, minus
+    all the burned work."""
+    req.finish_ms = max(self.now_ms, req.arrival_ms)
+    req.dropped = True
+    req.shed_admission = True
+    req.accuracy = 0.0
+    self.completed.append(req)
+    self.events.append(("shed", req.rid, -1, self.now_ms))
+
+  def _run_admission(self, pending) -> Dict[str, float]:
+    """The ``run`` loop under an :class:`AdmissionPolicy` (DESIGN.md
+    §11): arrivals land in a *ready* queue; each iteration rate-gates
+    them (token bucket per SLO class — over-rate requests WAIT, they are
+    not shed), sheds the predicted-dead (now + estimated demand already
+    past the deadline), orders the survivors by the configured key
+    (EDF / least-slack / FIFO) and admits into free lanes.  Everything
+    downstream (decode, retire, overlap) is the standard path."""
+    ready: List[EngineRequest] = []
+    while pending or ready or any(s is not None for s in self.slots):
+      if self.ecfg.policy == "partial":
+        for i, s in enumerate(self.slots):
+          if s is not None and self.now_ms >= self._abs_deadline(s.req):
+            self._retire(i)
+      while pending and pending[0].arrival_ms <= self.now_ms:
+        ready.append(pending.popleft())
+      kept, gated = [], []
+      for r in ready:
+        if not self.admission.rate_admit(r, self.now_ms):
+          gated.append(r)           # waits for its class's token bucket
+        elif self.admission.predicted_dead(r, self.now_ms):
+          self._shed(r)
+        else:
+          kept.append(r)
+      kept.sort(key=lambda r: self.admission.key(r, self.now_ms))
+      free = [i for i, s in enumerate(self.slots) if s is None]
+      admissions = []
+      while free and kept:
+        admissions.append((kept.pop(0), free.pop(0)))
+      ready = kept + gated
+      active = [i for i, s in enumerate(self.slots) if s is not None]
+      if admissions and active and self.ecfg.overlap_admission \
+          and self.backend is None:
+        self._admit_overlapped(admissions, active)
+        continue
+      for req, slot in admissions:
+        self._admit(req, slot)
+      active = [i for i, s in enumerate(self.slots) if s is not None]
+      if not active:
+        if ready:
+          # Only rate-gated requests remain resident (every eligible one
+          # was admitted — all lanes were free): advance until their
+          # token bucket refills (1 ms quanta keep this deterministic).
+          self.now_ms += 1.0
+        elif pending:
+          self.now_ms = max(self.now_ms, pending[0].arrival_ms)
+        else:
+          break
+        continue
+      self._decode_step(active)
+    return self.summary()
+
   def _admit_overlapped(self, admissions, active: Sequence[int]) -> None:
     """Admission/decode overlap (ROADMAP Perf): dispatch the admitted
     requests' prefill + synopsis build + slot writes WITHOUT blocking,
@@ -497,28 +640,58 @@ class ServingEngine:
       self.slots[slot] = _Slot(req, req.max_new_tokens)
       self.events.append(("admit", req.rid, slot, self.now_ms))
 
-  def summary(self) -> Dict[str, float]:
+  def _class_stats(self, reqs: Sequence[EngineRequest]) -> Dict[str, float]:
+    """Accounting over one request subset; latency percentiles and
+    accuracy cover *served* requests only (an admission-shed request has
+    no service latency — it was never served), while shed/goodput cover
+    the whole subset, so per-class stats sum to the aggregate."""
+    served = [r for r in reqs if not r.shed_admission]
     tracker = TailTracker()
-    for r in self.completed:
+    for r in served:
       tracker.observe(r.latency_ms)
     s = tracker.summary()
-    accs = [r.accuracy for r in self.completed]
+    accs = [r.accuracy for r in served]
     s["accuracy_loss_pct"] = 100.0 * (1.0 - float(np.mean(accs))) \
         if accs else 0.0
     s["deadline_miss_pct"] = 100.0 * float(np.mean(
-        [r.latency_ms > self.ecfg.deadline_ms for r in self.completed])) \
-        if self.completed else 0.0
+        [r.latency_ms > self._deadline_of(r) for r in served])) \
+        if served else 0.0
+    s["queue_p99"] = float(np.percentile(
+        [r.queue_ms for r in served], 99)) if served else 0.0
+    s["shed_pct"] = 100.0 * float(np.mean(
+        [r.dropped for r in reqs])) if reqs else 0.0
+    s["shed_admission_n"] = sum(r.shed_admission for r in reqs)
+    s["served_n"] = len(served)
+    # Goodput: requests actually answered within their own deadline.
+    s["goodput_n"] = sum(1 for r in served if not r.dropped
+                         and r.latency_ms <= self._deadline_of(r))
+    # Availability: a served request whose every step answered its full
+    # shard mass (no component dropped — stage-1 fallback still counts
+    # as answered; DESIGN.md §11).
+    s["availability_pct"] = 100.0 * float(np.mean(
+        [not r.dropped and all(d <= 0.0 for d in r.step_drop)
+         for r in served])) if served else 100.0
+    for p in (10, 50, 90):
+      s[f"acc_p{p}"] = float(np.percentile(accs, p)) if accs else 0.0
+    return s
+
+  def summary(self) -> Dict[str, float]:
+    s = self._class_stats(self.completed)
     s["mean_budget"] = float(np.mean([b for b, _, _ in self.step_log])) \
         if self.step_log else 0.0
     s["steps"] = len(self.step_log)
-    s["queue_p99"] = float(np.percentile(
-        [r.queue_ms for r in self.completed], 99)) if self.completed else 0.0
-    # Shed rate + per-request accuracy percentiles (BENCH_serving.json
-    # reproducibility: the distribution, not just the mean, is recorded).
-    s["shed_pct"] = 100.0 * float(np.mean(
-        [r.dropped for r in self.completed])) if self.completed else 0.0
-    for p in (10, 50, 90):
-      s[f"acc_p{p}"] = float(np.percentile(accs, p)) if accs else 0.0
+    s["prefills"] = self.prefills
+    s["goodput_per_s"] = s["goodput_n"] / (self.now_ms / 1e3) \
+        if self.now_ms > 0 else 0.0
+    # Per-SLO-class breakdown (DESIGN.md §11): every completed request
+    # belongs to exactly one class, so the per-class counts partition the
+    # aggregate (tests/test_resilience.py asserts the sums).
+    names = sorted({r.slo for r in self.completed})
+    if names != ["default"] and names:
+      s["classes"] = {
+          name: self._class_stats([r for r in self.completed
+                                   if r.slo == name])
+          for name in names}
     return s
 
   # -- probes ---------------------------------------------------------------
@@ -585,14 +758,17 @@ def make_requests(arrivals_ms: Sequence[float], prompt_len: int,
 
 
 def run_open_loop(engine: ServingEngine, rate_per_s: float,
-                  duration_s: float, seed: int = 0) -> Dict[str, float]:
+                  duration_s: float, seed: int = 0,
+                  slo_of=None) -> Dict[str, float]:
   """One measurement window of Poisson arrivals at ``rate_per_s`` — the
   engine-side mirror of ``ScatterGatherService.run_open_loop``.
 
   The window is draw-deterministic: the backend's interference/straggler
-  RNG (if any) is reseeded from ``seed``, so a re-run reproduces the same
-  noise sequence regardless of warmup or prior-window history (only the
-  measured wall times themselves vary run to run)."""
+  RNG and injected fault plan (if any) are reseeded from ``seed``, so a
+  re-run reproduces the same noise and fault sequence regardless of
+  warmup or prior-window history (only the measured wall times
+  themselves vary run to run).  ``slo_of(rid) -> str`` optionally
+  assigns each request an SLO class (DESIGN.md §11)."""
   engine.reset()
   if engine.backend is not None and hasattr(engine.backend, "reseed"):
     engine.backend.reseed(seed)
@@ -600,4 +776,7 @@ def run_open_loop(engine: ServingEngine, rate_per_s: float,
   reqs = make_requests(arrivals, engine.ecfg.prompt_len,
                        engine.ecfg.max_new_tokens, engine.cfg.vocab,
                        seed=seed)
+  if slo_of is not None:
+    for r in reqs:
+      r.slo = slo_of(r.rid)
   return engine.run(reqs)

@@ -58,30 +58,33 @@ class ComponentModel:
       return float(arr[0])
     return float(arr[self.comp_id % arr.size])
 
-  def service_time(self, items: int,
-                   base_ms: Optional[float] = None) -> float:
+  def service_time(self, items: int, base_ms: Optional[float] = None,
+                   scale: float = 1.0) -> float:
     """Service time for ``items``; ``base_ms`` replaces the modelled
     ``base + per_item * items`` with an externally *measured* duration
     (the engine's per-bucket step latency — a scalar, or a per-component
     vector indexed by ``comp_id``) — interference noise and stragglers
     still apply on top (they model the co-located jobs, which the
-    single-host measurement cannot see)."""
+    single-host measurement cannot see).  ``scale`` multiplies the
+    pre-noise time — the injected fault slowdown (DESIGN.md §11)."""
     base = self._resolve_base(base_ms)
     t = base if base is not None \
         else self.base_ms + self.per_item_ms * items
-    t *= self.work_scale
+    t *= self.work_scale * scale
     t *= float(self.rng.lognormal(0.0, self.interference))
     if self.rng.random() < self.straggler_prob:
       t *= self.straggler_scale
     return t
 
   def submit(self, arrival_ms: float, items: int,
-             service_ms=None) -> float:
+             service_ms=None, scale: float = 1.0) -> float:
     """FIFO queue: returns completion time.  ``service_ms`` optionally
     pins the pre-noise service duration to a measured value (scalar or
-    per-component vector, see ``service_time``)."""
+    per-component vector, see ``service_time``); ``scale`` injects a
+    fault slowdown on this submission."""
     start = max(arrival_ms, self.busy_until)
-    done = start + self.service_time(items, base_ms=service_ms)
+    done = start + self.service_time(items, base_ms=service_ms,
+                                     scale=scale)
     self.busy_until = done
     return done
 

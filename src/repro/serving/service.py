@@ -68,6 +68,12 @@ class ServiceConfig:
   # most accuracy mass.  0 = the paper's uniform components.
   skew: float = 0.0
   seed: int = 0
+  # -- resilience round-trip (DESIGN.md §11; all off by default) ---------
+  faults: Optional["object"] = None   # repro.serve.resilience.FaultSpec
+  replicas: int = 1            # >= 2: a dead component's shard is served
+                               # by its ring replica (queueing behind it)
+  shed: bool = False           # predictive shed-at-admission
+  shed_margin: float = 1.0     # shed when backlog+service > ddl*margin
 
 
 class ScatterGatherService:
@@ -109,6 +115,13 @@ class ScatterGatherService:
     # carry most of the mass).
     self.accuracy_fn = accuracy_fn or _default_concentration
     self.rng = np.random.default_rng(cfg.seed)
+    # Resilience round-trip (DESIGN.md §11): the same seed-deterministic
+    # fault world the cluster tier injects, keyed here by request id.
+    from repro.serve.resilience import FaultPlan  # noqa: PLC0415
+    self.fault_plan = FaultPlan(cfg.faults, cfg.n_components)
+    self.shed_n = 0
+    self.total_n = 0
+    self.avail_tracker: List[float] = []
 
   # -- one request -----------------------------------------------------------
   def submit(self, req: Request) -> Dict[str, float]:
@@ -116,10 +129,21 @@ class ScatterGatherService:
     tech = cfg.technique
     done_times = []
     processed_frac = []
+    self.total_n += 1
+    fstate = self.fault_plan.at(req.rid)
 
+    queue_delay = float(np.mean([
+        max(0.0, c.busy_until - req.arrival_ms) for c in self.components]))
+    if cfg.shed:
+      # Predictive shed-at-admission (DESIGN.md §11): the mean backlog
+      # plus the predictor's stage-1 floor already misses the deadline —
+      # refuse before any component burns work on a dead request.
+      demand = queue_delay + self.controller.model.predict(0)
+      if demand > cfg.deadline_ms * cfg.shed_margin:
+        self.shed_n += 1
+        self.acc_tracker.append(0.0)
+        return {"latency_ms": 0.0, "accuracy": 0.0, "shed": True}
     if tech == "accuracytrader":
-      queue_delay = float(np.mean([
-          max(0.0, c.busy_until - req.arrival_ms) for c in self.components]))
       budget = self.controller.budget_for(cfg.deadline_ms, queue_delay)
       measured = None
       if self.step_backend is not None:
@@ -129,6 +153,7 @@ class ScatterGatherService:
         measured = (self.step_backend.step_ms_per_component(budget)
                     if self.per_component_ms
                     else self.step_backend.step_ms(budget))
+    lost_mass = 0
     for i, comp in enumerate(self.components):
       if tech in ("basic", "partial", "reissue"):
         items = cfg.full_items
@@ -136,7 +161,31 @@ class ScatterGatherService:
       else:
         items = budget
         service_ms = measured
-      t_done = comp.submit(req.arrival_ms, items, service_ms=service_ms)
+      if not fstate.alive[i]:
+        # The fault round-trip (DESIGN.md §11): AccuracyTrader's ladder
+        # fails a dead component's shard over to its ring replica (the
+        # reissue queues behind the replica's own work) and terminally
+        # degrades to the frontend-cached stage-1 synopsis; the other
+        # techniques have no ladder — the composer waits out a hard
+        # timeout and the shard's contribution is lost.
+        j = (i + 1) % cfg.n_components
+        if tech == "accuracytrader" and cfg.replicas > 1 \
+            and fstate.alive[j]:
+          t_done = self.components[j].submit(
+              req.arrival_ms, items, service_ms=service_ms,
+              scale=float(fstate.slow[j]))
+          done_times.append(t_done)
+          processed_frac.append(items / cfg.full_items)
+        elif tech == "accuracytrader":
+          done_times.append(req.arrival_ms + comp.base_ms)
+          processed_frac.append(0.0)
+        else:
+          done_times.append(req.arrival_ms + 3.0 * cfg.deadline_ms)
+          processed_frac.append(0.0)
+          lost_mass += 1
+        continue
+      t_done = comp.submit(req.arrival_ms, items, service_ms=service_ms,
+                           scale=float(fstate.slow[i]))
       done_times.append(t_done)
       processed_frac.append(items / cfg.full_items)
 
@@ -178,11 +227,14 @@ class ScatterGatherService:
       self.controller.observe(budget, comp_lat)
       acc = float(np.mean([self.accuracy_fn(u) for u in processed_frac]))
     else:
-      acc = 1.0
+      # Exact techniques: a lost shard's contribution is simply missing
+      # from the exact answer.
+      acc = 1.0 - lost_mass / cfg.n_components
       comp_lat = max(lat)
 
     self.tracker.observe(comp_lat)
     self.acc_tracker.append(acc)
+    self.avail_tracker.append(0.0 if lost_mass else 1.0)
     return {"latency_ms": comp_lat, "accuracy": acc}
 
   def run_open_loop(self, arrival_rate_per_s: float, duration_s: float,
@@ -192,6 +244,9 @@ class ScatterGatherService:
     tracker resets (each call = one reported session, as in Fig 5)."""
     self.tracker = TailTracker()
     self.acc_tracker = []
+    self.avail_tracker = []
+    self.shed_n = 0
+    self.total_n = 0
     t = max((c.busy_until for c in self.components), default=0.0)
     end = t + duration_s * 1000.0
     rid = 0
@@ -202,6 +257,9 @@ class ScatterGatherService:
       rid += 1
     s = self.tracker.summary()
     s["accuracy_loss_pct"] = 100.0 * (1.0 - float(np.mean(self.acc_tracker)))
+    s["shed_pct"] = 100.0 * self.shed_n / max(1, self.total_n)
+    s["availability_pct"] = (100.0 * float(np.mean(self.avail_tracker))
+                             if self.avail_tracker else 0.0)
     return s
 
 

@@ -145,6 +145,41 @@ def test_recirculation_routes_stranded_budget():
   assert out.sum() == 9 and out[0] == 2 and (out[1:] <= 8).all()
 
 
+def test_allocate_budget_all_saturated_and_faulted():
+  """Degenerate cap sets from mode-aware fault gating (DESIGN.md §11):
+  all caps zero (every component STAGE1/DROP), the zero-cap subset
+  holding ALL the mass, budgets at and above capsum — the three fixed
+  recirculation rounds must terminate and conserve
+  ``sum(alloc) == min(total, sum(caps))``."""
+  cases = [
+      ([[1.0, 2.0, 3.0]], 7, [[0, 0, 0]]),     # all faulted
+      ([[0.0, 0.0, 0.0]], 7, [[0, 0, 0]]),     # all faulted, zero mass
+      ([[10.0, 5.0, 0.0, 0.0]], 6, [[0, 0, 4, 4]]),  # mass on dead comps
+      ([[1.0, 1.0, 1.0]], 100, [[2, 3, 4]]),   # total > capsum pins caps
+      ([[0.5, 0.5]], 5, [[2, 3]]),             # exact saturation
+  ]
+  for mass, total, caps in cases:
+    for recirc in (True, False):
+      out = np.asarray(allocate_budget(
+          jnp.asarray(mass), total, jnp.asarray(caps),
+          recirculate=recirc))[0]
+      assert (out >= 0).all() and (out <= np.asarray(caps)[0]).all()
+      if recirc:
+        assert out.sum() == min(total, int(np.sum(caps))), \
+            (mass, total, caps, out)
+  rng = np.random.default_rng(5)
+  for _ in range(40):
+    n = int(rng.integers(2, 9))
+    caps = rng.integers(0, 5, (1, n))
+    caps[0, rng.random(n) < 0.5] = 0           # heavy fault gating
+    total = int(rng.integers(0, caps.sum() + 6))
+    mass = rng.uniform(0.0, 10.0, (1, n))
+    out = np.asarray(allocate_budget(jnp.asarray(mass), total,
+                                     jnp.asarray(caps)))[0]
+    assert (out <= caps[0]).all()
+    assert out.sum() == min(total, caps.sum())
+
+
 # -- policy ------------------------------------------------------------------
 
 

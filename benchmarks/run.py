@@ -4,17 +4,19 @@ Prints ``name,us_per_call,derived`` CSV rows.  The roofline benchmark
 reads the dry-run artifacts (run ``python -m repro.launch.dryrun --all``
 first for the full 40-cell table; missing cells are skipped here).
 
-All four committed baselines regenerate from this one entry point:
+All five committed baselines regenerate from this one entry point:
 
   python -m benchmarks.run --kernels-only --json BENCH_decode.json
   python -m benchmarks.run --prefill-only --json BENCH_prefill.json
   python -m benchmarks.run --serving-only --json BENCH_serving.json
   python -m benchmarks.run --cluster-only --json BENCH_cluster.json
+  python -m benchmarks.run --cache-only   --json BENCH_cache.json
 
-(``--serving-only`` / ``--cluster-only`` pass through to
-``benchmarks.serving_bench`` / ``benchmarks.cluster_bench``; ``--smoke``
-forwards too.)  Every JSON carries ``meta.schema_version`` and the git
-revision that produced it (benchmarks/common.py).
+(``--serving-only`` / ``--cluster-only`` / ``--cache-only`` pass through
+to ``benchmarks.serving_bench`` / ``benchmarks.cluster_bench`` /
+``benchmarks.cache_bench``; ``--smoke`` forwards too.)  Every JSON
+carries ``meta.schema_version`` and the git revision that produced it
+(benchmarks/common.py).
 """
 from __future__ import annotations
 
@@ -169,14 +171,19 @@ def main() -> None:
                   help="pass through to benchmarks.cluster_bench "
                        "(BENCH_cluster.json baseline; forces host "
                        "devices before jax initialises)")
+  ap.add_argument("--cache-only", action="store_true",
+                  help="pass through to benchmarks.cache_bench "
+                       "(BENCH_cache.json baseline)")
   ap.add_argument("--smoke", action="store_true",
-                  help="forwarded to --serving-only / --cluster-only")
+                  help="forwarded to --serving-only / --cluster-only / "
+                       "--cache-only")
   ap.add_argument("--impl", default=None,
                   choices=["auto", "pallas", "xla", "interpret"],
-                  help="forwarded to --serving-only / --cluster-only")
+                  help="forwarded to --serving-only / --cluster-only / "
+                       "--cache-only")
   args = ap.parse_args()
 
-  if args.serving_only or args.cluster_only:
+  if args.serving_only or args.cluster_only or args.cache_only:
     # Dispatch BEFORE anything imports jax: cluster_bench must force the
     # per-component host devices first.
     sub = ["--json", args.json] if args.json else []
@@ -185,6 +192,9 @@ def main() -> None:
     if args.cluster_only:
       from benchmarks.cluster_bench import main as cluster_main
       return cluster_main(sub)
+    if args.cache_only:
+      from benchmarks.cache_bench import main as cache_main
+      return cache_main(sub)
     from benchmarks.serving_bench import main as serving_main
     return serving_main(sub)
 

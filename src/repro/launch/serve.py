@@ -69,14 +69,20 @@ def _engine_main(args):
         order=args.admission, shed=not args.no_shed,
         shed_margin=args.shed_margin,
         classes=parse_slo_classes(args.slo_classes))
+  cache = None
+  if args.cache_capacity > 0 and not args.no_cache:
+    from repro.serve.corpus_cache import CacheConfig
+    cache = CacheConfig(capacity=args.cache_capacity, delta_unit=C)
   eng = ServingEngine(cfg, EngineConfig(
       n_slots=args.n_slots, prompt_len=prompt_len, max_new_tokens=max_new,
       deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl,
-      predictor=args.predictor or "affine", admission=admission),
+      predictor=args.predictor or "affine", admission=admission,
+      cache=cache),
       backend=backend)
   print(f"[engine] impl={eng.impl!r} policy={args.policy} "
         f"slots={args.n_slots} prompt={prompt_len} tokens={max_new} "
-        f"M={eng.M} buckets={eng.buckets} deadline={args.deadline_ms}ms")
+        f"M={eng.M} buckets={eng.buckets} deadline={args.deadline_ms}ms"
+        + (f" cache={args.cache_capacity}" if cache is not None else ""))
   if backend is not None:
     import jax
     mesh = "mesh" if backend.mesh is not None else "stacked"
@@ -98,7 +104,8 @@ def _engine_main(args):
   results = {}
   for name, rate in points:
     s = run_open_loop(eng, rate_per_s=rate, duration_s=args.duration,
-                      seed=0, slo_of=slo_of)
+                      seed=0, slo_of=slo_of,
+                      zipf_corpora=args.zipf_corpora)
     results[name] = {
         "rate_per_s": rate,
         **{k: round(float(v), 3) for k, v in s.items()
@@ -232,6 +239,19 @@ def main():
   ap.add_argument("--hours", default="3,9,21",
                   help="comma-separated hours of day for --trace "
                        "sogou_hourly (0-23; 24 aliases 0)")
+  ap.add_argument("--cache-capacity", type=int, default=0, metavar="K",
+                  help="corpus-cache resident-arena target (DESIGN.md "
+                       "§12): admission consults a content-addressed "
+                       "synopsis cache before prefill; 0 disables "
+                       "(bit-identical control arm)")
+  ap.add_argument("--no-cache", action="store_true",
+                  help="force the cache off regardless of "
+                       "--cache-capacity (the true control arm)")
+  ap.add_argument("--zipf-corpora", type=int, default=0, metavar="K",
+                  help="draw --engine prompts from a pool of K corpora "
+                       "with Zipf popularity instead of fresh random "
+                       "prompts (the workload the corpus cache serves); "
+                       "0 = unique corpora")
   ap.add_argument("--json", default=None, metavar="PATH",
                   help="write the --engine sweep results as JSON")
   args = ap.parse_args()

@@ -538,12 +538,18 @@ class ClusterStepBackend:
         parts.append(sl)
       return jnp.stack(parts, axis=axis)
 
+    # The shared-immutable half (kvc.ARENA_LEAVES) is what scatters —
+    # private leaves (recent ring, pos, SSM state) pass through slot-
+    # local.  A corpus-cache arena is pre-scatter canonical state, so a
+    # shared arena scatters bit-identically to a privately built one
+    # (tests/test_cluster.py).
     out = dict(syn)
-    out["k"] = split(syn["k"], axis=4, unit=C)
-    out["v"] = split(syn["v"], axis=4, unit=C)
-    out["k_syn"] = split(syn["k_syn"], axis=4, unit=1)
-    out["v_syn"] = split(syn["v_syn"], axis=4, unit=1)
-    out["counts"] = split(syn["counts"], axis=3, unit=1)
+    for name in kvc.ARENA_LEAVES:
+      if name == "counts":
+        out[name] = split(syn[name], axis=3, unit=1)
+      else:
+        out[name] = split(syn[name], axis=4,
+                          unit=C if name in ("k", "v") else 1)
     return out
 
   def _make_write(self):
@@ -556,9 +562,9 @@ class ClusterStepBackend:
       if rotate:
         # Per-slot routing: slot s's cluster range r lands on component
         # (r + s) % N, spreading skewed ranges across components.
-        for name in ("k", "v", "k_syn", "v_syn"):
-          sub[name] = jnp.roll(sub[name], slot, axis=4)
-        sub["counts"] = jnp.roll(sub["counts"], slot, axis=3)
+        for name in kvc.ARENA_LEAVES:
+          sub[name] = jnp.roll(sub[name], slot,
+                               axis=3 if name == "counts" else 4)
       return kvc.write_slot(cache, sub, slot, bx)
 
     return jax.jit(write)

@@ -1,0 +1,267 @@
+"""Content-addressed synopsis cache: cross-request corpus sharing
+(DESIGN.md §12).
+
+At millions of users most requests consult the *same* corpora (shared
+indexes, shared system context, per-tenant document sets), yet every
+admission used to prefill and rebuild its synopsis into a private slot —
+re-doing the one cost the paper's offline module exists to amortise (the
+synopsis is built once per corpus, then reused for arbitrary requests).
+This module keys that work by **corpus identity**: the sha-256 of the
+token ids plus a model/config fingerprint (same tokens under different
+weights, kernel impls or shapes are different corpora).
+
+Each entry holds a refcounted, **immutable** arena: the shared half of a
+slot's synopsis cache (`kv_cache.ARENA_LEAVES` — sorted corpus k/v,
+centroid tables, counts) plus the first decode token the prefill
+produced.  Admission that hits the cache skips prefill and synopsis
+build entirely and maps its slot to the shared arena; copy-on-write
+applies only to the private half (`kv_cache.PRIVATE_LEAVES` — the
+per-slot recent ring, position and SSM state), which `write_slot`
+re-zeros into the lane so resident decode never touches shared state.
+
+Append-only sessions ride the same structure: a corpus that strictly
+prefix-extends a cached entry replays only the KV **delta** — a partial
+prefill of the extension tokens against the cached arena's exact KV
+(`prefill.make_extend_step`; sound because softmax over cached keys is
+permutation-invariant and rope is applied before caching) followed by an
+`absorb_recent`-style incremental build (`synopsis_kv.extend_synopsis`)
+— instead of re-prefilling the whole prefix.
+
+Eviction is LRU over refcount-zero entries only: an arena some slot
+still maps stays resident whatever its age, so the cache can transiently
+overshoot ``capacity`` while every entry is live (it re-converges as
+slots retire).  ``CacheConfig(capacity=0)`` is the disabled no-op —
+``enabled`` is False and callers guard every cache branch on it, so the
+disabled path is bit-identical to a stack without the cache at all
+(the `FaultPlan(None)` idiom; regression-tested in
+tests/test_corpus_cache.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve import kv_cache as kvc
+
+__all__ = ["CacheConfig", "CacheEntry", "CorpusCache", "corpus_key",
+           "corpus_fingerprint", "supports_delta"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+  """Corpus-cache knobs.
+
+  ``capacity`` is the resident-entry target (0 = disabled no-op);
+  ``capacity_bytes`` optionally bounds the arenas' total footprint too
+  (0 = entries-only accounting).  ``delta_unit`` > 0 enables
+  prefix-extension lookups whose extension length is a multiple of it
+  (the synopsis cluster size, so the delta builds whole clusters);
+  0 = exact hits only."""
+  capacity: int = 0
+  capacity_bytes: int = 0
+  delta_unit: int = 0
+
+
+@dataclasses.dataclass
+class CacheEntry:
+  """One published corpus: immutable shared arena + admission outputs.
+
+  ``arena`` is the full B=1 synopsis-cache dict straight out of
+  ``synopsis_kv.build`` — the shared-immutable leaves carry the data,
+  the private leaves are zeros that ``write_slot`` copies into the lane
+  as that slot's fresh copy-on-write half.  Callers must never mutate
+  it (jax arrays are immutable; the dict is shared by reference)."""
+  key: str
+  tokens: np.ndarray              # (L,) int32 — the corpus identity
+  arena: Dict[str, object]        # B=1 synopsis cache (shared by ref)
+  first_token: object             # (1,) int32 array from the prefill
+  nbytes: int                     # shared-arena footprint (ARENA_LEAVES)
+  refcount: int = 0               # live slot mappings
+  last_use: int = 0               # LRU tick
+
+
+def corpus_key(tokens, fingerprint: str = "") -> str:
+  """Content address: sha-256 over the token ids + the fingerprint."""
+  t = np.ascontiguousarray(np.asarray(tokens, np.int32))
+  h = hashlib.sha256()
+  h.update(fingerprint.encode())
+  h.update(t.shape[0].to_bytes(8, "little"))
+  h.update(t.tobytes())
+  return h.hexdigest()
+
+
+def corpus_fingerprint(cfg, impl: str, prompt_len: int, seed: int) -> str:
+  """Model/config identity folded into every key: the same token ids
+  under different weights (seed), kernel impls, cluster shapes or slot
+  geometry must not collide."""
+  sc = cfg.synopsis
+  return (f"{cfg.name}|dt={np.dtype(cfg.dtype).name if cfg.dtype is not None else cfg.dtype}"
+          f"|C={sc.cluster_size}|R={sc.recent}|impl={impl}"
+          f"|S={prompt_len}|seed={seed}")
+
+
+def supports_delta(cfg) -> bool:
+  """Prefix-extension delta replay needs attention whose cached KV is
+  position-complete and order-free: plain GQA with global rope attention.
+  SSM state, MLA latents, sliding windows, cross attention and frontend
+  prefixes all couple the extension to un-cached prefix internals, so
+  those archs fall back to the full build on a prefix-extension miss."""
+  return (kvc.n_ssm_positions(cfg) == 0 and cfg.mla is None
+          and cfg.encoder is None and cfg.frontend is None
+          and all(s.kind == "attn" and not s.local and not s.cross_attn
+                  for s in cfg.block_pattern))
+
+
+class CorpusCache:
+  """Content-addressed, refcounted synopsis/sorted-KV arena cache.
+
+  Lifecycle per admission: ``lookup`` classifies the corpus (hit /
+  extend / miss and bumps the counters), ``acquire`` pins the mapped
+  entry for the slot's residency, ``release`` unpins at retirement, and
+  a miss (or completed delta replay) ``publish``-es the freshly built
+  arena — which starts at refcount 1, held by the publishing slot.
+  Eviction (LRU, refcount-zero only) runs at publish time."""
+
+  def __init__(self, config: Optional[CacheConfig] = None,
+               fingerprint: str = ""):
+    self.config = config or CacheConfig()
+    if self.config.capacity < 0:
+      raise ValueError(f"capacity {self.config.capacity} < 0")
+    self.fingerprint = fingerprint
+    self.entries: Dict[str, CacheEntry] = {}
+    self._tick = 0
+    self.reset_stats()
+
+  # -- introspection --------------------------------------------------------
+  @property
+  def enabled(self) -> bool:
+    return self.config.capacity > 0
+
+  @property
+  def nbytes(self) -> int:
+    return sum(e.nbytes for e in self.entries.values())
+
+  def stats(self) -> Dict[str, int]:
+    """Cumulative counters since the last ``reset_stats`` (exported by
+    the engine summary into benches and the simulator round-trip)."""
+    looks = self._hits + self._delta_hits + self._misses
+    return {"hits": self._hits, "misses": self._misses,
+            "delta_hits": self._delta_hits, "evictions": self._evictions,
+            "entries": len(self.entries), "bytes": self.nbytes,
+            "hit_rate": (self._hits + self._delta_hits) / looks
+            if looks else 0.0}
+
+  def reset_stats(self) -> None:
+    self._hits = self._misses = self._delta_hits = self._evictions = 0
+
+  # -- lookup ---------------------------------------------------------------
+  def _touch(self, e: CacheEntry) -> None:
+    self._tick += 1
+    e.last_use = self._tick
+
+  def lookup(self, tokens, allow_extend: bool = True
+             ) -> Tuple[str, Optional[CacheEntry]]:
+    """Classify a corpus: ("hit", entry) — exact content match;
+    ("extend", entry) — the longest cached strict prefix whose extension
+    length divides ``delta_unit``; ("miss", None) otherwise."""
+    if not self.enabled:
+      return "miss", None
+    t = np.asarray(tokens, np.int32)
+    key = corpus_key(t, self.fingerprint)
+    e = self.entries.get(key)
+    if e is not None:
+      self._hits += 1
+      self._touch(e)
+      return "hit", e
+    unit = self.config.delta_unit
+    if allow_extend and unit > 0:
+      best = None
+      for cand in self.entries.values():
+        L = cand.tokens.shape[0]
+        if L < t.shape[0] and (t.shape[0] - L) % unit == 0 \
+            and np.array_equal(cand.tokens, t[:L]) \
+            and (best is None or L > best.tokens.shape[0]):
+          best = cand
+      if best is not None:
+        self._delta_hits += 1
+        self._touch(best)
+        return "extend", best
+    self._misses += 1
+    return "miss", None
+
+  # -- refcounts ------------------------------------------------------------
+  def acquire(self, entry: CacheEntry) -> CacheEntry:
+    """Pin an entry for one slot residency (a ``lookup`` hit does not
+    pin by itself — the caller decides whether it maps the arena)."""
+    entry.refcount += 1
+    self._touch(entry)
+    return entry
+
+  def release(self, key: str) -> None:
+    """Unpin one slot mapping; the entry stays resident (warm) until
+    capacity pressure evicts it."""
+    e = self.entries.get(key)
+    if e is None:
+      return                       # already evicted config change / reset
+    if e.refcount <= 0:
+      raise ValueError(f"release of unpinned entry {key[:12]}")
+    e.refcount -= 1
+
+  # -- publish / evict ------------------------------------------------------
+  def publish(self, tokens, arena: Dict[str, object],
+              first_token) -> CacheEntry:
+    """Insert a freshly built arena (refcount starts at 1 — the
+    publishing slot holds the first mapping).  Publishing an already
+    cached corpus pins the existing entry instead (two concurrent
+    misses on one corpus converge on a single arena)."""
+    if not self.enabled:
+      raise ValueError("publish on a disabled cache")
+    t = np.ascontiguousarray(np.asarray(tokens, np.int32)).copy()
+    key = corpus_key(t, self.fingerprint)
+    e = self.entries.get(key)
+    if e is not None:
+      return self.acquire(e)
+    nbytes = sum(jax_nbytes(arena[name])
+                 for name in kvc.ARENA_LEAVES if name in arena)
+    e = CacheEntry(key=key, tokens=t, arena=arena,
+                   first_token=first_token, nbytes=nbytes, refcount=1)
+    self.entries[key] = e
+    self._touch(e)
+    self._evict()
+    return e
+
+  def _over_capacity(self) -> bool:
+    cfg = self.config
+    if len(self.entries) > cfg.capacity:
+      return True
+    return bool(cfg.capacity_bytes and self.nbytes > cfg.capacity_bytes)
+
+  def _evict(self) -> None:
+    """LRU over refcount-zero entries ONLY: a live arena is never
+    evicted, so the cache transiently overshoots capacity when every
+    entry is pinned and re-converges as slots retire."""
+    while self._over_capacity():
+      dead = [e for e in self.entries.values() if e.refcount == 0]
+      if not dead:
+        return
+      victim = min(dead, key=lambda e: e.last_use)
+      del self.entries[victim.key]
+      self._evictions += 1
+
+  def clear(self) -> None:
+    """Drop every unpinned entry (measurement-window hygiene in benches;
+    pinned entries survive — their slots still map them)."""
+    for key in [k for k, e in self.entries.items() if e.refcount == 0]:
+      del self.entries[key]
+
+
+def jax_nbytes(x) -> int:
+  """Leaf footprint for either jax or plain numpy arrays (property tests
+  exercise the cache core with numpy arenas)."""
+  nb = getattr(x, "nbytes", None)
+  if nb is not None:
+    return int(nb)
+  return int(np.asarray(x).nbytes)

@@ -56,9 +56,11 @@ from repro.control import (POLICIES, AdmissionConfig, AdmissionPolicy,
                            make_predictor)
 from repro.models import common as cm
 from repro.models import transformer as tf
+from repro.serve import corpus_cache as ccache
 from repro.serve import kv_cache as kvc
 from repro.serve import synopsis_kv as skv
-from repro.serve.prefill import make_prefill_step
+from repro.serve.corpus_cache import CacheConfig
+from repro.serve.prefill import make_extend_step, make_prefill_step
 from repro.serve.serve_step import make_serve_step, resolve_impl
 from repro.serving.service import _default_concentration
 from repro.serving.workload import poisson_arrivals
@@ -91,6 +93,13 @@ class EngineConfig:
   # shed-at-admission and SLO classes.  None = the legacy FIFO queue,
   # bit-identical to the pre-resilience engine.
   admission: Optional[AdmissionConfig] = None
+  # Content-addressed corpus cache (DESIGN.md §12,
+  # `repro.serve.corpus_cache`): admission consults it before prefill —
+  # a hit maps the slot to a shared refcounted arena and skips
+  # prefill+build entirely; a strict prefix-extension replays only the
+  # KV delta.  None (or capacity 0) = disabled, bit-identical to the
+  # pre-cache admission path.
+  cache: Optional[CacheConfig] = None
 
 
 @dataclasses.dataclass
@@ -102,6 +111,11 @@ class EngineRequest:
   # Filled by the engine:
   admit_ms: float = -1.0
   finish_ms: float = -1.0
+  # Measured wall of this request's own (blocking) admission — prefill
+  # + build + write, or the cache hit's write-only path.  0.0 on the
+  # overlapped path, where admissions share one block with the decode
+  # step and have no individual wall.
+  admit_wall_ms: float = 0.0
   tokens: List[int] = dataclasses.field(default_factory=list)
   budgets: List[int] = dataclasses.field(default_factory=list)
   # Per-step accuracy contributions from a cluster step backend (the
@@ -197,6 +211,15 @@ class ServingEngine:
                                        self._demand_ms)
     self._admit_ms_ewma = 0.0
     self.prefills = 0
+    # Content-addressed corpus cache (DESIGN.md §12): shared arenas keyed
+    # on token ids + a model/config fingerprint.  Disabled (capacity 0 /
+    # None) it is a pure no-op — every branch below guards on `enabled`.
+    self.corpus_cache = ccache.CorpusCache(
+        ecfg.cache,
+        fingerprint=ccache.corpus_fingerprint(cfg, self.impl,
+                                              ecfg.prompt_len, ecfg.seed))
+    self._delta_ok = ccache.supports_delta(cfg)
+    self._slot_entry: List[Optional[str]] = [None] * ecfg.n_slots
 
     if params is None:
       params, _ = cm.split(tf.init_model(jax.random.PRNGKey(ecfg.seed), cfg))
@@ -205,6 +228,12 @@ class ServingEngine:
 
     self._prefill = jax.jit(make_prefill_step(cfg, impl=self.impl))
     self._build = jax.jit(lambda c: skv.build(c, cfg, impl=self.impl))
+    # Delta-replay programs (prefix-extension cache hits): jitted lazily
+    # on the first extend admission; jax re-specializes per (P, E) shape.
+    self._extend = jax.jit(make_extend_step(cfg, impl=self.impl)) \
+        if self._delta_ok else None
+    self._extend_build = jax.jit(
+        lambda a, k, v: skv.extend_synopsis(a, k, v, cfg, impl=self.impl))
     self._bx = kvc.slot_batch_axes(cfg, ecfg.n_slots, ecfg.prompt_len,
                                    synopsis=True)
     bx = self._bx
@@ -264,6 +293,14 @@ class ServingEngine:
     self.events: List[Tuple[str, int, int, float]] = []
     self.step_log: List[Tuple[int, float, int]] = []   # (budget, ms, active)
     self.prefills = 0
+    # The corpus cache persists across windows like the latency model
+    # (warm arenas are the point); only the per-window counters and the
+    # retiring slots' pins reset.
+    for key in getattr(self, "_slot_entry", []):
+      if key is not None:
+        self.corpus_cache.release(key)
+    self._slot_entry = [None] * e.n_slots
+    self.corpus_cache.reset_stats()
     if getattr(self, "admission", None) is not None:
       self.admission.reset()
     if reset_controller:
@@ -333,15 +370,58 @@ class ServingEngine:
   def _dispatch_admission(self, req: EngineRequest, slot: int, cache):
     """Dispatch one admission's prefill -> build -> slot-write chain
     WITHOUT blocking; returns (first-token array, written cache).  Both
-    the serial and the overlapped admission paths go through here."""
+    the serial and the overlapped admission paths go through here.
+
+    With the corpus cache enabled (DESIGN.md §12) the chain is consulted
+    first: an exact hit skips prefill AND build — only the slot write is
+    dispatched, mapping the lane onto the shared arena (the private
+    recent-ring half is zeros in the arena, so the lane starts its own
+    copy-on-write decode state); a strict prefix-extension replays only
+    the extension's KV delta; a miss runs the full chain and publishes
+    the arena for subsequent admissions.  Warmup bypasses the cache
+    entirely — its dummy all-zero prompts would otherwise alias one
+    corpus and skip compiling the prefill/build programs."""
+    cc = self.corpus_cache
+    use_cache = cc.enabled and not self._warming
+    if use_cache:
+      kind, entry = cc.lookup(req.prompt, allow_extend=self._delta_ok)
+      if kind == "hit":
+        cc.acquire(entry)
+        self._slot_entry[slot] = entry.key
+        return entry.first_token, self._write(cache, entry.arena, slot)
+      if kind == "extend":
+        first, new_entry = self._delta_admit(entry, req.prompt)
+        self._slot_entry[slot] = new_entry.key
+        return first, self._write(cache, new_entry.arena, slot)
     prompt = jnp.asarray(req.prompt, jnp.int32)[None]
     self.prefills += 1
     logits, cache1 = self._prefill(self.params, prompt)
     syn = self._build(cache1)
     if self._warming:
       self._warm_syn = syn       # reused to warm re-write cache lineages
+    first = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+    if use_cache:
+      entry = cc.publish(req.prompt, syn, first)
+      self._slot_entry[slot] = entry.key
     cache = self._write(cache, syn, slot)
-    return jnp.argmax(logits, -1).astype(jnp.int32), cache    # (1,), cache
+    return first, cache
+
+  def _delta_admit(self, entry, prompt) -> Tuple[jax.Array, object]:
+    """Prefix-extension replay: run only the extension tokens against the
+    cached arena's sorted prefix KV (`prefill.make_extend_step`), grow
+    the synopsis incrementally (`synopsis_kv.extend_synopsis`), publish
+    the extended corpus as its own entry.  No full prefill is dispatched
+    — ``self.prefills`` does not move; the cache counts it as a
+    delta hit."""
+    t = np.asarray(prompt, np.int32)
+    L = int(entry.tokens.shape[0])
+    ext = jnp.asarray(t[L:], jnp.int32)[None]
+    logits, (k_new, v_new) = self._extend(
+        self.params, ext, entry.arena["k"], entry.arena["v"],
+        jnp.int32(L))
+    arena = self._extend_build(entry.arena, k_new, v_new)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    return first, self.corpus_cache.publish(t, arena, first)
 
   def _admit(self, req: EngineRequest, slot: int) -> None:
     # queue_ms measures pure waiting: the clock *before* this request's
@@ -353,6 +433,7 @@ class ServingEngine:
     jax.block_until_ready((self.cache, self.tok))
     dt = (time.perf_counter() - t0) * 1e3
     self.now_ms += dt
+    req.admit_wall_ms = dt
     # Admission-cost EWMA: the fixed part of the demand estimate the
     # predictive shed uses (_demand_ms).
     if not self._warming:
@@ -403,6 +484,11 @@ class ServingEngine:
     s = self.slots[slot]
     req = s.req
     req.finish_ms = self.now_ms
+    # Unpin the slot's shared-arena mapping (the entry stays resident,
+    # warm for the next admission, until capacity pressure evicts it).
+    if self._slot_entry[slot] is not None:
+      self.corpus_cache.release(self._slot_entry[slot])
+      self._slot_entry[slot] = None
     req.dropped = s.remaining > 0      # shed mid-flight, not finished
     e = self.ecfg
     # With a cluster backend, each step reported the corpus-share-weighted
@@ -681,6 +767,20 @@ class ServingEngine:
         if self.step_log else 0.0
     s["steps"] = len(self.step_log)
     s["prefills"] = self.prefills
+    # Per-request admission wall percentiles (serial admissions only —
+    # the overlapped path shares one block with the decode step and has
+    # no per-request wall).  The hit-vs-miss gap here is the corpus
+    # cache's headline number (BENCH_cache.json).
+    walls = [r.admit_wall_ms for r in self.completed
+             if not r.shed_admission and r.admit_wall_ms > 0.0]
+    s["admission_p50"] = float(np.percentile(walls, 50)) if walls else 0.0
+    s["admission_p99"] = float(np.percentile(walls, 99)) if walls else 0.0
+    if self.corpus_cache.enabled:
+      cst = self.corpus_cache.stats()
+      for name in ("hits", "misses", "delta_hits", "evictions", "entries",
+                   "bytes"):
+        s[f"cache_{name}"] = float(cst[name])
+      s["cache_hit_rate"] = float(cst["hit_rate"])
     s["goodput_per_s"] = s["goodput_n"] / (self.now_ms / 1e3) \
         if self.now_ms > 0 else 0.0
     # Per-SLO-class breakdown (DESIGN.md §11): every completed request
@@ -757,9 +857,29 @@ def make_requests(arrivals_ms: Sequence[float], prompt_len: int,
           for i, t in enumerate(arrivals_ms)]
 
 
+def make_zipf_requests(arrivals_ms: Sequence[float], prompt_len: int,
+                       max_new_tokens: int, vocab: int,
+                       n_corpora: int = 8, alpha: float = 1.1,
+                       seed: int = 0) -> List[EngineRequest]:
+  """Zipf-repeated-corpora requests: each arrival draws its prompt from
+  a fixed pool of ``n_corpora`` distinct corpora with Zipf(``alpha``)
+  popularity — the shared-index / per-tenant-document workload shape the
+  corpus cache exists for (DESIGN.md §12).  ``n_corpora=1`` is the
+  100%-repeat arm (every admission after the first hits)."""
+  rng = np.random.default_rng(seed)
+  pool = [rng.integers(0, vocab, prompt_len, dtype=np.int32)
+          for _ in range(n_corpora)]
+  w = np.arange(1, n_corpora + 1, dtype=np.float64) ** -alpha
+  picks = rng.choice(n_corpora, size=len(arrivals_ms), p=w / w.sum())
+  return [EngineRequest(rid=i, arrival_ms=float(t),
+                        prompt=pool[picks[i]],
+                        max_new_tokens=max_new_tokens)
+          for i, t in enumerate(arrivals_ms)]
+
+
 def run_open_loop(engine: ServingEngine, rate_per_s: float,
                   duration_s: float, seed: int = 0,
-                  slo_of=None) -> Dict[str, float]:
+                  slo_of=None, zipf_corpora: int = 0) -> Dict[str, float]:
   """One measurement window of Poisson arrivals at ``rate_per_s`` — the
   engine-side mirror of ``ScatterGatherService.run_open_loop``.
 
@@ -773,9 +893,14 @@ def run_open_loop(engine: ServingEngine, rate_per_s: float,
   if engine.backend is not None and hasattr(engine.backend, "reseed"):
     engine.backend.reseed(seed)
   arrivals = poisson_arrivals(rate_per_s, duration_s, seed=seed)
-  reqs = make_requests(arrivals, engine.ecfg.prompt_len,
-                       engine.ecfg.max_new_tokens, engine.cfg.vocab,
-                       seed=seed)
+  if zipf_corpora > 0:
+    reqs = make_zipf_requests(arrivals, engine.ecfg.prompt_len,
+                              engine.ecfg.max_new_tokens, engine.cfg.vocab,
+                              n_corpora=zipf_corpora, seed=seed)
+  else:
+    reqs = make_requests(arrivals, engine.ecfg.prompt_len,
+                         engine.ecfg.max_new_tokens, engine.cfg.vocab,
+                         seed=seed)
   if slo_of is not None:
     for r in reqs:
       r.slo = slo_of(r.rid)

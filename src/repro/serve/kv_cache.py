@@ -31,6 +31,17 @@ from repro.models import common as cm
 
 # Logical axes per cache leaf (leading 'layers' for the scan stack).
 KV_AXES = ("layers", None, "batch", "kv_heads", "kv_seq", None)
+
+# Shared-immutable vs private-mutable split of a synopsis slot
+# (DESIGN.md §12).  ARENA_LEAVES are a pure function of the corpus —
+# sorted corpus KV, centroid tables, counts — so the corpus cache can
+# share one arena across every slot serving the same corpus.
+# PRIVATE_LEAVES hold per-request decode state (the recent ring, the
+# position, SSM/cross state): the copy-on-write half, always written
+# fresh per slot and never aliased.
+ARENA_LEAVES = ("k", "v", "k_syn", "v_syn", "counts")
+PRIVATE_LEAVES = ("recent_k", "recent_v", "recent_len", "pos",
+                  "conv_state", "ssd_state", "cross_k", "cross_v")
 SYN_AXES = KV_AXES
 COUNT_AXES = ("layers", None, "batch", "kv_seq")
 RECENT_AXES = ("layers", None, "batch", "kv_heads", None, None)
@@ -169,6 +180,14 @@ def init_cache(cfg, B, S, *, synopsis: bool, key=None):
     else:
       out[name] = jnp.zeros(sh, dt)
   return out
+
+
+def arena_nbytes(arena: Dict[str, Any]) -> int:
+  """Footprint of the shared-immutable half only (capacity accounting in
+  the corpus cache; the private leaves live in the slot pool, not the
+  arena)."""
+  return sum(int(arena[name].nbytes) for name in ARENA_LEAVES
+             if name in arena)
 
 
 def build_synopsis_from_cache(k_cache: jax.Array, v_cache: jax.Array,

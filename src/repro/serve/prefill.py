@@ -20,9 +20,10 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
 from repro.kernels import ops
+from repro.models import attention as attn_lib
 from repro.models import common as cm
 from repro.models import transformer as tf
-from repro.models.layers import softcap
+from repro.models.layers import rms_norm, softcap
 
 
 def make_prefill_step(cfg: cm.ModelConfig, *, impl: Optional[str] = None):
@@ -50,3 +51,103 @@ def make_prefill_step(cfg: cm.ModelConfig, *, impl: Optional[str] = None):
     return logits, cache
 
   return prefill_step
+
+
+def _extend_layer(x, lp, cfg: cm.ModelConfig, spec: cm.LayerSpec,
+                  positions, pk, pv):
+  """One decoder layer over E extension tokens attending [prefix; ext].
+
+  Mirrors ``transformer._layer_forward`` for the archs
+  ``corpus_cache.supports_delta`` admits (plain global GQA rope
+  attention, optionally sandwich/parallel-block) — the difference is
+  the KV source: the prefix half comes from the cached arena's sorted
+  KV ``pk``/``pv`` (B, Hkv, P, D) instead of being recomputed.  Sound
+  because softmax over cached keys is permutation-invariant and rope
+  was applied at true positions before caching, so the sorted order of
+  the arena does not change any extension token's attention output.
+
+  Returns (x, k_new, v_new) with the new KV in decode layout
+  (B, Hkv, E, D)."""
+  h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+  q, k, v = attn_lib.qkv(h, lp["attn"], cfg, positions)
+  k_new = jnp.moveaxis(k, 1, 2)                        # (B, Hkv, E, D)
+  v_new = jnp.moveaxis(v, 1, 2)
+  k_all = jnp.concatenate([pk.astype(k_new.dtype), k_new], axis=2)
+  v_all = jnp.concatenate([pv.astype(v_new.dtype), v_new], axis=2)
+
+  B, E, H, D = q.shape
+  Hkv = k_all.shape[1]
+  P = pk.shape[2]
+  G = H // Hkv
+  qg = jnp.moveaxis(q, 1, 2).reshape(B, Hkv, G, E, D)
+  logits = jnp.einsum("bhged,bhsd->bhges", qg.astype(jnp.float32),
+                      k_all.astype(jnp.float32)) * cfg.hd ** -0.5
+  logits = softcap(logits, cfg.attn_softcap)
+  # Every prefix key (s < P, any sorted order) is causally visible to
+  # every extension query; among extension keys plain causality applies.
+  vis = (jnp.arange(P + E)[None, :] - P) <= jnp.arange(E)[:, None]
+  logits = jnp.where(vis[None, None, None], logits, -1e30)
+  w = jax.nn.softmax(logits, axis=-1)
+  o = jnp.einsum("bhges,bhsd->bhged", w, v_all.astype(jnp.float32))
+  o = jnp.moveaxis(o.reshape(B, H, E, D), 1, 2).astype(x.dtype)
+  mix = attn_lib.out_proj(o, lp["attn"], x.dtype)
+  if cfg.sandwich_norm:
+    mix = rms_norm(mix, lp["ln1_post"], cfg.norm_eps)
+
+  if cfg.parallel_block:
+    f, _ = tf._ffn(h, lp, cfg, spec)
+    x = x + mix + f
+  else:
+    x = x + mix
+    if "ln2" in lp:
+      h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+      f, _ = tf._ffn(h2, lp, cfg, spec)
+      if cfg.sandwich_norm:
+        f = rms_norm(f, lp["ln2_post"], cfg.norm_eps)
+      x = x + f
+  return x, k_new, v_new
+
+
+def make_extend_step(cfg: cm.ModelConfig, *, impl: Optional[str] = None):
+  """Delta prefill for prefix-extended corpora (DESIGN.md §12): run only
+  the E extension tokens against a cached arena's sorted prefix KV,
+  skipping the prefix's O(P) recompute entirely.
+
+  Gate on ``corpus_cache.supports_delta(cfg)`` before building this —
+  SSM/MLA/local/cross archs couple the extension to prefix internals the
+  arena does not cache.  ``impl`` is accepted for signature symmetry with
+  ``make_prefill_step``; the extension attention itself is plain XLA
+  (E is small — one or a few clusters — so there is no kernel to win).
+
+  extend_step(params, ext_tokens (B, E), prefix_k, prefix_v
+  (nb, na, B, Hkv, P, D), pos0) -> (last-token logits, ext KV
+  (nb, na, B, Hkv, E, D) pair) — feed the KV to
+  ``synopsis_kv.extend_synopsis``."""
+  del impl
+
+  def extend_step(params, ext_tokens, prefix_k, prefix_v, pos0):
+    x = tf.embed_tokens(params, cfg, ext_tokens)
+    E = x.shape[1]
+    positions = pos0 + jnp.arange(E)
+
+    def superblock(x, xs):
+      stacked, pk, pv = xs            # pk/pv: (na, B, Hkv, P, D)
+      ks, vs = [], []
+      for i, spec in enumerate(cfg.block_pattern):
+        x, k_, v_ = _extend_layer(x, stacked[f"pos{i}"], cfg, spec,
+                                  positions, pk[i], pv[i])
+        ks.append(k_)
+        vs.append(v_)
+      return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (k_new, v_new) = jax.lax.scan(
+        superblock, x, (params["blocks"], prefix_k, prefix_v))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = h[:, -1]
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, (k_new, v_new)
+
+  return extend_step

@@ -144,3 +144,49 @@ def absorb_recent(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
           "counts": counts,
           "recent_k": jnp.zeros_like(rk), "recent_v": jnp.zeros_like(rv),
           "recent_len": jnp.zeros_like(cache["recent_len"])}
+
+
+def extend_synopsis(arena: Dict[str, jax.Array], ext_k: jax.Array,
+                    ext_v: jax.Array, cfg: cm.ModelConfig,
+                    method: str = "kd",
+                    impl: Optional[str] = None) -> Dict[str, jax.Array]:
+  """Prefix-extension delta build (DESIGN.md §12): append E new prefill
+  tokens' KV to an already-built arena without rebuilding the prefix.
+
+  Unlike :func:`absorb_recent` (decode tokens, time-contiguous, identity
+  permutation), the extension is E prefill tokens large enough to carry
+  structure, so it gets its own similarity clustering — E/C clusters over
+  the extension alone, appended after the prefix's M clusters.  The
+  prefix's sorted KV, centroids and counts are untouched, which is what
+  makes the cached arena reusable: build(prefix) + extend(ext) and the
+  delta-replayed admission agree exactly on the prefix half.
+
+  ext_k/ext_v: (nb, na, B, Hkv, E, D) from ``prefill.make_extend_step``.
+  Returns a new arena (pos advanced by E; recent ring passthrough)."""
+  impl = ops.resolve_impl(impl if impl is not None else cfg.synopsis.impl)
+  nb, na, B, Hkv, E, D = ext_k.shape
+  C = cfg.synopsis.cluster_size
+  assert E % C == 0, (E, C)
+  newM = E // C
+
+  feats = jnp.moveaxis(ext_k, 3, 4).reshape(nb * na * B, E, Hkv * D)
+  perms = jax.vmap(lambda f: _cluster_perm(f.astype(jnp.float32), newM,
+                                           method))(feats)
+  N = nb * na * B
+  k_sorted, v_sorted, k_new, v_new, cnt_new = ops.synopsis_build(
+      ext_k.reshape(N, Hkv, E, D), ext_v.reshape(N, Hkv, E, D),
+      perms.reshape(N, E).astype(jnp.int32), cluster_size=C, impl=impl)
+  return {**arena,
+          "k": jnp.concatenate(
+              [arena["k"], k_sorted.reshape(nb, na, B, Hkv, E, D)], axis=4),
+          "v": jnp.concatenate(
+              [arena["v"], v_sorted.reshape(nb, na, B, Hkv, E, D)], axis=4),
+          "k_syn": jnp.concatenate(
+              [arena["k_syn"], k_new.reshape(nb, na, B, Hkv, newM, D)],
+              axis=4),
+          "v_syn": jnp.concatenate(
+              [arena["v_syn"], v_new.reshape(nb, na, B, Hkv, newM, D)],
+              axis=4),
+          "counts": jnp.concatenate(
+              [arena["counts"], cnt_new.reshape(nb, na, B, newM)], axis=3),
+          "pos": arena["pos"] + E}

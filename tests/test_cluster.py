@@ -288,6 +288,73 @@ def test_backend_rejects_bad_configs():
                       n_components=8, use_mesh=False)))
 
 
+# -- corpus cache on the cluster tier ----------------------------------------
+
+def test_cache_shared_arena_shards_identically():
+  """A cache hit maps the shared arena into its slot lane through the
+  same jitted scatter+write a private build uses: one corpus admitted to
+  slot 0 (miss) and slot 1 (hit) yields bit-identical per-component
+  lanes, and both match a cache-off engine's two private builds."""
+  from repro.serve import kv_cache as kvc
+  from repro.serve.engine import CacheConfig, make_requests
+  cfg = get_config("llama3-8b", smoke=True)
+  Cs = cfg.synopsis.cluster_size
+  lanes = {}
+  for cache_on in (True, False):
+    backend = ClusterStepBackend(ClusterConfig(
+        n_components=2, skew=1.2, seed=0, use_mesh=False))
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=64, max_new_tokens=2, policy="fixed",
+        fixed_budget=1, impl="xla",
+        cache=CacheConfig(capacity=8, delta_unit=Cs) if cache_on
+        else None), backend=backend)
+    eng.reset()
+    reqs = make_requests([0.0, 0.0], 64, 2, cfg.vocab, seed=9)
+    reqs[1].prompt = reqs[0].prompt.copy()       # the same corpus twice
+    eng._admit(reqs[0], 0)
+    eng._admit(reqs[1], 1)
+    if cache_on:
+      st = eng.corpus_cache.stats()
+      assert st["misses"] == 1 and st["hits"] == 1
+      assert eng.prefills == 1                   # slot 1 skipped prefill
+    lanes[cache_on] = {name: np.asarray(eng.cache[name])
+                       for name in kvc.ARENA_LEAVES}
+  for name in lanes[True]:
+    # Within the cache-on engine: the hit-mapped lane == the built lane.
+    np.testing.assert_array_equal(lanes[True][name][:, :, 0],
+                                  lanes[True][name][:, :, 1], err_msg=name)
+    # Across engines: the shared arena scatters exactly like a private
+    # build (the cache stores pre-scatter canonical state).
+    np.testing.assert_array_equal(lanes[True][name], lanes[False][name],
+                                  err_msg=name)
+
+
+def test_cache_with_crashed_component_recovery():
+  """A shard whose state came from a shared cache arena rides the same
+  recovery ladder as a private one: with a component crashed the whole
+  window and a 100%-repeat trace, availability stays 100%, the dead
+  shard falls back to stage-1, and the repeats still hit the cache."""
+  from repro.serve.engine import CacheConfig
+  from repro.serve.resilience import FaultSpec
+  cfg = get_config("llama3-8b", smoke=True)
+  backend = ClusterStepBackend(ClusterConfig(
+      n_components=2, replicas=1, seed=0, use_mesh=False,
+      faults=FaultSpec(crash=((0, 1),), seed=5)))
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=64, max_new_tokens=2, deadline_ms=60.0,
+      policy="accuracytrader", impl="xla",
+      cache=CacheConfig(capacity=8,
+                        delta_unit=cfg.synopsis.cluster_size)),
+      backend=backend)
+  s = run_open_loop(eng, rate_per_s=30.0, duration_s=0.4, seed=3,
+                    zipf_corpora=1)
+  assert s["n"] > 0
+  assert s["availability_pct"] == 100.0
+  assert s["cache_hits"] > 0 and s["cache_misses"] == 1.0
+  assert backend.fault_stats["stage1_fallbacks"] > 0
+  assert backend.fault_stats["dropped"] == 0
+
+
 # -- shard_map execution (multi-device, subprocess) --------------------------
 
 _SHARDED_PROG = r"""
@@ -380,3 +447,62 @@ def test_sharded_cluster_equals_stacked():
   res = json.loads(line[len("RESULT:"):])
   for k, err in res.items():
     assert err < 1e-5, (k, res)
+
+
+_CACHE_SHARDED_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.configs.registry import get_config
+from repro.serve import kv_cache as kvc
+from repro.serve.cluster import ClusterConfig, ClusterStepBackend
+from repro.serve.engine import (CacheConfig, EngineConfig, ServingEngine,
+                                make_requests)
+
+cfg = get_config("llama3-8b", smoke=True)
+Cs = cfg.synopsis.cluster_size
+res = {}
+for name, mesh in (("mesh", True), ("stacked", False)):
+    backend = ClusterStepBackend(ClusterConfig(
+        n_components=8, seed=0, use_mesh=mesh))
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=128, max_new_tokens=2, policy="fixed",
+        fixed_budget=1, impl="xla",
+        cache=CacheConfig(capacity=8, delta_unit=Cs)), backend=backend)
+    eng.reset()
+    reqs = make_requests([0.0, 0.0], 128, 2, cfg.vocab, seed=9)
+    reqs[1].prompt = reqs[0].prompt.copy()
+    eng._admit(reqs[0], 0)     # miss: private build, scattered to 8 shards
+    eng._admit(reqs[1], 1)     # hit: shared arena, same scatter+write
+    st = eng.corpus_cache.stats()
+    assert st["misses"] == 1 and st["hits"] == 1, st
+    res[name] = max(
+        float(np.abs(np.asarray(eng.cache[l]).astype(np.float32)[:, :, 0]
+                     - np.asarray(eng.cache[l]).astype(np.float32)[:, :, 1]
+                     ).max())
+        for l in kvc.ARENA_LEAVES)
+print("RESULT:" + json.dumps(res))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_cache_shared_arena_shards_identically_sharded():
+  """The shard_map (8 placeholder devices) and stacked executions both
+  write a cache-hit's shared arena bit-identically to the private build
+  it deduplicates — the slot-1 lane equals the slot-0 lane exactly."""
+  import json
+  import os
+  import subprocess
+  import sys
+  env = dict(os.environ)
+  env["PYTHONPATH"] = "src"
+  p = subprocess.run([sys.executable, "-c", _CACHE_SHARDED_PROG],
+                     capture_output=True, text=True, env=env, timeout=600,
+                     cwd=os.path.dirname(os.path.dirname(__file__)))
+  assert p.returncode == 0, p.stderr[-3000:]
+  line = [l for l in p.stdout.splitlines() if l.startswith("RESULT:")][0]
+  res = json.loads(line[len("RESULT:"):])
+  for k, err in res.items():
+    assert err == 0.0, (k, res)

@@ -39,8 +39,9 @@ def test_design_has_sections():
   headings = _design_headings()
   assert headings, "DESIGN.md has no §N headings"
   # The anchors the codebase has always cited, plus the control plane
-  # (§10: predictors, recirculation, hedged replica gather).
-  assert {"3", "5", "10"} <= headings
+  # (§10: predictors, recirculation, hedged replica gather) and the
+  # corpus cache (§12: content addressing, CoW split, delta replay).
+  assert {"3", "5", "10", "12"} <= headings
 
 
 def test_docstring_design_refs_resolve():

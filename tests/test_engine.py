@@ -9,9 +9,10 @@ import pytest
 from repro.configs.registry import get_config
 from repro.core.deadline import BudgetController, LatencyModel
 from repro.serve import synopsis_kv as skv
-from repro.serve.engine import (EngineConfig, EngineRequest,
+from repro.serve.engine import (CacheConfig, EngineConfig, EngineRequest,
                                 MeasuredStepBackend, ServingEngine,
-                                make_requests, run_open_loop)
+                                make_requests, make_zipf_requests,
+                                run_open_loop)
 from repro.serving.latency import ComponentModel
 from repro.serving.service import ScatterGatherService, ServiceConfig
 
@@ -233,6 +234,111 @@ def test_run_open_loop_summary_fields(engine):
             "deadline_miss_pct", "mean_budget", "queue_p99", "steps"):
     assert k in s
   assert s["n"] == len(engine.completed)
+
+
+def _zipf_trace(cfg, n=8, n_corpora=3, seed=17):
+  return make_zipf_requests([float(2 * i) for i in range(n)], 32, 2,
+                            cfg.vocab, n_corpora=n_corpora, seed=seed)
+
+
+def test_cache_token_and_loss_parity(cfg):
+  """The corpus cache is a pure latency optimisation: a Zipf-repeated
+  trace produces identical per-request tokens and loss with the cache on
+  vs off, under both the xla and interpret kernels — and with it on,
+  every repeat hits, so prefills == cache misses == unique corpora."""
+  C = cfg.synopsis.cluster_size
+  results = {}
+  for impl in ("xla", "interpret"):
+    for cache_on in (True, False):
+      eng = ServingEngine(cfg, EngineConfig(
+          n_slots=2, prompt_len=32, max_new_tokens=2, policy="fixed",
+          fixed_budget=1, impl=impl,
+          cache=CacheConfig(capacity=8, delta_unit=C) if cache_on
+          else None))
+      reqs = _zipf_trace(cfg)
+      eng.run(reqs)
+      s = eng.summary()
+      results[(impl, cache_on)] = (
+          [r.tokens for r in sorted(reqs, key=lambda r: r.rid)],
+          s["accuracy_loss_pct"], s)
+  toks0, loss0, _ = results[("xla", False)]
+  for toks, loss, _ in results.values():
+    assert toks == toks0
+    assert loss == loss0
+  uniq = len({r.prompt.tobytes() for r in _zipf_trace(cfg)})
+  _, _, s_on = results[("xla", True)]
+  assert s_on["prefills"] == s_on["cache_misses"] == uniq
+  assert s_on["cache_hits"] == len(toks0) - uniq
+  assert s_on["cache_hit_rate"] == pytest.approx(1.0 - uniq / len(toks0))
+
+
+def test_cache_delta_replay_admission(cfg):
+  """A corpus strictly prefix-extending a cached entry replays only the
+  KV delta: no full prefill, the extended corpus is itself published,
+  and a repeat of it is an exact hit."""
+  C = cfg.synopsis.cluster_size
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=1, prompt_len=PROMPT, max_new_tokens=2, policy="fixed",
+      fixed_budget=1, impl="xla",
+      cache=CacheConfig(capacity=8, delta_unit=C)))
+  reqs = make_requests([0.0], PROMPT, 2, cfg.vocab, seed=21)
+  prefix = reqs[0].prompt[:PROMPT // 2]          # 2 kd clusters (C=16)
+  logits, c1 = eng._prefill(eng.params, jnp.asarray(prefix)[None])
+  first = jnp.argmax(logits, -1).astype(jnp.int32)
+  eng.corpus_cache.publish(prefix, eng._build(c1), first)
+
+  eng.run(reqs)
+  st = eng.corpus_cache.stats()
+  assert st["delta_hits"] == 1 and st["misses"] == 0
+  assert eng.prefills == 0                       # no full prefill ran
+  assert len(reqs[0].tokens) == 3
+  assert st["entries"] == 2                      # prefix + extended corpus
+
+  eng.run(make_requests([0.0], PROMPT, 2, cfg.vocab, seed=21))
+  st = eng.corpus_cache.stats()
+  assert st["hits"] == 1 and st["delta_hits"] == 1 and eng.prefills == 0
+
+
+def test_cache_disabled_is_control_arm(cfg):
+  """capacity=0 (and cache=None) is a true no-op: identical tokens and
+  deterministic summary fields, and no cache_* keys leak into the
+  summary — so --no-cache benches a clean control arm."""
+  outs = {}
+  for name, cache in (("none", None), ("zero", CacheConfig(capacity=0))):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=32, max_new_tokens=2, policy="fixed",
+        fixed_budget=1, impl="xla", cache=cache))
+    reqs = _zipf_trace(cfg, n=4, n_corpora=2, seed=19)
+    eng.run(reqs)
+    outs[name] = ([r.tokens for r in sorted(reqs, key=lambda r: r.rid)],
+                  eng.summary())
+  toks_none, s_none = outs["none"]
+  toks_zero, s_zero = outs["zero"]
+  assert toks_none == toks_zero
+  assert set(s_none) == set(s_zero)
+  assert not any(k.startswith("cache_") for k in s_none)
+  for k in ("prefills", "served_n", "accuracy_loss_pct", "n"):
+    assert s_none[k] == s_zero[k]
+
+
+def test_cache_survives_reset_windows(cfg):
+  """Entries persist across measurement windows (reset() drops pins and
+  counters, not arenas — warm state is the point); the second window of
+  an identical trace runs at 100% hit rate with zero prefills."""
+  C = cfg.synopsis.cluster_size
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=32, max_new_tokens=2, policy="fixed",
+      fixed_budget=1, impl="xla",
+      cache=CacheConfig(capacity=8, delta_unit=C)))
+  eng.run(_zipf_trace(cfg, n=4, n_corpora=1, seed=23))
+  assert eng.corpus_cache.stats()["misses"] == 1
+  eng.reset()
+  assert eng.corpus_cache.stats() == {
+      "hits": 0, "misses": 0, "delta_hits": 0, "evictions": 0,
+      "entries": 1, "bytes": eng.corpus_cache.nbytes, "hit_rate": 0.0}
+  eng.run(_zipf_trace(cfg, n=4, n_corpora=1, seed=23))
+  st = eng.corpus_cache.stats()
+  assert st["hits"] == 4 and st["misses"] == 0 and eng.prefills == 0
 
 
 def test_engine_rejects_inapplicable_configs(cfg):

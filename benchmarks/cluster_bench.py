@@ -76,6 +76,13 @@ def _one_point(cfg, *, n_components, skew, policy, rates, n_slots,
       backend=backend)
   rows = {}
   for ri, rate in enumerate(rates):
+    # Seed audit (tests/test_estimator.py's seed-role split): arms that
+    # share a (seed, rate) here see identical arrivals AND identical
+    # modelled service draws — intentional for this bench, whose A/Bs
+    # (hedging, recirculation, faults) are re-priced on the same stored
+    # draws and need bit-identical noise to be exact.  Sweeps comparing
+    # *contracts* must NOT inherit this coupling: pass a per-arm
+    # ``service_seed`` (see benchmarks/accuracy_bench.py).
     s = run_open_loop(eng, rate_per_s=float(rate), duration_s=duration_s,
                       seed=seed * 1000 + ri)
     rows[str(rate)] = {k: round(float(v), 3) for k, v in s.items()

@@ -11,10 +11,12 @@ All five committed baselines regenerate from this one entry point:
   python -m benchmarks.run --serving-only --json BENCH_serving.json
   python -m benchmarks.run --cluster-only --json BENCH_cluster.json
   python -m benchmarks.run --cache-only   --json BENCH_cache.json
+  python -m benchmarks.run --accuracy-only --json BENCH_accuracy.json
 
-(``--serving-only`` / ``--cluster-only`` / ``--cache-only`` pass through
-to ``benchmarks.serving_bench`` / ``benchmarks.cluster_bench`` /
-``benchmarks.cache_bench``; ``--smoke`` forwards too.)  Every JSON
+(``--serving-only`` / ``--cluster-only`` / ``--cache-only`` /
+``--accuracy-only`` pass through to ``benchmarks.serving_bench`` /
+``benchmarks.cluster_bench`` / ``benchmarks.cache_bench`` /
+``benchmarks.accuracy_bench``; ``--smoke`` forwards too.)  Every JSON
 carries ``meta.schema_version`` and the git revision that produced it
 (benchmarks/common.py).
 """
@@ -174,16 +176,21 @@ def main() -> None:
   ap.add_argument("--cache-only", action="store_true",
                   help="pass through to benchmarks.cache_bench "
                        "(BENCH_cache.json baseline)")
+  ap.add_argument("--accuracy-only", action="store_true",
+                  help="pass through to benchmarks.accuracy_bench "
+                       "(BENCH_accuracy.json baseline: estimator "
+                       "calibration + ε-sweep)")
   ap.add_argument("--smoke", action="store_true",
                   help="forwarded to --serving-only / --cluster-only / "
-                       "--cache-only")
+                       "--cache-only / --accuracy-only")
   ap.add_argument("--impl", default=None,
                   choices=["auto", "pallas", "xla", "interpret"],
                   help="forwarded to --serving-only / --cluster-only / "
-                       "--cache-only")
+                       "--cache-only / --accuracy-only")
   args = ap.parse_args()
 
-  if args.serving_only or args.cluster_only or args.cache_only:
+  if (args.serving_only or args.cluster_only or args.cache_only
+      or args.accuracy_only):
     # Dispatch BEFORE anything imports jax: cluster_bench must force the
     # per-component host devices first.
     sub = ["--json", args.json] if args.json else []
@@ -195,6 +202,9 @@ def main() -> None:
     if args.cache_only:
       from benchmarks.cache_bench import main as cache_main
       return cache_main(sub)
+    if args.accuracy_only:
+      from benchmarks.accuracy_bench import main as accuracy_main
+      return accuracy_main(sub)
     from benchmarks.serving_bench import main as serving_main
     return serving_main(sub)
 

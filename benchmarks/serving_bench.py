@@ -56,7 +56,12 @@ def serving_sweep(rates: Sequence[float],
       # Arrival traces are seeded per (policy, rate) run below, so every
       # policy sees the identical trace at each rate and re-running the
       # bench reproduces the same arrivals — JSON diffs across PRs only
-      # reflect code changes, not RNG drift.
+      # reflect code changes, not RNG drift.  Seed audit: these engines
+      # run the single-component path (no backend), so the seed drives
+      # arrivals/prompts only — there is no service-noise RNG to
+      # accidentally share across arms (the seed-reuse bug class;
+      # backend sweeps must pass a per-arm ``service_seed``, see
+      # benchmarks/accuracy_bench.py and tests/test_estimator.py).
       "trace_seed_rule": "seed*1000 + rate_index"}}
   for policy in policies:
     eng = ServingEngine(cfg, EngineConfig(

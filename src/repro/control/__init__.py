@@ -7,8 +7,11 @@ cluster tier and the discrete-event simulator."""
 from repro.control.admission import (AdmissionConfig, AdmissionPolicy,
                                      SLOClass, TokenBucket,
                                      parse_slo_classes)
-from repro.control.policy import (MODE_DROP, MODE_FULL, MODE_STAGE1,
-                                  POLICIES, BudgetController,
+from repro.control.estimator import (AccuracyEstimator, calibration_pairs,
+                                     coverage_profile, isotonic_fit,
+                                     spearman)
+from repro.control.policy import (CONTRACTS, MODE_DROP, MODE_FULL,
+                                  MODE_STAGE1, POLICIES, BudgetController,
                                   DeadlineBudgetPolicy, allocate_budget)
 from repro.control.predictors import (AffinePredictor, EwmaPredictor,
                                       QuantilePredictor, TailTracker,
@@ -17,8 +20,10 @@ from repro.control.recovery import (RetryPolicy, plan_recovery,
                                     realized_recovery)
 
 __all__ = [
-    "MODE_DROP", "MODE_FULL", "MODE_STAGE1", "POLICIES",
+    "CONTRACTS", "MODE_DROP", "MODE_FULL", "MODE_STAGE1", "POLICIES",
     "BudgetController", "DeadlineBudgetPolicy", "allocate_budget",
+    "AccuracyEstimator", "calibration_pairs", "coverage_profile",
+    "isotonic_fit", "spearman",
     "AffinePredictor", "EwmaPredictor", "QuantilePredictor",
     "TailTracker", "make_predictor", "percentile",
     "RetryPolicy", "plan_recovery", "realized_recovery",

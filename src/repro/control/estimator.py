@@ -1,0 +1,300 @@
+"""Online per-request accuracy-loss estimation (DESIGN.md §13).
+
+Every budget decision in the repo used to trade accuracy for latency
+blind: measured loss is only knowable offline against the exact
+baseline.  But AccuracyTrader's own premise — the synopsis identifies
+which parts of the input matter most to a request — already yields the
+raw signals for an *online* estimate, from quantities the fused stage-1
+kernel computes anyway:
+
+  * :func:`coverage_profile` — the cumulative fraction of the stage-1
+    probability mass (``exp(score) · count``, exactly the count-biased
+    weight the synopsis partials carry) covered by the first ``b``
+    clusters in refinement order.  Computed inside the traced step from
+    the stage-1 ``scores`` and ``counts`` — no extra passes over KV.
+  * the raw loss estimate at budget ``b`` is
+    ``floor · (1 - profile[b])``: the stage-1 floor (what the synopsis
+    alone loses) scaled by the mass the refinement did NOT cover.  By
+    construction it is monotone decreasing in covered mass, bounded in
+    [0, 1], equals the floor at zero budget and ~0 at full budget
+    (property-tested in tests/test_estimator.py).
+  * :meth:`AccuracyEstimator.spread_from_profile` — a BlinkDB/Verdict
+    style error-propagation proxy: the unrefined remainder is a sum of
+    per-cluster mass increments, so its standard-error scales like
+    ``residual / sqrt(n_eff)`` with ``n_eff`` the effective count of
+    unrefined clusters (centroid dispersion/counts as variance proxies).
+
+The raw estimate lives on the synopsis' own scale; the **calibration
+layer** (:meth:`AccuracyEstimator.fit`) maps it onto measured loss with
+an isotonic (pool-adjacent-violators) regression — affine below 8 pairs
+— fit from (raw, measured) pairs of a held-out run, and keeps the
+``conf``-quantile of the absolute calibration residuals as the
+confidence-band half-width (widened, never narrowed, by the per-request
+spread proxy).  Rank correlation of the calibrated estimate with
+measured loss is CI-gated (benchmarks/accuracy_bench.py).
+
+Consumed by the two ε-or-deadline serving contracts
+(`repro.control.policy.CONTRACTS`): ``error_bounded`` refines until
+predicted loss ≤ ε and answers early (freeing budget), and
+``deadline_with_bound`` attaches a confidence band to every answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def coverage_profile(scores, counts, rank: str = "score"):
+  """Cumulative covered-mass profile from stage-1 outputs (traced).
+
+  ``scores`` (B, Hkv, M) stage-1 centroid scores (NEG_INF on invalid
+  slots); ``counts`` (B, M) cluster token counts (0 on pads).  Returns
+  (B, M+1) f32: entry ``b`` is the fraction of the total stage-1
+  probability mass covered by the first ``b`` clusters in refinement
+  order — ``rank="score"`` (the single-tier top-k order) or
+  ``rank="mass"`` (the marginal-gain order the cluster frontend's
+  ``alloc="gain"`` refines in).  Per-head profiles are averaged over
+  Hkv.  ``profile[0] == 0`` and ``profile[M] == 1`` whenever any valid
+  mass exists."""
+  import jax.numpy as jnp  # noqa: PLC0415 — keep module import light
+
+  valid = scores > NEG_INF / 2
+  smax = jnp.max(jnp.where(valid, scores, NEG_INF), axis=-1, keepdims=True)
+  smax = jnp.maximum(smax, NEG_INF / 4)          # all-invalid row guard
+  w = jnp.where(valid, jnp.exp(scores - smax), 0.0)
+  w = w * jnp.maximum(counts, 0.0)[:, None, :]
+  key = scores if rank == "score" else w
+  order = jnp.argsort(-key, axis=-1)
+  ws = jnp.take_along_axis(w, order, axis=-1)
+  cum = jnp.cumsum(ws, axis=-1)
+  tot = jnp.maximum(cum[..., -1:], 1e-30)
+  prof = jnp.concatenate(
+      [jnp.zeros_like(cum[..., :1]), cum / tot], axis=-1)
+  return jnp.clip(jnp.mean(prof, axis=1), 0.0, 1.0)       # (B, M+1)
+
+
+def _ranks(x: np.ndarray) -> np.ndarray:
+  """Average ranks (ties share their mean rank), 1-based."""
+  x = np.asarray(x, np.float64)
+  order = np.argsort(x, kind="mergesort")
+  sx = x[order]
+  ranks = np.empty(len(x), np.float64)
+  i = 0
+  while i < len(x):
+    j = i
+    while j + 1 < len(x) and sx[j + 1] == sx[i]:
+      j += 1
+    ranks[order[i:j + 1]] = 0.5 * (i + j) + 1.0
+    i = j + 1
+  return ranks
+
+
+def spearman(a: Sequence[float], b: Sequence[float]) -> float:
+  """Spearman rank correlation (average ranks on ties; no scipy)."""
+  ra, rb = _ranks(np.asarray(a)), _ranks(np.asarray(b))
+  ra = ra - ra.mean()
+  rb = rb - rb.mean()
+  den = float(np.sqrt((ra * ra).sum() * (rb * rb).sum()))
+  if den <= 0.0:
+    return 0.0
+  return float((ra * rb).sum() / den)
+
+
+def isotonic_fit(x, y) -> Tuple[np.ndarray, np.ndarray]:
+  """Monotone non-decreasing least-squares fit of y on x
+  (pool-adjacent-violators).  Returns interpolation knots ``(xk, yk)``
+  with strictly increasing ``xk`` (duplicate x collapse to their block
+  mean) and non-decreasing ``yk``."""
+  x = np.asarray(x, np.float64)
+  y = np.asarray(y, np.float64)
+  order = np.argsort(x, kind="mergesort")
+  xs, ys = x[order], y[order]
+  vals: List[float] = []
+  wts: List[float] = []
+  for yi in ys:
+    vals.append(float(yi))
+    wts.append(1.0)
+    while len(vals) > 1 and vals[-2] > vals[-1]:
+      y2, w2 = vals.pop(), wts.pop()
+      y1, w1 = vals.pop(), wts.pop()
+      vals.append((y1 * w1 + y2 * w2) / (w1 + w2))
+      wts.append(w1 + w2)
+  fitted = np.concatenate(
+      [np.full(int(c), v) for v, c in zip(vals, wts)]) \
+      if vals else np.zeros((0,))
+  ux, inv = np.unique(xs, return_inverse=True)
+  uy = np.array([fitted[inv == i].mean() for i in range(len(ux))])
+  return ux, np.maximum.accumulate(uy)
+
+
+def calibration_pairs(requests) -> Tuple[List[float], List[float]]:
+  """(raw estimate, measured loss) pairs from completed engine requests
+  — the calibration layer's training set.  Only requests that were
+  actually served to completion count (a shed/dropped request's
+  accuracy is a policy artifact, not an estimator target)."""
+  raws, measured = [], []
+  for r in requests:
+    if getattr(r, "est_raw", None) and not r.shed_admission \
+        and not r.dropped:
+      raws.append(float(np.mean(r.est_raw)))
+      measured.append(1.0 - float(r.accuracy))
+  return raws, measured
+
+
+@dataclasses.dataclass
+class AccuracyEstimator:
+  """Per-request online loss estimate + held-out calibration + bands.
+
+  ``floor`` is the stage-1 floor — the loss of the synopsis answer alone
+  (``1 - accuracy_fn(0)``; the paper's ~7 %).  ``conf`` sets both the
+  residual quantile kept as the band half-width and the nominal coverage
+  of :meth:`band`."""
+  floor: float = 0.07
+  conf: float = 0.9
+  _iso_x: Optional[np.ndarray] = dataclasses.field(
+      default=None, repr=False)
+  _iso_y: Optional[np.ndarray] = dataclasses.field(
+      default=None, repr=False)
+  _resid_q: float = dataclasses.field(default=0.0, repr=False)
+
+  @property
+  def calibrated(self) -> bool:
+    return self._iso_x is not None
+
+  # -- raw signals -----------------------------------------------------------
+  # The raw-signal and contract methods below run on the HOST once per
+  # slot per decode step under the non-deadline contracts, so they avoid
+  # numpy where scalar math does (tiny-array numpy calls are dominated
+  # by dispatch overhead); the accuracy bench guards the whole estimator
+  # at <5% of the measured step wall.
+  def raw_loss(self, profile, budget: int) -> float:
+    """Raw (uncalibrated) predicted loss at ``budget`` refined clusters:
+    the stage-1 floor scaled by the uncovered mass.  Monotone decreasing
+    in covered mass, in [0, 1], ``floor`` at budget 0, ~0 at full."""
+    p = profile if isinstance(profile, np.ndarray) \
+        else np.asarray(profile, np.float64)
+    idx = min(max(int(budget), 0), p.shape[-1] - 1)
+    return min(max(self.floor * (1.0 - float(p[..., idx])), 0.0), 1.0)
+
+  def spread_from_profile(self, profile, budget: int) -> float:
+    """Verdict-style error propagation on the unrefined remainder: the
+    residual is a sum of per-cluster mass increments, so its
+    standard-error proxy is ``floor · residual / sqrt(n_eff)`` with
+    ``n_eff = (Σd)² / Σd²`` the effective number of unrefined clusters
+    (one dominant straggler cluster -> n_eff ~ 1 -> wide band; many
+    small ones -> n_eff ~ count -> tight band)."""
+    p = profile if isinstance(profile, np.ndarray) \
+        else np.asarray(profile, np.float64)
+    idx = min(max(int(budget), 0), p.shape[-1] - 1)
+    tail = p[idx:]
+    d = tail[1:] - tail[:-1]
+    tot = float(tail[-1] - tail[0])
+    if tot <= 0.0:
+      return 0.0
+    n_eff = tot * tot / max(float(d @ d), 1e-30)
+    return self.floor * tot / max(math.sqrt(n_eff), 1.0)
+
+  # -- calibration -----------------------------------------------------------
+  def fit(self, raws, measured) -> Dict[str, float]:
+    """Fit the calibration layer from (raw, measured-loss) pairs:
+    isotonic with >= 8 pairs, affine (slope clipped non-negative) below,
+    identity when the raw signal is degenerate.  Stores the ``conf``
+    quantile of |residual| as the band half-width — estimated on a
+    HELD-OUT interleaved quarter of the pairs when there are enough
+    (in-sample isotonic residuals are biased low: PAVA interpolates the
+    noise, so bands sized on them under-cover; property-tested in
+    tests/test_estimator.py).  Returns fit stats including the Spearman
+    rank correlation the CI gates on."""
+    raws = np.asarray(raws, np.float64)
+    meas = np.clip(np.asarray(measured, np.float64), 0.0, 1.0)
+    if len(raws) >= 2 and float(np.ptp(raws)) > 1e-12:
+      if len(raws) >= 8:
+        resid = self._holdout_resid(raws, meas) if len(raws) >= 16 \
+            else None
+        self._iso_x, self._iso_y = isotonic_fit(raws, meas)
+        if resid is None:
+          resid = np.abs(self.predict(raws) - meas)
+      else:
+        slope, icept = np.polyfit(raws, meas, 1)
+        slope = max(float(slope), 0.0)
+        lo, hi = float(raws.min()), float(raws.max())
+        self._iso_x = np.array([lo, hi])
+        self._iso_y = np.clip(
+            np.array([icept + slope * lo, icept + slope * hi]), 0.0, 1.0)
+        resid = np.abs(self.predict(raws) - meas)
+    else:
+      resid = np.abs(self.predict(raws) - meas) if len(raws) \
+          else np.zeros(1)
+    self._resid_q = float(np.quantile(resid, self.conf))
+    return {"n": int(len(raws)),
+            "spearman": spearman(raws, meas) if len(raws) > 1 else 0.0,
+            "resid_q": self._resid_q}
+
+  @staticmethod
+  def _holdout_resid(raws, meas) -> np.ndarray:
+    """Honest band residuals: fit isotonic on an interleaved 3/4 of the
+    raw-sorted pairs, score the held-out quarter.  Deterministic (no
+    RNG) and rank-balanced — every region of the raw axis contributes
+    both train and held-out points."""
+    order = np.argsort(raws, kind="stable")
+    held = np.zeros(len(raws), bool)
+    held[order[::4]] = True
+    kx, ky = isotonic_fit(raws[~held], meas[~held])
+    pred = np.clip(np.interp(raws[held], kx, ky), 0.0, 1.0)
+    return np.abs(pred - meas[held])
+
+  def predict(self, raw):
+    """Calibrated loss prediction (identity before :meth:`fit`)."""
+    raw = np.asarray(raw, np.float64)
+    if not self.calibrated or len(self._iso_x) < 2:
+      out = np.clip(raw, 0.0, 1.0)
+    else:
+      out = np.clip(np.interp(raw, self._iso_x, self._iso_y), 0.0, 1.0)
+    return float(out) if out.ndim == 0 else out
+
+  def band(self, raw, spread: float = 0.0) -> Tuple[float, float]:
+    """Confidence band around the calibrated prediction: the calibration
+    residual ``conf``-quantile, widened (never narrowed) by the
+    per-request spread proxy.  Uncalibrated, the half-width degrades to
+    half the stage-1 floor — the widest honest claim."""
+    pred = float(self.predict(raw))
+    half = (self._resid_q if self.calibrated else 0.5 * self.floor) \
+        + max(float(spread), 0.0)
+    return max(pred - half, 0.0), min(pred + half, 1.0)
+
+  # -- contract support ------------------------------------------------------
+  def bucket_for_epsilon(self, profile, buckets: Sequence[int],
+                         epsilon: float) -> int:
+    """Smallest budget bucket whose calibrated predicted loss is <= ε.
+    ε <= 0 demands exactness, which no *estimate* can certify — it
+    returns the largest bucket (full refinement) by definition, making
+    ``error_bounded`` at ε=0 reproduce the exact path.  Predicted loss
+    is monotone non-increasing in the bucket (isotonic calibration of a
+    coverage-monotone raw), so the first satisfying bucket is minimal;
+    if none satisfies, the largest bucket is returned.
+
+    Vectorized over the bucket set — this runs on the host once per slot
+    per decode step under ``error_bounded``, and the accuracy bench
+    guards the whole estimator at <5% of the step wall."""
+    if epsilon <= 0.0:
+      return int(buckets[-1])
+    p = profile if isinstance(profile, np.ndarray) \
+        else np.asarray(profile, np.float64)
+    last = p.shape[-1] - 1
+    idx = [min(max(int(b), 0), last) for b in buckets]
+    # raw lives in [0, floor] for a clipped coverage profile; the knots
+    # are clipped to [0, 1] at fit time, so no re-clip is needed here.
+    raw = self.floor * (1.0 - p[..., idx])
+    if self.calibrated and len(self._iso_x) >= 2:
+      pred = np.interp(raw, self._iso_x, self._iso_y)
+    else:
+      pred = raw
+    for i, ok in enumerate(pred <= epsilon):
+      if ok:
+        return int(buckets[i])
+    return int(buckets[-1])

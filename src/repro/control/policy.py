@@ -37,6 +37,16 @@ MODE_DROP, MODE_STAGE1, MODE_FULL = 0, 1, 2
 
 POLICIES = ("basic", "partial", "accuracytrader", "fixed")
 
+# Serving contracts (DESIGN.md §13) — orthogonal to the POLICIES axis:
+#   "deadline"            — the legacy behavior (whatever the policy says).
+#   "error_bounded"       — BlinkDB-style ε-or-deadline: refine until the
+#                           online estimator predicts loss <= ε, answer
+#                           early, and the freed budget recirculates to
+#                           requests that need it.
+#   "deadline_with_bound" — legacy budgets, but every answer carries a
+#                           calibrated confidence band on its loss.
+CONTRACTS = ("deadline", "error_bounded", "deadline_with_bound")
+
 
 def allocate_budget(mass, total: int, caps, recirculate: bool = True):
   """Split ``total`` refinement clusters over components ∝ relevance mass.
@@ -156,10 +166,20 @@ class DeadlineBudgetPolicy:
   predictor: AffinePredictor = dataclasses.field(
       default_factory=AffinePredictor)
   fixed_budget: int = 0
+  # ε-or-deadline serving contracts (DESIGN.md §13).  ``estimator`` is an
+  # `repro.control.estimator.AccuracyEstimator` (duck-typed: only
+  # ``bucket_for_epsilon`` is called here); required for error_bounded.
+  contract: str = "deadline"
+  epsilon: float = 0.0
+  estimator: Optional[object] = None
 
   def __post_init__(self):
     if self.policy not in POLICIES:
       raise ValueError(f"policy {self.policy!r} not in {POLICIES}")
+    if self.contract not in CONTRACTS:
+      raise ValueError(f"contract {self.contract!r} not in {CONTRACTS}")
+    if self.contract == "error_bounded" and self.estimator is None:
+      raise ValueError("contract='error_bounded' needs an estimator")
     self.controller = BudgetController(
         self.predictor, buckets=self.buckets, i_max_cap=self.i_max_cap)
 
@@ -169,6 +189,23 @@ class DeadlineBudgetPolicy:
     if self.policy == "fixed":
       return self.fixed_budget
     return self.controller.budget_for(deadline, queue_delay)
+
+  def budget_for_contract(self, deadline: float, queue_delay: float = 0.0,
+                          profiles: Sequence = ()) -> Tuple[int, int]:
+    """ε-or-deadline composition (DESIGN.md §13): the step budget is the
+    min of the policy's deadline-driven budget and — under the
+    ``error_bounded`` contract — the smallest bucket the online
+    estimator predicts meets ε for EVERY resident request's coverage
+    profile (the most demanding request binds; a step is shared).
+    Returns ``(granted, base)`` so the caller can account the freed
+    budget ``base - granted`` that recirculates to other work."""
+    base = self.budget_for(deadline, queue_delay)
+    if self.contract != "error_bounded" or not len(profiles):
+      return base, base
+    need = max(self.estimator.bucket_for_epsilon(p, self.buckets,
+                                                 self.epsilon)
+               for p in profiles)
+    return min(need, base), base
 
   def observe(self, budget: int, latency: float) -> None:
     self.predictor.observe(budget, latency)

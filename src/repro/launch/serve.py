@@ -77,11 +77,13 @@ def _engine_main(args):
       n_slots=args.n_slots, prompt_len=prompt_len, max_new_tokens=max_new,
       deadline_ms=args.deadline_ms, policy=args.policy, impl=args.impl,
       predictor=args.predictor or "affine", admission=admission,
-      cache=cache),
+      cache=cache, contract=args.contract, epsilon=args.epsilon),
       backend=backend)
   print(f"[engine] impl={eng.impl!r} policy={args.policy} "
         f"slots={args.n_slots} prompt={prompt_len} tokens={max_new} "
         f"M={eng.M} buckets={eng.buckets} deadline={args.deadline_ms}ms"
+        + (f" contract={args.contract} eps={args.epsilon}"
+           if args.contract != "deadline" else "")
         + (f" cache={args.cache_capacity}" if cache is not None else ""))
   if backend is not None:
     import jax
@@ -117,7 +119,11 @@ def _engine_main(args):
           f"miss={s['deadline_miss_pct']:5.1f}% "
           f"budget={s['mean_budget']:.2f}"
         + (f" shed={s['shed_pct']:.1f}% goodput={s['goodput_per_s']:.1f}/s"
-           if "shed_pct" in s else ""))
+           if "shed_pct" in s else "")
+        + (f" pred={s.get('pred_loss_mean', 0.0):.4f} "
+           f"band_cov={s.get('band_cover_pct', 0.0):.0f}% "
+           f"freed={s.get('freed_budget_mean', 0.0):.2f}"
+           if args.contract != "deadline" else ""))
     if backend is not None and getattr(backend, "fault_stats", None) \
         and any(backend.fault_stats.values()):
       print(f"  [faults] {backend.fault_stats}")
@@ -161,6 +167,15 @@ def main():
                        "synopsis.impl (auto = Pallas kernels on TPU, XLA "
                        "reference elsewhere)")
   ap.add_argument("--deadline-ms", type=float, default=50.0)
+  ap.add_argument("--contract", default="deadline",
+                  choices=["deadline", "error_bounded",
+                           "deadline_with_bound"],
+                  help="serving contract (DESIGN.md §13): error_bounded "
+                       "answers early once the online estimator predicts "
+                       "loss <= --epsilon; deadline_with_bound attaches "
+                       "a calibrated loss band to every answer")
+  ap.add_argument("--epsilon", type=float, default=0.02,
+                  help="error_bounded loss target ε (0 = exact path)")
   ap.add_argument("--engine", action="store_true",
                   help="run the deadline-driven continuous-batching "
                        "engine over an arrival trace (DESIGN.md §8) "
@@ -174,7 +189,8 @@ def main():
   ap.add_argument("--skew", type=float, default=0.0,
                   help="Zipf exponent over component corpus shares "
                        "(hot components own more clusters)")
-  ap.add_argument("--alloc", default="mass", choices=["mass", "topk"],
+  ap.add_argument("--alloc", default="mass",
+                  choices=["mass", "topk", "gain"],
                   help="frontend refinement-budget allocation across "
                        "components: proportional to synopsis relevance "
                        "mass, or pure global top-k")

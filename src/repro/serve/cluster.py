@@ -70,6 +70,7 @@ import numpy as np
 from repro.control import (MODE_DROP, MODE_FULL, MODE_STAGE1, RetryPolicy,
                            allocate_budget, make_predictor,
                            realized_recovery)
+from repro.control.estimator import coverage_profile
 from repro.dist import sharding as shd
 from repro.dist.topology import ComponentTopology, make_component_mesh
 from repro.kernels import ops
@@ -81,7 +82,7 @@ NEG_INF = ops.NEG_INF
 
 __all__ = ["MODE_DROP", "MODE_STAGE1", "MODE_FULL", "allocate_budget",
            "ClusterConfig", "ClusterStepBackend", "ClusterMeasuredExport",
-           "make_cluster_attention"]
+           "make_cluster_attention", "gain_rank", "gain_budgets"]
 
 
 @dataclasses.dataclass
@@ -89,7 +90,10 @@ class ClusterConfig:
   """Scatter-gather tier knobs (model shape comes from the ModelConfig)."""
   n_components: int = 4
   skew: float = 0.0            # Zipf exponent over component corpus shares
-  alloc: str = "mass"          # "mass" (∝ relevance mass) | "topk" (global)
+  alloc: str = "mass"          # "mass" (∝ relevance mass) | "topk" (global
+                               # by raw score) | "gain" (global by marginal
+                               # accuracy gain: count-biased score,
+                               # DESIGN.md §13)
   route: str = "fixed"         # per-slot cluster routing; "rotate" balances
   replicas: int = 1            # shard copies; R >= 2 enables hedged reissue
   predictor: str = "ewma"      # control-plane wall predictor ("quantile:90"
@@ -139,14 +143,46 @@ def _frontend_rank(sc_all: jax.Array, i_max: int):
   return gsel, mass
 
 
+def gain_rank(sc_all: jax.Array, counts: jax.Array, i_max: int):
+  """Marginal-accuracy-gain global ranking (DESIGN.md §13).
+
+  Refining cluster m removes its synopsis approximation error, and the
+  share of the answer it owns — hence the loss the refinement recovers —
+  is its stage-1 probability mass ``exp(score_m) · count_m``.  Greedy
+  top-k on ``score + log(count)`` is therefore the budget split that
+  maximizes the predicted covered mass per cluster refined, vs "mass"
+  allocation which spreads budget ∝ per-*component* totals even when one
+  component's clusters individually dominate.  ``sc_all`` (B, Hkv, N,
+  Mp) padded scores, ``counts`` (B, N, Mp).  Returns flat global ids
+  (B, Hkv, K) with -1 pads — a drop-in for `_frontend_rank`'s gsel."""
+  B, Hkv, N, Mp = sc_all.shape
+  bias = jnp.log(jnp.maximum(counts, 1e-30))[:, None, :, :]
+  g = jnp.where(sc_all > NEG_INF / 2, sc_all + bias, NEG_INF)
+  flat = g.reshape(B, Hkv, N * Mp)
+  K = min(i_max, N * Mp)
+  tsc, gsel = jax.lax.top_k(flat, K)
+  return jnp.where(tsc > NEG_INF / 2, gsel.astype(jnp.int32), -1)
+
+
+def gain_budgets(gsel: jax.Array, Mp: int, N: int) -> jax.Array:
+  """Per-component budget vector implied by a global selection: how many
+  of the selected flat ids land on each component.  Conserves the spend
+  by construction — ``sum == number of non-pad selections`` — which the
+  conservation tests check against `allocate_budget`'s invariant."""
+  comp_of = jnp.where(gsel >= 0, gsel // Mp, -1)
+  onehot = comp_of[..., None] == jnp.arange(N)[None, None, None, :]
+  return jnp.sum(onehot.astype(jnp.int32), axis=2)          # (B, Hkv, N)
+
+
 def _select_local(c, sc_local, gsel, budgets, alloc, i_max, Mp):
   """Per-component stage-2 selection (local cluster ids, -1 pads).
 
-  ``alloc="topk"``: the component refines exactly the globally top-ranked
-  clusters it owns (two-level top-k — equals the single-component
-  reference).  ``alloc="mass"``: the component refines its own top-scored
-  clusters up to the budget the frontend allocated it."""
-  if alloc == "topk":
+  ``alloc="topk"`` / ``alloc="gain"``: the component refines exactly the
+  globally top-ranked clusters it owns (two-level top-k — "topk" equals
+  the single-component reference; "gain" ranks by count-biased score,
+  see :func:`gain_rank`).  ``alloc="mass"``: the component refines its
+  own top-scored clusters up to the budget the frontend allocated it."""
+  if alloc in ("topk", "gain"):
     comp_of = jnp.where(gsel >= 0, gsel // Mp, -1)
     return jnp.where(comp_of == c, gsel % Mp, -1).astype(jnp.int32)
   Kc = min(i_max, Mp)
@@ -189,7 +225,8 @@ def _extras_partial(q, csl, self_kv, *, sm_scale, cap, impl):
 
 def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
                            mesh=None, recirculate: bool = True,
-                           mode_caps: bool = False):
+                           mode_caps: bool = False,
+                           telemetry: bool = False):
   """Returns ``attention_fn(q, cache_sl, ...) -> (ctx, aux)`` over the
   component-partitioned cache layout (DESIGN.md §9):
 
@@ -199,7 +236,11 @@ def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
     fe_mode      (N,) int32                per-component gather mode
 
   ``aux`` carries per-layer telemetry: ``fe_cover`` (N,) mean refined
-  clusters per component and ``fe_mass`` (N,) mean relevance-mass share.
+  clusters per component and ``fe_mass`` (N,) mean relevance-mass share;
+  with ``telemetry=True`` (the ε-or-deadline contracts, DESIGN.md §13)
+  also ``est_profile`` (B, N*Mp+1) — the stage-1 coverage profile over
+  the GLOBAL cluster ranking, the online loss estimator's raw signal.
+  Off by default so contract="deadline" step programs stay bit-identical.
 
   ``mode_caps`` (resilience, DESIGN.md §11): a component gathered as
   STAGE1/DROP never folds its refinement, so budget allocated to it is
@@ -217,17 +258,18 @@ def make_cluster_attention(topo: ComponentTopology, alloc: str = "mass",
           q, csl, topo, alloc, mesh, i_max=i_max,
           cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
           self_kv=self_kv, impl=impl, recirculate=recirculate,
-          mode_caps=mode_caps)
+          mode_caps=mode_caps, telemetry=telemetry)
     return _cluster_stacked(
         q, csl, topo, alloc, i_max=i_max, cluster_size=cluster_size,
         sm_scale=sm_scale, cap=cap, self_kv=self_kv, impl=impl,
-        recirculate=recirculate, mode_caps=mode_caps)
+        recirculate=recirculate, mode_caps=mode_caps, telemetry=telemetry)
 
   return attention
 
 
 def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
-                     cap, self_kv, impl, recirculate=True, mode_caps=False):
+                     cap, self_kv, impl, recirculate=True, mode_caps=False,
+                     telemetry=False):
   """Single-device execution: the N components run as an unrolled loop
   over the component axis — identical math to the shard_map body."""
   k, v = csl["k"], csl["v"]
@@ -244,6 +286,8 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
     psyns.append(p_c)
   sc_all = jnp.stack(scs, axis=2)                         # (B, Hkv, N, Mp)
   gsel, mass = _frontend_rank(sc_all, i_max)
+  if gsel is not None and alloc == "gain":
+    gsel = gain_rank(sc_all, counts, i_max)
   budgets = None
   if gsel is not None and alloc == "mass":
     caps = jnp.sum(sc_all > NEG_INF / 2, axis=-1)         # (B, Hkv, N)
@@ -275,12 +319,18 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
   mass_frac = mass / jnp.maximum(jnp.sum(mass, -1, keepdims=True), 1e-30)
   aux = {"fe_cover": jnp.stack(cover),
          "fe_mass": jnp.mean(mass_frac, axis=(0, 1))}
+  if telemetry:
+    B = sc_all.shape[0]
+    aux["est_profile"] = coverage_profile(
+        sc_all.reshape(B, sc_all.shape[1], N * Mp),
+        counts.reshape(B, N * Mp),
+        rank="mass" if alloc == "gain" else "score")
   return acc[0], aux
 
 
 def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
                      sm_scale, cap, self_kv, impl, recirculate=True,
-                     mode_caps=False):
+                     mode_caps=False, telemetry=False):
   """shard_map execution over the ``("component",)`` mesh: every device is
   one component; the score all-gather + replicated frontend logic is the
   aggregator, the partials all-gather + fold is the result composer."""
@@ -315,6 +365,14 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
       B, Hkv = sc.shape[:2]
       sc_all = sc.reshape(B, Hkv, N, Mp)
       gsel, mass = _frontend_rank(sc_all, i_max)
+      counts_g = None
+      if alloc == "gain" or telemetry:
+        # One extra small (B, Mp) all-gather: the global counts the
+        # count-biased gain ranking and the coverage profile both need.
+        counts_g = jax.lax.all_gather(cache["counts"][:, 0], "component",
+                                      axis=1, tiled=True)    # (B, N*Mp)
+      if gsel is not None and alloc == "gain":
+        gsel = gain_rank(sc_all, counts_g.reshape(B, N, Mp), i_max)
 
       if gsel is None:
         p_full = p_syn
@@ -352,13 +410,22 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
       cover = jax.lax.all_gather(cover_l, "component", axis=0, tiled=True)
       mass_frac = mass / jnp.maximum(jnp.sum(mass, -1, keepdims=True),
                                      1e-30)
-      return acc[0], cover, jnp.mean(mass_frac, axis=(0, 1))
+      outs = (acc[0], cover, jnp.mean(mass_frac, axis=(0, 1)))
+      if telemetry:
+        outs = outs + (coverage_profile(
+            sc_all.reshape(B, Hkv, N * Mp), counts_g,
+            rank="mass" if alloc == "gain" else "score"),)
+      return outs
 
-  out, cover, massv = shd.shard_map(
+  n_out = 4 if telemetry else 3
+  res = shd.shard_map(
       body, mesh=mesh, in_specs=(q_spec, specs, self_spec),
-      out_specs=(P(), P(), P()), axis_names=("component",),
+      out_specs=(P(),) * n_out, axis_names=("component",),
       check_vma=False)(q, csl, self_kv)
-  return out, {"fe_cover": cover, "fe_mass": massv}
+  aux = {"fe_cover": res[1], "fe_mass": res[2]}
+  if telemetry:
+    aux["est_profile"] = res[3]
+  return res[0], aux
 
 
 # ---------------------------------------------------------------------------
@@ -414,8 +481,9 @@ class ClusterStepBackend:
     self.n_slots = engine.ecfg.n_slots
     self.prompt_len = engine.ecfg.prompt_len
     self.accuracy_fn = engine.accuracy_fn
-    if cc.alloc not in ("mass", "topk"):
-      raise ValueError(f"alloc {cc.alloc!r} not in ('mass', 'topk')")
+    if cc.alloc not in ("mass", "topk", "gain"):
+      raise ValueError(
+          f"alloc {cc.alloc!r} not in ('mass', 'topk', 'gain')")
     if cc.route not in ("fixed", "rotate"):
       raise ValueError(f"route {cc.route!r} not in ('fixed', 'rotate')")
     self.topo = ComponentTopology.plan(self.M, cc.n_components,
@@ -454,10 +522,15 @@ class ClusterStepBackend:
     self.step_idx = 0
     self.fault_stats = {"crash_steps": 0, "retries": 0,
                         "stage1_fallbacks": 0, "dropped": 0}
+    # ε-or-deadline contracts (DESIGN.md §13): the coverage-profile
+    # telemetry the online estimator reads.  Gated on the engine's
+    # contract so contract="deadline" step programs stay bit-identical.
+    self.telemetry = engine.ecfg.contract != "deadline"
     self.attention = make_cluster_attention(self.topo, alloc=cc.alloc,
                                             mesh=self.mesh,
                                             recirculate=cc.recirculate,
-                                            mode_caps=self.resilient)
+                                            mode_caps=self.resilient,
+                                            telemetry=self.telemetry)
     # Per-component corpus share: the latency/accuracy attribution
     # weights.  Rotation mixes ownership across slots via shifts
     # 0..n_slots-1, so the attribution is the mean of exactly those

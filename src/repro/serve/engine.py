@@ -51,9 +51,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.control import (POLICIES, AdmissionConfig, AdmissionPolicy,
+from repro.control import (CONTRACTS, POLICIES, AccuracyEstimator,
+                           AdmissionConfig, AdmissionPolicy,
                            DeadlineBudgetPolicy, TailTracker,
                            make_predictor)
+from repro.control.estimator import coverage_profile
+from repro.kernels import ops
 from repro.models import common as cm
 from repro.models import transformer as tf
 from repro.serve import corpus_cache as ccache
@@ -100,6 +103,16 @@ class EngineConfig:
   # KV delta.  None (or capacity 0) = disabled, bit-identical to the
   # pre-cache admission path.
   cache: Optional[CacheConfig] = None
+  # ε-or-deadline serving contracts (DESIGN.md §13, `repro.control`
+  # CONTRACTS): "deadline" is the legacy behavior (no estimator
+  # telemetry, bit-identical to the pre-contract engine);
+  # "error_bounded" refines until the online estimator predicts loss
+  # <= epsilon and answers early; "deadline_with_bound" keeps the
+  # legacy budgets but attaches a calibrated loss confidence band to
+  # every answer.
+  contract: str = "deadline"
+  epsilon: float = 0.02
+  band_conf: float = 0.9           # nominal coverage of the loss bands
 
 
 @dataclasses.dataclass
@@ -132,6 +145,14 @@ class EngineRequest:
   # Per-step dropped shard-mass fraction from a cluster backend (0 on
   # every step = the request's full corpus answered: available).
   step_drop: List[float] = dataclasses.field(default_factory=list)
+  # -- serving contracts (DESIGN.md §13) -----------------------------------
+  # Per-step raw online loss estimates + Verdict-style spread proxies
+  # (empty under contract="deadline", where no telemetry runs).
+  est_raw: List[float] = dataclasses.field(default_factory=list)
+  est_spread: List[float] = dataclasses.field(default_factory=list)
+  pred_loss: float = -1.0          # calibrated predicted loss at retire
+  band_lo: float = 0.0             # loss confidence band (deadline_with_
+  band_hi: float = 0.0             # bound / error_bounded)
 
   @property
   def latency_ms(self) -> float:
@@ -158,7 +179,7 @@ class ServingEngine:
   def __init__(self, cfg: cm.ModelConfig, ecfg: EngineConfig,
                params=None,
                accuracy_fn: Optional[Callable[[float], float]] = None,
-               backend=None):
+               backend=None, estimator: Optional[AccuracyEstimator] = None):
     if kvc.n_attn_positions(cfg) == 0:
       raise ValueError(f"{cfg.name}: no attention positions — nothing to "
                        "synopsize (DESIGN.md §5); use mode='exact' serving")
@@ -192,6 +213,23 @@ class ServingEngine:
     if ecfg.policy == "fixed" and ecfg.fixed_budget not in buckets:
       self.buckets = tuple(sorted(set(buckets) | {ecfg.fixed_budget}))
     self.accuracy_fn = accuracy_fn or _default_concentration
+    # ε-or-deadline serving contracts (DESIGN.md §13): the online
+    # accuracy estimator and the step telemetry feeding it.  One
+    # estimator instance per engine unless the caller shares one (the
+    # calibration bench fits a single estimator across fixed-budget
+    # arms and then serves error_bounded from the same knots).
+    if ecfg.contract not in CONTRACTS:
+      raise ValueError(f"contract {ecfg.contract!r} not in {CONTRACTS}")
+    self.contract = ecfg.contract
+    self.estimator = estimator if estimator is not None else \
+        AccuracyEstimator(
+            floor=max(1.0 - float(self.accuracy_fn(0.0)), 0.0),
+            conf=ecfg.band_conf)
+    # Telemetry (the stage-1 coverage profile threaded out of the step)
+    # only runs under the new contracts: contract="deadline" keeps every
+    # legacy step program bit-identical to the pre-contract engine.
+    self._telemetry = self.contract != "deadline"
+    self._profile_prior: Optional[np.ndarray] = None
     # Optional scatter-gather step backend (repro.serve.cluster,
     # DESIGN.md §9): owns the component cache layout, the per-step gather
     # plan and the measured per-component latency attribution.  Bound
@@ -273,7 +311,9 @@ class ServingEngine:
       pred = make_predictor(e.predictor, **kw)
     return DeadlineBudgetPolicy(
         policy=e.policy, buckets=self.buckets, i_max_cap=self.M,
-        predictor=pred, fixed_budget=e.fixed_budget)
+        predictor=pred, fixed_budget=e.fixed_budget,
+        contract=self.contract, epsilon=e.epsilon,
+        estimator=self.estimator)
 
   # -- state ----------------------------------------------------------------
   def reset(self, reset_controller: bool = False) -> None:
@@ -301,6 +341,10 @@ class ServingEngine:
         self.corpus_cache.release(key)
     self._slot_entry = [None] * e.n_slots
     self.corpus_cache.reset_stats()
+    # Per-window contract telemetry resets; the estimator's calibration
+    # and the coverage-profile prior persist like the latency model.
+    self._slot_profile: List[Optional[np.ndarray]] = [None] * e.n_slots
+    self._freed_log: List[int] = []
     if getattr(self, "admission", None) is not None:
       self.admission.reset()
     if reset_controller:
@@ -311,13 +355,45 @@ class ServingEngine:
       if self.backend is not None:
         self._step_cache[budget] = self.backend.step_fn(budget)
       else:
+        attn = self._telemetry_attention if self._telemetry else None
         self._step_cache[budget] = jax.jit(make_serve_step(
-            self.cfg, mode="synopsis", i_max=budget, impl=self.impl))
+            self.cfg, mode="synopsis", i_max=budget, impl=self.impl,
+            attention_fn=attn))
     return self._step_cache[budget]
+
+  def _telemetry_attention(self, q, csl, *, i_max, cluster_size, sm_scale,
+                           cap=None, self_kv=None, impl="xla"):
+    """Single-component synopsis decode attention with the stage-1
+    coverage profile (DESIGN.md §13) threaded out as aux telemetry.
+    Mirrors `ops.synopsis_cache_attention` stage for stage — same
+    kernels, same selection, same merge — so tokens stay bit-identical
+    to the non-telemetry path (ε=0 parity is asserted in
+    tests/test_estimator.py); the profile reuses the stage-1 scores the
+    step already computed, no extra passes over KV."""
+    B = q.shape[0]
+    Hkv, M = csl["k_syn"].shape[1], csl["k_syn"].shape[2]
+    scores, p_syn = ops.synopsis_stage1(
+        q, csl["k_syn"], csl["v_syn"], csl["counts"], sm_scale=sm_scale,
+        cap=cap, impl=impl)
+    if i_max > 0:
+      _, selected = jax.lax.top_k(scores, min(i_max, M))
+      selected = selected.astype(jnp.int32)
+    else:
+      selected = jnp.full((B, Hkv, 1), -1, jnp.int32)
+    extras = ops.build_extras(csl.get("recent_k"), csl.get("recent_v"),
+                              csl.get("recent_len"), self_kv)
+    p_ref = ops.refine_stage2(
+        q, csl["k"], csl["v"], selected, csl["k_syn"], csl["v_syn"],
+        csl["counts"], cluster_size=cluster_size, sm_scale=sm_scale,
+        cap=cap, impl=impl, extras=extras)
+    out, _, _ = ops.merge_partials(p_syn, p_ref)
+    return out, {"est_profile": coverage_profile(scores, csl["counts"])}
 
   def _warm_buckets(self) -> Sequence[int]:
     p = self.ecfg.policy
-    if p == "accuracytrader":
+    # error_bounded can answer early at ANY bucket (the estimator's
+    # min with the policy base), so every bucket's program must be warm.
+    if p == "accuracytrader" or self.contract == "error_bounded":
       return self.buckets
     if p == "fixed":
       return (self.ecfg.fixed_budget,)
@@ -440,6 +516,7 @@ class ServingEngine:
       self._admit_ms_ewma = dt if self._admit_ms_ewma == 0.0 \
           else 0.7 * self._admit_ms_ewma + 0.3 * dt
     req.tokens.append(int(first[0]))
+    self._slot_profile[slot] = None
     self.slots[slot] = _Slot(req, req.max_new_tokens)
     self.events.append(("admit", req.rid, slot, self.now_ms))
 
@@ -456,7 +533,27 @@ class ServingEngine:
           [self._abs_deadline(self.slots[i].req) - self.now_ms
            for i in active] +
           [self._abs_deadline(r) - self.now_ms for r in extra])
+    if self.contract == "error_bounded":
+      granted, base = self.controller.budget_for_contract(
+          max(remaining, 0.0),
+          profiles=[self._request_profile(i) for i in active])
+      if not self._warming:
+        self._freed_log.append(base - granted)
+      return granted
     return self.controller.budget_for(max(remaining, 0.0))
+
+  def _request_profile(self, slot: int) -> np.ndarray:
+    """Latest measured coverage profile for the request in ``slot``: its
+    own last step's profile when one exists, else the EWMA prior over
+    recent steps (a freshly admitted request has not scored its synopsis
+    yet), else the uniform profile — every cluster equally useful, the
+    most conservative monotone assumption."""
+    p = self._slot_profile[slot]
+    if p is not None:
+      return p
+    if self._profile_prior is not None:
+      return self._profile_prior
+    return np.linspace(0.0, 1.0, self.M + 1)
 
   def _deadline_of(self, req: EngineRequest) -> float:
     """Per-request deadline: explicit override > SLO class (admission
@@ -510,6 +607,14 @@ class ServingEngine:
       # clusters exactly plus the synopsis estimate of the rest.
       fr = [min(b, self.M) / self.M for b in req.budgets] or [0.0]
       req.accuracy = float(np.mean([self.accuracy_fn(f) for f in fr]))
+    # Contract outputs (DESIGN.md §13): the calibrated loss prediction
+    # and its confidence band, from the request's own step telemetry.
+    if self._telemetry and req.est_raw:
+      raw = float(np.mean(req.est_raw))
+      req.pred_loss = float(self.estimator.predict(raw))
+      req.band_lo, req.band_hi = self.estimator.band(
+          raw, spread=float(np.mean(req.est_spread)))
+    self._slot_profile[slot] = None
     self.slots[slot] = None
     self.completed.append(req)
     self.events.append(("retire", req.rid, slot, self.now_ms))
@@ -578,6 +683,19 @@ class ServingEngine:
         and write_cache is None and self.backend is None:
       self.controller.observe(budget, dt)
     self.step_log.append((budget, dt, len(active)))
+    # Contract telemetry (DESIGN.md §13): the per-layer coverage
+    # profiles threaded out of the scan, averaged over layers — this
+    # step's measured signal for next step's ε decision and for each
+    # request's running raw-loss estimate.
+    prof = None
+    if self._telemetry and "est_profile" in st:
+      prof = np.asarray(st["est_profile"], np.float64)
+      prof = prof.reshape(-1, self.ecfg.n_slots, prof.shape[-1]).mean(0)
+      for i in active:
+        self._slot_profile[i] = prof[i]
+      mean_prof = prof[list(active)].mean(0)
+      self._profile_prior = mean_prof if self._profile_prior is None \
+          else 0.7 * self._profile_prior + 0.3 * mean_prof
     toks = np.asarray(new_tok)
     for i in active:
       s = self.slots[i]
@@ -587,6 +705,10 @@ class ServingEngine:
         s.req.step_acc.append(step_acc)
       if step_drop is not None:
         s.req.step_drop.append(step_drop)
+      if prof is not None:
+        s.req.est_raw.append(self.estimator.raw_loss(prof[i], budget))
+        s.req.est_spread.append(
+            self.estimator.spread_from_profile(prof[i], budget))
       s.remaining -= 1
       if s.remaining <= 0:
         self._retire(i)
@@ -723,6 +845,7 @@ class ServingEngine:
     for (req, slot), first in zip(admissions, firsts):
       self.tok = self.tok.at[slot, 0].set(first[0])
       req.tokens.append(int(first[0]))
+      self._slot_profile[slot] = None
       self.slots[slot] = _Slot(req, req.max_new_tokens)
       self.events.append(("admit", req.rid, slot, self.now_ms))
 
@@ -783,6 +906,22 @@ class ServingEngine:
       s["cache_hit_rate"] = float(cst["hit_rate"])
     s["goodput_per_s"] = s["goodput_n"] / (self.now_ms / 1e3) \
         if self.now_ms > 0 else 0.0
+    # Contract accounting (DESIGN.md §13): prediction quality against
+    # the measured loss, band coverage at the stated confidence, and the
+    # budget error_bounded freed per step vs the policy's base grant.
+    if self._telemetry:
+      served = [r for r in self.completed
+                if not r.shed_admission and r.est_raw]
+      preds = np.asarray([r.pred_loss for r in served], np.float64)
+      meas = np.asarray([1.0 - r.accuracy for r in served], np.float64)
+      s["pred_loss_mean"] = float(preds.mean()) if len(preds) else 0.0
+      s["pred_loss_mae"] = float(np.abs(preds - meas).mean()) \
+          if len(preds) else 0.0
+      s["band_cover_pct"] = 100.0 * float(np.mean(
+          [r.band_lo - 1e-9 <= m <= r.band_hi + 1e-9
+           for r, m in zip(served, meas)])) if served else 0.0
+      s["freed_budget_mean"] = float(np.mean(self._freed_log)) \
+          if self._freed_log else 0.0
     # Per-SLO-class breakdown (DESIGN.md §11): every completed request
     # belongs to exactly one class, so the per-class counts partition the
     # aggregate (tests/test_resilience.py asserts the sums).
@@ -879,19 +1018,30 @@ def make_zipf_requests(arrivals_ms: Sequence[float], prompt_len: int,
 
 def run_open_loop(engine: ServingEngine, rate_per_s: float,
                   duration_s: float, seed: int = 0,
-                  slo_of=None, zipf_corpora: int = 0) -> Dict[str, float]:
+                  slo_of=None, zipf_corpora: int = 0,
+                  service_seed: Optional[int] = None) -> Dict[str, float]:
   """One measurement window of Poisson arrivals at ``rate_per_s`` — the
   engine-side mirror of ``ScatterGatherService.run_open_loop``.
 
   The window is draw-deterministic: the backend's interference/straggler
-  RNG and injected fault plan (if any) are reseeded from ``seed``, so a
-  re-run reproduces the same noise and fault sequence regardless of
-  warmup or prior-window history (only the measured wall times
-  themselves vary run to run).  ``slo_of(rid) -> str`` optionally
-  assigns each request an SLO class (DESIGN.md §11)."""
+  RNG and injected fault plan (if any) are reseeded, so a re-run
+  reproduces the same noise and fault sequence regardless of warmup or
+  prior-window history (only the measured wall times themselves vary run
+  to run).  ``slo_of(rid) -> str`` optionally assigns each request an
+  SLO class (DESIGN.md §11).
+
+  ``service_seed`` splits the two RNG roles ``seed`` used to play at
+  once: arrivals and prompts ALWAYS derive from ``seed``, while the
+  backend's service-side noise reseeds from ``service_seed`` when given
+  (else ``seed``, the legacy coupling).  Sweep arms that must see the
+  SAME arrival trace under independent service draws — the (contract,
+  ε, rate) grids in benchmarks — pass a distinct ``service_seed`` per
+  arm; sharing one seed across arms correlates the comparison's noise
+  (the seed-reuse bug class; regression-tested in
+  tests/test_estimator.py)."""
   engine.reset()
   if engine.backend is not None and hasattr(engine.backend, "reseed"):
-    engine.backend.reseed(seed)
+    engine.backend.reseed(seed if service_seed is None else service_seed)
   arrivals = poisson_arrivals(rate_per_s, duration_s, seed=seed)
   if zipf_corpora > 0:
     reqs = make_zipf_requests(arrivals, engine.ecfg.prompt_len,

@@ -74,6 +74,15 @@ class ServiceConfig:
                                # by its ring replica (queueing behind it)
   shed: bool = False           # predictive shed-at-admission
   shed_margin: float = 1.0     # shed when backlog+service > ddl*margin
+  # -- ε-or-deadline contracts (DESIGN.md §13) ---------------------------
+  # In the simulator the "online estimator" IS the accuracy model (there
+  # are no stage-1 scores to read), so error_bounded clamps the budget to
+  # the smallest bucket the model says meets ε and the predicted loss is
+  # exact by construction — calibration quality is an ENGINE property
+  # (tests/test_estimator.py); the simulator only mirrors the contract's
+  # budget semantics for fleet-scale what-ifs.
+  contract: str = "deadline"
+  epsilon: float = 0.02
 
 
 class ScatterGatherService:
@@ -81,7 +90,11 @@ class ScatterGatherService:
                accuracy_fn: Optional[Callable[[float], float]] = None,
                step_backend=None):
     from repro.dist.topology import zipf_weights  # noqa: PLC0415
+    from repro.control import CONTRACTS  # noqa: PLC0415
+    if cfg.contract not in CONTRACTS:
+      raise ValueError(f"contract {cfg.contract!r} not in {CONTRACTS}")
     self.cfg = cfg
+    self.pred_tracker: List[float] = []
     # Measured per-budget step latencies (engine.MeasuredStepBackend, or
     # the cluster tier's ClusterMeasuredExport with per-component
     # vectors) — accuracytrader components serve in measured, not
@@ -145,6 +158,8 @@ class ScatterGatherService:
         return {"latency_ms": 0.0, "accuracy": 0.0, "shed": True}
     if tech == "accuracytrader":
       budget = self.controller.budget_for(cfg.deadline_ms, queue_delay)
+      if cfg.contract == "error_bounded":
+        budget = min(budget, self._epsilon_budget())
       measured = None
       if self.step_backend is not None:
         # Per-component vector when the backend exports one (the cluster
@@ -226,6 +241,9 @@ class ScatterGatherService:
       comp_lat = max(lat)
       self.controller.observe(budget, comp_lat)
       acc = float(np.mean([self.accuracy_fn(u) for u in processed_frac]))
+      if cfg.contract != "deadline":
+        # Model-is-truth (see ServiceConfig): predicted == realized loss.
+        self.pred_tracker.append(1.0 - acc)
     else:
       # Exact techniques: a lost shard's contribution is simply missing
       # from the exact answer.
@@ -237,6 +255,19 @@ class ScatterGatherService:
     self.avail_tracker.append(0.0 if lost_mass else 1.0)
     return {"latency_ms": comp_lat, "accuracy": acc}
 
+  def _epsilon_budget(self) -> int:
+    """Smallest controller bucket whose modelled loss meets ε.  ε <= 0
+    demands exactness, which only the full ``i_max_cap`` spend gives —
+    the same ε=0-is-the-exact-path rule as
+    `AccuracyEstimator.bucket_for_epsilon` (DESIGN.md §13)."""
+    cfg = self.cfg
+    if cfg.epsilon <= 0.0:
+      return cfg.i_max_cap
+    for b in self.controller.buckets:
+      if 1.0 - self.accuracy_fn(b / cfg.full_items) <= cfg.epsilon:
+        return int(b)
+    return cfg.i_max_cap
+
   def run_open_loop(self, arrival_rate_per_s: float, duration_s: float,
                     accuracy_profile=None) -> Dict[str, float]:
     """Poisson arrivals for one measurement window.  Queues and the
@@ -245,6 +276,7 @@ class ScatterGatherService:
     self.tracker = TailTracker()
     self.acc_tracker = []
     self.avail_tracker = []
+    self.pred_tracker = []
     self.shed_n = 0
     self.total_n = 0
     t = max((c.busy_until for c in self.components), default=0.0)
@@ -260,6 +292,9 @@ class ScatterGatherService:
     s["shed_pct"] = 100.0 * self.shed_n / max(1, self.total_n)
     s["availability_pct"] = (100.0 * float(np.mean(self.avail_tracker))
                              if self.avail_tracker else 0.0)
+    if self.cfg.contract != "deadline":
+      s["pred_loss_mean"] = float(np.mean(self.pred_tracker)) \
+          if self.pred_tracker else 0.0
     return s
 
 

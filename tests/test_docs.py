@@ -41,7 +41,7 @@ def test_design_has_sections():
   # The anchors the codebase has always cited, plus the control plane
   # (§10: predictors, recirculation, hedged replica gather) and the
   # corpus cache (§12: content addressing, CoW split, delta replay).
-  assert {"3", "5", "10", "12"} <= headings
+  assert {"3", "5", "10", "12", "13"} <= headings
 
 
 def test_docstring_design_refs_resolve():

@@ -1,0 +1,376 @@
+"""Online accuracy estimation + ε-or-deadline contracts (DESIGN.md §13):
+coverage-profile laws, raw-loss estimator properties, isotonic
+calibration quality (rank correlation gated on a seeded engine
+workload), ε=0 exact-path parity, error_bounded's freed-budget
+conservation and ε compliance, deadline_with_bound's band coverage,
+xla-vs-interpret parity through both contracts, gain-allocation
+conservation, and the run_open_loop seed-role split (the seed-reuse
+bug class)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.control import (AccuracyEstimator, DeadlineBudgetPolicy,
+                           calibration_pairs, coverage_profile,
+                           isotonic_fit, spearman)
+from repro.serve.cluster import (ClusterConfig, ClusterStepBackend,
+                                 gain_budgets, gain_rank)
+from repro.serve.engine import (EngineConfig, EngineRequest, ServingEngine,
+                                make_requests, run_open_loop)
+
+N_SLOTS, PROMPT, NEW = 2, 64, 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+  return get_config("llama3-8b", smoke=True)
+
+
+# -- coverage profile (the raw signal) ---------------------------------------
+
+def _toy_scores(seed=0, B=2, Hkv=2, M=8):
+  rng = np.random.default_rng(seed)
+  scores = jnp.asarray(rng.normal(size=(B, Hkv, M)), jnp.float32)
+  counts = jnp.asarray(rng.integers(1, 20, size=(B, M)), jnp.float32)
+  return scores, counts
+
+
+def test_coverage_profile_laws():
+  scores, counts = _toy_scores()
+  p = np.asarray(coverage_profile(scores, counts))
+  assert p.shape == (2, 8 + 1)
+  assert np.allclose(p[:, 0], 0.0)
+  assert np.allclose(p[:, -1], 1.0, atol=1e-5)
+  assert (np.diff(p, axis=-1) >= -1e-6).all()     # cumulative mass
+  assert ((0.0 <= p) & (p <= 1.0 + 1e-6)).all()
+  # Softmax shift invariance: a constant added to every score is the
+  # same distribution, hence the same profile.
+  p2 = np.asarray(coverage_profile(scores + 7.5, counts))
+  assert np.allclose(p, p2, atol=1e-5)
+
+
+def test_coverage_profile_orders_by_refinement_rank():
+  # With counts equal, a dominant top score must cover most of the mass
+  # in the first step of the refinement order.
+  scores = jnp.asarray([[[5.0, 0.0, 0.0, 0.0]]], jnp.float32)
+  counts = jnp.ones((1, 4), jnp.float32)
+  p = np.asarray(coverage_profile(scores, counts))[0]
+  assert p[1] > 0.9
+
+
+def test_raw_loss_properties():
+  est = AccuracyEstimator(floor=0.07)
+  scores, counts = _toy_scores(seed=1)
+  prof = np.asarray(coverage_profile(scores, counts))[0]
+  M = prof.shape[-1] - 1
+  losses = [est.raw_loss(prof, b) for b in range(M + 1)]
+  assert losses[0] == pytest.approx(est.floor)     # stage-1 floor
+  assert losses[-1] == pytest.approx(0.0, abs=1e-5)
+  assert all(a >= b - 1e-9 for a, b in zip(losses, losses[1:]))
+  assert all(0.0 <= v <= 1.0 for v in losses)
+  assert est.spread_from_profile(prof, M) == pytest.approx(0.0)
+  assert est.spread_from_profile(prof, 0) >= 0.0
+
+
+# -- calibration units -------------------------------------------------------
+
+def test_spearman_units():
+  assert spearman([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+  assert spearman([1, 2, 3, 4], [4, 3, 2, 1]) == pytest.approx(-1.0)
+  assert abs(spearman([1, 2, 3, 4], [1, 1, 1, 1])) <= 1.0
+
+
+def test_isotonic_fit_is_monotone_and_mean_preserving():
+  x = np.array([1.0, 2.0, 3.0, 4.0])
+  y = np.array([1.0, 3.0, 2.0, 4.0])
+  kx, ky = isotonic_fit(x, y)
+  assert (np.diff(ky) >= -1e-12).all()
+  # PAVA pools the violating pair to its mean.
+  fit = np.interp([2.0, 3.0], kx, ky)
+  assert fit[0] == pytest.approx(2.5) and fit[1] == pytest.approx(2.5)
+
+
+def test_estimator_fit_predict_and_band():
+  rng = np.random.default_rng(3)
+  raw = rng.uniform(0.0, 0.07, size=200)
+  meas = np.clip(raw * 1.5 + 0.01 + rng.normal(0, 0.002, 200), 0, 1)
+  est = AccuracyEstimator(floor=0.07, conf=0.9)
+  train, test = slice(0, 100), slice(100, 200)
+  stats = est.fit(raw[train], meas[train])
+  assert stats["spearman"] > 0.9
+  assert est.calibrated
+  # Band coverage on the held-out half is near the stated confidence.
+  cover = np.mean([lo - 1e-9 <= m <= hi + 1e-9
+                   for r, m in zip(raw[test], meas[test])
+                   for lo, hi in [est.band(r)]])
+  assert cover >= est.conf - 0.1
+
+
+def test_calibration_pairs_filters_unserved():
+  def req(raw, acc, shed=False, dropped=False):
+    r = EngineRequest(rid=0, arrival_ms=0.0,
+                      prompt=np.zeros(4, np.int32), max_new_tokens=1)
+    r.est_raw = list(raw)
+    r.accuracy = acc
+    r.shed_admission = shed
+    r.dropped = dropped
+    return r
+  raws, meas = calibration_pairs([
+      req([0.02, 0.04], 0.97),
+      req([0.01], 0.99, shed=True),     # never served: excluded
+      req([0.01], 0.50, dropped=True),  # shed mid-flight: excluded
+      req([], 0.95)])                   # no telemetry: excluded
+  assert raws == [pytest.approx(0.03)]
+  assert meas == [pytest.approx(0.03)]
+
+
+def test_bucket_for_epsilon_laws():
+  est = AccuracyEstimator(floor=0.07)
+  prof = np.linspace(0.0, 1.0, 9)
+  buckets = (0, 1, 2, 4, 8)
+  # ε <= 0 demands exactness no estimate can certify: full refinement.
+  assert est.bucket_for_epsilon(prof, buckets, 0.0) == 8
+  assert est.bucket_for_epsilon(prof, buckets, -1.0) == 8
+  # ε at/above the stage-1 floor: stage 1 alone suffices.
+  assert est.bucket_for_epsilon(prof, buckets, 0.07) == 0
+  # Monotone: a looser ε never needs more budget.
+  eps = [0.001, 0.005, 0.02, 0.05, 0.08]
+  need = [est.bucket_for_epsilon(prof, buckets, e) for e in eps]
+  assert need == sorted(need, reverse=True)
+
+
+def test_policy_contract_dispatch():
+  est = AccuracyEstimator(floor=0.07)
+  pol = DeadlineBudgetPolicy(policy="basic", buckets=(0, 1, 2, 4),
+                             i_max_cap=4, contract="error_bounded",
+                             epsilon=0.07, estimator=est)
+  prof = np.linspace(0.0, 1.0, 5)
+  granted, base = pol.budget_for_contract(50.0, profiles=[prof])
+  assert base == 4 and granted == 0          # ε = floor: stage 1 alone
+  assert granted <= base
+  # No profiles yet (cold step): the deadline decision stands.
+  assert pol.budget_for_contract(50.0) == (4, 4)
+  # deadline contract never deviates from the base.
+  pol2 = DeadlineBudgetPolicy(policy="basic", buckets=(0, 1, 2, 4),
+                              i_max_cap=4)
+  assert pol2.budget_for_contract(50.0, profiles=[prof]) == (4, 4)
+  with pytest.raises(ValueError):
+    DeadlineBudgetPolicy(policy="basic", buckets=(0,), i_max_cap=0,
+                         contract="nope")
+  with pytest.raises(ValueError):
+    DeadlineBudgetPolicy(policy="basic", buckets=(0,), i_max_cap=0,
+                         contract="error_bounded")   # estimator missing
+
+
+# -- engine integration ------------------------------------------------------
+
+def _requests(cfg, arrivals, seed=7):
+  return make_requests(arrivals, PROMPT, NEW, cfg.vocab, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def fitted(cfg):
+  """One shared estimator fit from fixed-budget calibration arms — the
+  bench's phase 1, in miniature.  Returns (estimator, fit stats,
+  per-arm engines' completed requests)."""
+  est = AccuracyEstimator()
+  raws, meas = [], []
+  for ai, b in enumerate((0, 1, 2, 4)):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=N_SLOTS, prompt_len=PROMPT, max_new_tokens=NEW,
+        deadline_ms=1e6, policy="fixed", fixed_budget=b,
+        contract="deadline_with_bound", impl="xla", seed=3),
+        estimator=est)
+    run_open_loop(eng, rate_per_s=30.0, duration_s=0.3,
+                  seed=3000 + ai, service_seed=3500 + ai)
+    r, m = calibration_pairs(eng.completed)
+    raws += r
+    meas += m
+  stats = est.fit(raws, meas)
+  return est, stats, (raws, meas)
+
+
+def test_calibration_rank_correlation_gate(fitted):
+  """The raw online estimate must RANK measured loss on a real seeded
+  workload — the same gate CI applies to BENCH_accuracy.json."""
+  est, stats, (raws, meas) = fitted
+  assert stats["n"] >= 8                      # isotonic, not affine
+  assert stats["spearman"] >= 0.8
+  # The calibrated prediction is monotone in the raw signal.
+  xs = np.linspace(0.0, est.floor, 50)
+  ys = est.predict(xs)
+  assert (np.diff(ys) >= -1e-12).all()
+
+
+def test_error_bounded_eps0_reproduces_exact_path(cfg):
+  """ε=0 demands exactness: the contract must grant full refinement on
+  every step and reproduce the deadline-contract tokens exactly."""
+  toks = {}
+  for contract in ("deadline", "error_bounded"):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=N_SLOTS, prompt_len=PROMPT, max_new_tokens=NEW,
+        deadline_ms=1e6, policy="basic", contract=contract, epsilon=0.0,
+        impl="xla"))
+    reqs = _requests(cfg, [0.0, 0.0, 5.0])
+    eng.run(reqs)
+    toks[contract] = [r.tokens for r in sorted(reqs, key=lambda r: r.rid)]
+    if contract == "error_bounded":
+      assert all(b == eng.M for b, _, _ in eng.step_log)
+      assert all(f == 0 for f in eng._freed_log)
+  assert toks["deadline"] == toks["error_bounded"]
+
+
+def test_error_bounded_frees_budget_and_meets_epsilon(cfg, fitted):
+  """The tentpole behavior: with a calibrated estimator, error_bounded
+  answers early (freeing budget) while realized loss stays within
+  ε + tolerance; granted + freed == base on every step (the
+  conservation law, test_control.py's recirculation idiom)."""
+  est, _, _ = fitted
+  eps = 0.02
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=N_SLOTS, prompt_len=PROMPT, max_new_tokens=NEW,
+      deadline_ms=1e6, policy="basic", contract="error_bounded",
+      epsilon=eps, impl="xla"), estimator=est)
+  s = run_open_loop(eng, rate_per_s=30.0, duration_s=0.4,
+                    seed=4000, service_seed=4500)
+  assert s["served_n"] > 0
+  assert s["accuracy_loss_pct"] / 100.0 <= eps + 0.01
+  assert s["freed_budget_mean"] > 0.0          # answered early somewhere
+  # Conservation: base (policy="basic" always grants M) splits exactly
+  # into granted + freed, step by step.
+  assert len(eng._freed_log) == len(eng.step_log)
+  for (granted, _, _), freed in zip(eng.step_log, eng._freed_log):
+    assert granted + freed == eng.M
+    assert freed >= 0
+
+
+def test_deadline_with_bound_band_coverage(cfg, fitted):
+  """Bands fit on window 1 must cover fresh windows' measured loss at
+  (near) the stated confidence.  The fresh windows span the same budget
+  mix the calibration saw — band validity is distributional, and a
+  single-budget window shifts the conditional (raw ~0.002 occurs under
+  both b=1's loss and b=2's ~0 loss; see EXPERIMENTS.md §Accuracy).
+  The gate is conf - binomial slack at this sample size."""
+  est, _, _ = fitted
+  covered, n = 0, 0
+  for wi, b in enumerate((1, 2)):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=N_SLOTS, prompt_len=PROMPT, max_new_tokens=NEW,
+        deadline_ms=1e6, policy="fixed", fixed_budget=b,
+        contract="deadline_with_bound", impl="xla"), estimator=est)
+    run_open_loop(eng, rate_per_s=30.0, duration_s=0.4,
+                  seed=5000 + wi, service_seed=5500 + wi)
+    for r in eng.completed:
+      if r.est_raw and not r.shed_admission and not r.dropped:
+        assert 0.0 <= r.band_lo <= r.band_hi <= 1.0
+        assert r.band_lo <= r.pred_loss <= r.band_hi
+        m = 1.0 - r.accuracy
+        covered += r.band_lo - 1e-9 <= m <= r.band_hi + 1e-9
+        n += 1
+  assert n >= 10
+  assert covered / n >= est.conf - 0.15
+
+
+def test_contract_token_parity_xla_vs_interpret(cfg):
+  """Both contracts produce identical tokens under the xla and interpret
+  kernels (deterministic budget choices: ε=0.08 >= floor always grants
+  the smallest bucket; deadline_with_bound's budgets come from the fixed
+  policy)."""
+  for contract, extra in (
+      ("error_bounded", dict(policy="basic", epsilon=0.08)),
+      ("deadline_with_bound", dict(policy="fixed", fixed_budget=1))):
+    toks = {}
+    for impl in ("xla", "interpret"):
+      eng = ServingEngine(cfg, EngineConfig(
+          n_slots=2, prompt_len=32, max_new_tokens=2, deadline_ms=1e6,
+          contract=contract, impl=impl, **extra))
+      reqs = make_requests([0.0, 0.0, 4.0], 32, 2, cfg.vocab, seed=11)
+      eng.run(reqs)
+      toks[impl] = [r.tokens for r in sorted(reqs, key=lambda r: r.rid)]
+      assert all(r.est_raw for r in reqs)      # telemetry ran
+    assert toks["xla"] == toks["interpret"]
+
+
+# -- gain allocation (cluster frontend) --------------------------------------
+
+def test_gain_rank_conserves_and_respects_validity():
+  rng = np.random.default_rng(9)
+  B, Hkv, N, Mp = 2, 2, 3, 4
+  sc = rng.normal(size=(B, Hkv, N, Mp)).astype(np.float32)
+  # Invalidate a per-component tail (padded slots).
+  valid = np.array([4, 2, 3])
+  for c in range(N):
+    sc[:, :, c, valid[c]:] = -1e30
+  counts = rng.integers(1, 9, size=(B, N, Mp)).astype(np.float32)
+  for c in range(N):
+    counts[:, c, valid[c]:] = 0.0
+  i_max = 6
+  gsel = np.asarray(gain_rank(jnp.asarray(sc), jnp.asarray(counts), i_max))
+  bud = np.asarray(gain_budgets(jnp.asarray(gsel), Mp, N))
+  n_valid = int(valid.sum())
+  assert bud.shape == (B, Hkv, N)
+  # Conservation: exactly min(i_max, n_valid) clusters selected...
+  assert (bud.sum(-1) == min(i_max, n_valid)).all()
+  # ...never more than a component's valid clusters...
+  assert (bud <= valid[None, None, :]).all()
+  # ...and never a padded slot.
+  flat_valid = {c * Mp + j for c in range(N) for j in range(valid[c])}
+  assert {int(g) for g in gsel.ravel() if g >= 0} <= flat_valid
+
+
+def test_gain_rank_prefers_count_biased_mass():
+  # Equal scores, one cluster with far more members: gain ranks it first.
+  sc = jnp.zeros((1, 1, 2, 2), jnp.float32)
+  counts = jnp.asarray([[[1.0, 1.0], [1.0, 50.0]]], jnp.float32)
+  gsel = np.asarray(gain_rank(sc, counts, 1))
+  assert int(gsel[0, 0, 0]) == 3               # component 1, slot 1
+
+
+def test_cluster_gain_alloc_end_to_end(cfg):
+  backend = ClusterStepBackend(ClusterConfig(
+      n_components=2, seed=0, use_mesh=False, alloc="gain"))
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=64, max_new_tokens=2, deadline_ms=1e6,
+      policy="accuracytrader", contract="error_bounded", epsilon=0.05,
+      impl="xla"), backend=backend)
+  s = run_open_loop(eng, rate_per_s=20.0, duration_s=0.3, seed=6,
+                    service_seed=60)
+  assert s["served_n"] > 0
+  assert all(r.est_raw for r in eng.completed if not r.shed_admission)
+  assert 0.0 <= s["accuracy_loss_pct"] <= 100.0
+
+
+# -- seed-role split (the seed-reuse bug class) ------------------------------
+
+def test_run_open_loop_service_seed_splits_rng_roles(cfg):
+  """Two sweep arms sharing an arrival seed but given distinct
+  service_seeds must see the IDENTICAL arrival trace under independent
+  service-side noise draws — the regression for seeds shared across
+  sweep arms."""
+  def run(service_seed):
+    backend = ClusterStepBackend(ClusterConfig(
+        n_components=2, seed=0, use_mesh=False, alloc="gain",
+        interference=0.3, straggler_prob=0.2))
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=2, prompt_len=64, max_new_tokens=2, deadline_ms=60.0,
+        policy="accuracytrader", impl="xla"), backend=backend)
+    draws = []
+    orig = backend._draw_noise
+    backend._draw_noise = lambda: (draws.append(orig()), draws[-1])[1]
+    run_open_loop(eng, rate_per_s=20.0, duration_s=0.3, seed=8,
+                  service_seed=service_seed)
+    arrivals = sorted(r.arrival_ms for r in eng.completed)
+    prompts = [r.prompt.tolist() for r in
+               sorted(eng.completed, key=lambda r: r.rid)]
+    return arrivals, prompts, draws
+  arr_a, pr_a, dr_a = run(100)
+  arr_b, pr_b, dr_b = run(200)
+  assert arr_a == arr_b and pr_a == pr_b       # same arrival trace
+  assert dr_a and dr_b
+  assert not np.allclose(dr_a[0], dr_b[0])     # independent service noise
+  # And the legacy coupling (service_seed=None -> seed) reproduces.
+  arr_c, _, dr_c = run(None)
+  arr_d, _, dr_d = run(None)
+  assert arr_c == arr_d
+  assert np.allclose(dr_c[0], dr_d[0])

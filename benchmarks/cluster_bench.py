@@ -54,9 +54,10 @@ def _one_point(cfg, *, n_components, skew, policy, rates, n_slots,
                per_comp_clusters, max_new_tokens, deadline_ms, duration_s,
                impl, alloc, seed, replicas=1, recirculate=True,
                fixed_budget=0, interference=None, straggler_prob=None,
-               faults=None, recovery=True, retries=1, tag=""):
+               faults=None, recovery=True, retries=1, fleet=False, tag=""):
   from repro.serve.cluster import ClusterConfig, ClusterStepBackend
   from repro.serve.engine import EngineConfig, ServingEngine, run_open_loop
+  from repro.serve.fleet import FleetConfig, FleetStepBackend
 
   C = cfg.synopsis.cluster_size
   prompt_len = per_comp_clusters * C * n_components
@@ -65,7 +66,9 @@ def _one_point(cfg, *, n_components, skew, policy, rates, n_slots,
     ckw["interference"] = interference
   if straggler_prob is not None:
     ckw["straggler_prob"] = straggler_prob
-  backend = ClusterStepBackend(ClusterConfig(
+  cfg_cls, backend_cls = (FleetConfig, FleetStepBackend) if fleet \
+      else (ClusterConfig, ClusterStepBackend)
+  backend = backend_cls(cfg_cls(
       n_components=n_components, skew=skew, alloc=alloc, seed=seed,
       replicas=replicas, recirculate=recirculate, faults=faults,
       recovery=recovery, retries=retries, **ckw))
@@ -216,6 +219,22 @@ def cluster_sweep(*, component_counts: Sequence[int],
   # wall-clock p99 comparison as the asserted check).
   out["replica_sweep"]["modelled"] = _modelled_hedge_cut(rep_backend)
 
+  # Materialized-hedge arm (DESIGN.md §14): the fleet tier runs the SAME
+  # point with R=2 rows of real replica shards — the gather reads the
+  # selected holder's actual shard instead of pricing a modelled
+  # reissue.  The deterministic comparison against the modelled-R2
+  # backend (same seeds/draws) is the fleet bench's gate (a).
+  from benchmarks.fleet_bench import materialized_hedge_cut
+  point, _, fleet_backend = _one_point(
+      cfg, n_components=sn, skew=rep_skew, policy="basic", rates=rates,
+      n_slots=n_slots, per_comp_clusters=per_comp_clusters,
+      max_new_tokens=max_new_tokens, deadline_ms=deadline_ms,
+      duration_s=duration_s, impl=impl, alloc=alloc, seed=seed,
+      replicas=2, fleet=True, tag="_R2mat", **rep_noise)
+  out["replica_sweep"]["R2_materialized"] = point
+  out["replica_sweep"]["materialized"] = materialized_hedge_cut(
+      fleet_backend, rep_backend)
+
   # Stranded-budget recirculation: same Zipf-hot point, cap-and-drop
   # legacy allocator vs recirculation — budget a binding component cap
   # would strand is respent on the unsaturated components.  Run at a
@@ -322,6 +341,14 @@ def cluster_sweep(*, component_counts: Sequence[int],
       checks["replica_p99_hedged"] <= checks["replica_p99_unhedged"])
   checks["hedged_modelled_cut"] = bool(
       rep["modelled"]["cut"] and rep["modelled"]["per_step_never_worse"])
+  checks["replica_p99_materialized"] = \
+      rep["R2_materialized"]["rates"][mod]["p99"]
+  checks["replica_loss_materialized"] = \
+      rep["R2_materialized"]["rates"][mod]["accuracy_loss_pct"]
+  mat = rep["materialized"]
+  checks["materialized_never_worse"] = bool(all(
+      v["per_step_never_worse"] and v["p99_cut"]
+      for v in mat.values() if isinstance(v, dict)))
   ch = out["chaos_sweep"]
   checks["chaos_rate"] = ch["rate"]
   checks["chaos_availability_pct"] = {
@@ -410,6 +437,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
       "hedged reissue must never worsen the modelled gather completion "
       "(deterministic R=2 plan/account comparison): "
       f"{res['replica_sweep']['modelled']}")
+  assert c["materialized_never_worse"], (
+      "the fleet tier's hedge-on-real-shards must never fall behind the "
+      "modelled hedge under the same draws (DESIGN.md §14): "
+      f"{res['replica_sweep']['materialized']}")
   assert c["chaos_recovered_available"], (
       "a crashed component must cost accuracy, never availability: "
       f"{c['chaos_availability_pct']}")

@@ -10,12 +10,14 @@ All five committed baselines regenerate from this one entry point:
   python -m benchmarks.run --prefill-only --json BENCH_prefill.json
   python -m benchmarks.run --serving-only --json BENCH_serving.json
   python -m benchmarks.run --cluster-only --json BENCH_cluster.json
+  python -m benchmarks.run --fleet-only   --json BENCH_fleet.json
   python -m benchmarks.run --cache-only   --json BENCH_cache.json
   python -m benchmarks.run --accuracy-only --json BENCH_accuracy.json
 
-(``--serving-only`` / ``--cluster-only`` / ``--cache-only`` /
-``--accuracy-only`` pass through to ``benchmarks.serving_bench`` /
-``benchmarks.cluster_bench`` / ``benchmarks.cache_bench`` /
+(``--serving-only`` / ``--cluster-only`` / ``--fleet-only`` /
+``--cache-only`` / ``--accuracy-only`` pass through to
+``benchmarks.serving_bench`` / ``benchmarks.cluster_bench`` /
+``benchmarks.fleet_bench`` / ``benchmarks.cache_bench`` /
 ``benchmarks.accuracy_bench``; ``--smoke`` forwards too.)  Every JSON
 carries ``meta.schema_version`` and the git revision that produced it
 (benchmarks/common.py).
@@ -173,6 +175,11 @@ def main() -> None:
                   help="pass through to benchmarks.cluster_bench "
                        "(BENCH_cluster.json baseline; forces host "
                        "devices before jax initialises)")
+  ap.add_argument("--fleet-only", action="store_true",
+                  help="pass through to benchmarks.fleet_bench "
+                       "(BENCH_fleet.json baseline: materialized-replica "
+                       "hedge + 24-hour autoscaler frontier; forces "
+                       "R*N host devices before jax initialises)")
   ap.add_argument("--cache-only", action="store_true",
                   help="pass through to benchmarks.cache_bench "
                        "(BENCH_cache.json baseline)")
@@ -182,23 +189,26 @@ def main() -> None:
                        "calibration + ε-sweep)")
   ap.add_argument("--smoke", action="store_true",
                   help="forwarded to --serving-only / --cluster-only / "
-                       "--cache-only / --accuracy-only")
+                       "--fleet-only / --cache-only / --accuracy-only")
   ap.add_argument("--impl", default=None,
                   choices=["auto", "pallas", "xla", "interpret"],
                   help="forwarded to --serving-only / --cluster-only / "
-                       "--cache-only / --accuracy-only")
+                       "--fleet-only / --cache-only / --accuracy-only")
   args = ap.parse_args()
 
-  if (args.serving_only or args.cluster_only or args.cache_only
-      or args.accuracy_only):
-    # Dispatch BEFORE anything imports jax: cluster_bench must force the
-    # per-component host devices first.
+  if (args.serving_only or args.cluster_only or args.fleet_only
+      or args.cache_only or args.accuracy_only):
+    # Dispatch BEFORE anything imports jax: cluster_bench/fleet_bench
+    # must force the per-component host devices first.
     sub = ["--json", args.json] if args.json else []
     sub += ["--smoke"] if args.smoke else []
     sub += ["--impl", args.impl] if args.impl else []
     if args.cluster_only:
       from benchmarks.cluster_bench import main as cluster_main
       return cluster_main(sub)
+    if args.fleet_only:
+      from benchmarks.fleet_bench import main as fleet_main
+      return fleet_main(sub)
     if args.cache_only:
       from benchmarks.cache_bench import main as cache_main
       return cache_main(sub)

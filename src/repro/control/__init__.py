@@ -7,6 +7,8 @@ cluster tier and the discrete-event simulator."""
 from repro.control.admission import (AdmissionConfig, AdmissionPolicy,
                                      SLOClass, TokenBucket,
                                      parse_slo_classes)
+from repro.control.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      FleetSize, drain)
 from repro.control.estimator import (AccuracyEstimator, calibration_pairs,
                                      coverage_profile, isotonic_fit,
                                      spearman)
@@ -29,4 +31,5 @@ __all__ = [
     "RetryPolicy", "plan_recovery", "realized_recovery",
     "AdmissionConfig", "AdmissionPolicy", "SLOClass", "TokenBucket",
     "parse_slo_classes",
+    "Autoscaler", "AutoscalerConfig", "FleetSize", "drain",
 ]

@@ -18,11 +18,21 @@ of the M synopsis clusters of every resident request's corpus:
     a gather predicted to straggle by reissuing the shard's refinement to
     its replica and taking the earlier completion (DESIGN.md §10).
 
+The fleet tier (`repro.serve.fleet`, DESIGN.md §14) promotes the ring to
+a 2-D layout: :func:`plan_2d` validates an (R, N) grid where replica row
+``r`` holds, in column ``j``, a *materialized* copy of shard
+``shard_at(r, j) = (j - r) % N`` — the inverse of ``replica_owner`` —
+and :func:`select_replica` is the per-shard replica-selection policy
+(fastest-predicted / least-loaded, per Tail-Tolerant Distributed Search,
+arxiv 1707.07426): the frontend serves each shard from whichever live
+holder is predicted to finish first.
+
 Mesh construction is a FUNCTION (like launch/mesh.py) so importing this
 module never touches jax device state: :func:`make_component_mesh` returns
 a 1-axis ``("component",)`` mesh when enough devices exist, else ``None``
 — the tier then falls back to the stacked single-device execution of the
-same math.
+same math.  :func:`make_fleet_mesh` is the 2-axis
+``("replica", "component")`` counterpart over R*N devices.
 """
 from __future__ import annotations
 
@@ -95,6 +105,20 @@ class ComponentTopology:
     base = np.arange(self.n_components)[:, None]
     return (base + np.arange(self.replicas)[None, :]) % self.n_components
 
+  def shard_at(self, r: int, j: int) -> int:
+    """Shard held at 2-D mesh coordinate (replica row ``r``, component
+    column ``j``) — the inverse of :meth:`replica_owner`: row r is row 0
+    rolled right by r, so ``shard_at(r, replica_owner(c, r)) == c``."""
+    if not 0 <= r < self.replicas:
+      raise ValueError(f"replica row {r} outside [0, {self.replicas})")
+    return (int(j) - int(r)) % self.n_components
+
+  def shard_grid(self) -> np.ndarray:
+    """(replicas, n_components) shard id at each 2-D mesh coordinate."""
+    r = np.arange(self.replicas)[:, None]
+    j = np.arange(self.n_components)[None, :]
+    return (j - r) % self.n_components
+
   @staticmethod
   def plan(m_total: int, n_components: int, skew: float = 0.0,
            replicas: int = 1) -> "ComponentTopology":
@@ -103,6 +127,16 @@ class ComponentTopology:
     n = int(n_components)
     if n < 1 or n > m_total:
       raise ValueError(f"n_components {n} outside [1, m_total={m_total}]")
+    r = int(replicas)
+    if not 1 <= r <= n:
+      # Validated HERE, before any layout is built, with the CLI spelled
+      # out: ring placement puts the R copies of a shard on R *distinct*
+      # consecutive components, so R > N would silently wrap copies back
+      # onto their own primary (--replicas composed with --cluster).
+      raise ValueError(
+          f"replicas {r} outside [1, n_components={n}]: each shard's R "
+          f"ring copies need R distinct components — pass --replicas <= "
+          f"--cluster")
     w = zipf_weights(n, skew)
     ideal = w * m_total
     counts = np.maximum(np.floor(ideal).astype(int), 1)
@@ -116,6 +150,45 @@ class ComponentTopology:
       counts[int(np.argmax(over))] -= 1
     return ComponentTopology(n, int(m_total), tuple(int(c) for c in counts),
                              skew=float(skew), replicas=int(replicas))
+
+
+def plan_2d(m_total: int, n_components: int, replicas: int,
+            skew: float = 0.0) -> ComponentTopology:
+  """Plan the fleet tier's (R, N) grid: same largest-remainder Zipf
+  partition as :meth:`ComponentTopology.plan`, but ``replicas`` is a
+  required grid dimension (R >= 1) rather than an accounting factor —
+  the caller owns R*N devices and every replica row holds materialized
+  shards (see ``repro.serve.fleet``)."""
+  r = int(replicas)
+  if r < 1:
+    raise ValueError(f"fleet replicas must be >= 1, got {r}")
+  return ComponentTopology.plan(m_total, n_components, skew=skew, replicas=r)
+
+
+def select_replica(t_pred, alive=None) -> np.ndarray:
+  """Per-shard replica selection (Tail-Tolerant Distributed Search,
+  arxiv 1707.07426): pick, for each shard, the live holder predicted to
+  finish first.
+
+  ``t_pred`` is the (R, N) predicted completion time of shard ``c``
+  served from its r-th holder (column = shard id, NOT mesh column).
+  ``alive``, if given, is an (R, N) boolean mask of holders considered
+  usable; dead holders are never selected.  Ties break toward the
+  lowest r — the primary — so a uniform prediction degenerates to the
+  plain 1-D gather.  Returns (N,) int32 replica indices."""
+  t = np.asarray(t_pred, np.float64)
+  if t.ndim != 2:
+    raise ValueError(f"t_pred must be (replicas, n_components), got {t.shape}")
+  if alive is not None:
+    mask = np.asarray(alive, bool)
+    if mask.shape != t.shape:
+      raise ValueError(f"alive {mask.shape} != t_pred {t.shape}")
+    if not mask.any(axis=0).all():
+      dead = np.where(~mask.any(axis=0))[0]
+      raise ValueError(f"shards {dead.tolist()} have no live holder")
+    t = np.where(mask, t, np.inf)
+  # np.argmin takes the first minimum, i.e. the lowest replica index.
+  return np.argmin(t, axis=0).astype(np.int32)
 
 
 def force_host_devices(n: int) -> None:
@@ -139,3 +212,20 @@ def make_component_mesh(n_components: int):
   if len(devs) < n_components:
     return None
   return Mesh(np.array(devs[:n_components]), ("component",))
+
+
+def make_fleet_mesh(n_components: int, replicas: int):
+  """2-axis ``("replica", "component")`` mesh over the first R*N local
+  devices — replica rows are the *leading* mesh axis so a row is a
+  contiguous device group (one host group per replica row on real
+  multi-host fleets).  Returns ``None`` when the host has fewer than
+  R*N devices; the fleet tier then runs the stacked fallback of the
+  same math."""
+  import jax  # noqa: PLC0415 — deferred so module import is device-free
+  from jax.sharding import Mesh  # noqa: PLC0415
+  n, r = int(n_components), int(replicas)
+  devs = jax.devices()
+  if len(devs) < r * n:
+    return None
+  grid = np.array(devs[: r * n]).reshape(r, n)
+  return Mesh(grid, ("replica", "component"))

@@ -55,7 +55,13 @@ def _engine_main(args):
   max_new = min(args.tokens, cfg.synopsis.recent)
   faults = parse_fault_spec(args.faults)
   backend = None
-  if args.cluster:
+  if args.fleet:
+    from repro.serve.fleet import FleetConfig, FleetStepBackend
+    backend = FleetStepBackend(FleetConfig(
+        n_components=args.cluster, skew=args.skew, alloc=args.alloc,
+        route=args.route, replicas=max(1, args.replicas),
+        predictor=args.predictor or "ewma"))
+  elif args.cluster:
     from repro.serve.cluster import ClusterConfig, ClusterStepBackend
     backend = ClusterStepBackend(ClusterConfig(
         n_components=args.cluster, skew=args.skew, alloc=args.alloc,
@@ -88,7 +94,8 @@ def _engine_main(args):
   if backend is not None:
     import jax
     mesh = "mesh" if backend.mesh is not None else "stacked"
-    print(f"[cluster] N={args.cluster} ({mesh}, {len(jax.devices())} "
+    tier = "fleet" if args.fleet else "cluster"
+    print(f"[{tier}] N={args.cluster} ({mesh}, {len(jax.devices())} "
           f"devices) counts={backend.topo.counts} alloc={args.alloc} "
           f"route={args.route} skew={args.skew} R={args.replicas} "
           f"predictor={args.predictor or 'ewma'}")
@@ -139,10 +146,59 @@ def _engine_main(args):
     }
     print(f"[cluster] measured per-component ms at full budget: "
           f"{out['cluster']['comp_ms_full']}")
+  if args.autoscale:
+    out["autoscale"] = _autoscale_main(args, backend)
   if args.json:
     with open(args.json, "w") as f:
       json.dump(out, f, indent=1, sort_keys=True)
     print(f"# wrote {args.json}")
+
+
+def _autoscale_main(args, backend):
+  """Elastic sizing over the 24-hour diurnal trace (DESIGN.md §14): the
+  autoscaler decides each hour's (components, replicas) grid from the
+  fleet's measured export, and the discrete-event simulator replays the
+  window at that size (the counterfactual round-trip) — cheap enough to
+  cover all 24 hours where real engine windows would not be."""
+  if backend is None:
+    raise SystemExit("--autoscale requires --fleet (or --cluster N)")
+  from repro.control import Autoscaler, AutoscalerConfig
+  from repro.serving.service import (ScaledFleetExport, ScatterGatherService,
+                                     ServiceConfig)
+  from repro.serving.workload import hour_rate
+
+  exp = backend.export()
+  n_max, r_max = args.cluster, max(1, args.replicas)
+  asc = Autoscaler(AutoscalerConfig(
+      p99_target_ms=args.p99_target, max_components=n_max,
+      max_replicas=r_max, slots=args.n_slots),
+      ScaledFleetExport(exp, n_max, r_max).step_model)
+  print(f"[autoscale] p99 target {args.p99_target}ms, grid up to "
+        f"{n_max}x{r_max}, 24 sogou hours x rate_scale={args.rate_scale}")
+  size = None
+  windows = []
+  cost_auto = cost_static = 0
+  for h in range(24):
+    rate = hour_rate(h) * args.rate_scale
+    size = asc.decide(rate, size)
+    sim = ScatterGatherService(
+        ServiceConfig(n_components=size.n_components,
+                      deadline_ms=args.deadline_ms, seed=h),
+        step_backend=ScaledFleetExport(exp, size.n_components,
+                                       size.replicas))
+    s = sim.run_open_loop(rate, args.duration)
+    cost_auto += size.devices
+    cost_static += n_max * r_max
+    windows.append({"hour": h, "rate_per_s": round(rate, 2),
+                    "n": size.n_components, "r": size.replicas,
+                    "p99_ms": round(float(s["p99"]), 2)})
+    print(f"[hour{h:02d}] rate={rate:6.1f}/s grid="
+          f"{size.n_components}x{size.replicas} p99={s['p99']:7.1f}ms")
+  print(f"[autoscale] component-hours: autoscaled={cost_auto} "
+        f"static-peak={cost_static}")
+  return {"p99_target_ms": args.p99_target, "windows": windows,
+          "component_hours": cost_auto,
+          "component_hours_static": cost_static}
 
 
 def main():
@@ -186,6 +242,23 @@ def main():
                        "shard_map over a component mesh when N host "
                        "devices exist (forced automatically on CPU), "
                        "stacked execution of the same math otherwise")
+  ap.add_argument("--fleet", action="store_true",
+                  help="run the materialized-replica fleet tier "
+                       "(DESIGN.md §14; implies --engine, needs "
+                       "--cluster N): a (replica, component) 2-D mesh "
+                       "where each of --replicas rows holds a real copy "
+                       "of every shard and the gather reads each "
+                       "shard's fastest-predicted holder")
+  ap.add_argument("--autoscale", action="store_true",
+                  help="after the trace sweep, run the elastic "
+                       "autoscaler over the 24-hour sogou trace "
+                       "(DESIGN.md §14): per hour, size the "
+                       "(components, replicas) grid against "
+                       "--p99-target using the measured export + the "
+                       "simulator counterfactual, and report "
+                       "component-hours vs static peak sizing")
+  ap.add_argument("--p99-target", type=float, default=50.0,
+                  help="autoscaler latency target (ms)")
   ap.add_argument("--skew", type=float, default=0.0,
                   help="Zipf exponent over component corpus shares "
                        "(hot components own more clusters)")
@@ -272,12 +345,17 @@ def main():
                   help="write the --engine sweep results as JSON")
   args = ap.parse_args()
 
+  if args.fleet and not args.cluster:
+    ap.error("--fleet needs --cluster N (the component count; "
+             "--replicas R sets the replica rows)")
   if args.cluster:
-    # The component mesh wants one device per component; on a CPU host
-    # force placeholder devices BEFORE jax initialises (same mechanism as
-    # launch/dryrun.py).  No-op if the user already set the flag.
+    # The mesh wants one device per component — times the replica rows
+    # under --fleet (the 2-D grid) — so on a CPU host force placeholder
+    # devices BEFORE jax initialises (same mechanism as launch/dryrun.py).
+    # No-op if the user already set the flag.
     from repro.dist.topology import force_host_devices
-    force_host_devices(args.cluster)
+    force_host_devices(args.cluster * (max(1, args.replicas)
+                                       if args.fleet else 1))
     return _engine_main(args)
 
   if args.engine:

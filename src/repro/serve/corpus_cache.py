@@ -193,22 +193,31 @@ class CorpusCache:
     return "miss", None
 
   # -- refcounts ------------------------------------------------------------
-  def acquire(self, entry: CacheEntry) -> CacheEntry:
-    """Pin an entry for one slot residency (a ``lookup`` hit does not
-    pin by itself — the caller decides whether it maps the arena)."""
-    entry.refcount += 1
+  def acquire(self, entry: CacheEntry, n: int = 1) -> CacheEntry:
+    """Pin an entry for ``n`` mappings (a ``lookup`` hit does not pin by
+    itself — the caller decides whether it maps the arena).  The fleet
+    tier pins R at once: one admission maps the arena onto every replica
+    row, and each mapping holds its own pin so retiring one replica's
+    mapping can never free an arena another replica still reads."""
+    if n < 1:
+      raise ValueError(f"acquire of {n} pins")
+    entry.refcount += int(n)
     self._touch(entry)
     return entry
 
-  def release(self, key: str) -> None:
-    """Unpin one slot mapping; the entry stays resident (warm) until
-    capacity pressure evicts it."""
+  def release(self, key: str, n: int = 1) -> None:
+    """Unpin ``n`` slot mappings; the entry stays resident (warm) until
+    capacity pressure evicts it.  Releasing more pins than are held
+    raises — an arena must never be freed while any replica maps it."""
+    if n < 1:
+      raise ValueError(f"release of {n} pins")
     e = self.entries.get(key)
     if e is None:
       return                       # already evicted config change / reset
-    if e.refcount <= 0:
-      raise ValueError(f"release of unpinned entry {key[:12]}")
-    e.refcount -= 1
+    if e.refcount < n:
+      raise ValueError(
+          f"release of {n} pins on entry {key[:12]} holding {e.refcount}")
+    e.refcount -= int(n)
 
   # -- publish / evict ------------------------------------------------------
   def publish(self, tokens, arena: Dict[str, object],

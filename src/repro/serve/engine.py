@@ -258,6 +258,11 @@ class ServingEngine:
                                               ecfg.prompt_len, ecfg.seed))
     self._delta_ok = ccache.supports_delta(cfg)
     self._slot_entry: List[Optional[str]] = [None] * ecfg.n_slots
+    # Fleet tier (DESIGN.md §14): one admission maps the arena onto R
+    # replica rows and each mapping holds its own pin, so retiring one
+    # replica's mapping can never free an arena another still reads.
+    self._map_count = int(getattr(backend, "replica_mappings", 1)) \
+        if backend is not None else 1
 
     if params is None:
       params, _ = cm.split(tf.init_model(jax.random.PRNGKey(ecfg.seed), cfg))
@@ -338,7 +343,7 @@ class ServingEngine:
     # retiring slots' pins reset.
     for key in getattr(self, "_slot_entry", []):
       if key is not None:
-        self.corpus_cache.release(key)
+        self.corpus_cache.release(key, self._map_count)
     self._slot_entry = [None] * e.n_slots
     self.corpus_cache.reset_stats()
     # Per-window contract telemetry resets; the estimator's calibration
@@ -462,11 +467,13 @@ class ServingEngine:
     if use_cache:
       kind, entry = cc.lookup(req.prompt, allow_extend=self._delta_ok)
       if kind == "hit":
-        cc.acquire(entry)
+        cc.acquire(entry, self._map_count)
         self._slot_entry[slot] = entry.key
         return entry.first_token, self._write(cache, entry.arena, slot)
       if kind == "extend":
         first, new_entry = self._delta_admit(entry, req.prompt)
+        if self._map_count > 1:       # publish holds the first mapping
+          cc.acquire(new_entry, self._map_count - 1)
         self._slot_entry[slot] = new_entry.key
         return first, self._write(cache, new_entry.arena, slot)
     prompt = jnp.asarray(req.prompt, jnp.int32)[None]
@@ -478,6 +485,8 @@ class ServingEngine:
     first = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
     if use_cache:
       entry = cc.publish(req.prompt, syn, first)
+      if self._map_count > 1:         # publish holds the first mapping
+        cc.acquire(entry, self._map_count - 1)
       self._slot_entry[slot] = entry.key
     cache = self._write(cache, syn, slot)
     return first, cache
@@ -584,7 +593,7 @@ class ServingEngine:
     # Unpin the slot's shared-arena mapping (the entry stays resident,
     # warm for the next admission, until capacity pressure evicts it).
     if self._slot_entry[slot] is not None:
-      self.corpus_cache.release(self._slot_entry[slot])
+      self.corpus_cache.release(self._slot_entry[slot], self._map_count)
       self._slot_entry[slot] = None
     req.dropped = s.remaining > 0      # shed mid-flight, not finished
     e = self.ecfg

@@ -182,6 +182,26 @@ def init_cache(cfg, B, S, *, synopsis: bool, key=None):
   return out
 
 
+def replicate_leaf(x: jax.Array, replicas: int, axis: int) -> jax.Array:
+  """Materialize the fleet tier's replica rows from one arena write
+  (DESIGN.md §14): stack R ring-rotated copies of a component-stacked
+  leaf, inserting a new replica axis at ``axis`` (the component axis
+  shifts to ``axis + 1``).
+
+  Row r is row 0 rolled right by r along the component axis, so mesh
+  column ``j`` of row ``r`` holds shard ``(j - r) % N`` — exactly
+  ``ComponentTopology.shard_grid()``.  ``jnp.roll`` is pure data
+  movement: every replica copy is bit-identical to its primary shard,
+  which is what makes "one arena write backs R replica mappings" free
+  of any numerical caveat (property-tested in tests/test_fleet.py)."""
+  r = int(replicas)
+  if r < 1:
+    raise ValueError(f"replicas must be >= 1, got {r}")
+  # After stacking, the old component axis sits at axis+1.
+  return jnp.stack([jnp.roll(x, shift, axis=axis) for shift in range(r)],
+                   axis=axis)
+
+
 def arena_nbytes(arena: Dict[str, Any]) -> int:
   """Footprint of the shared-immutable half only (capacity accounting in
   the corpus cache; the private leaves live in the slot pool, not the

@@ -298,6 +298,51 @@ class ScatterGatherService:
     return s
 
 
+class ScaledFleetExport:
+  """Rescale a fleet tier's measured per-component export onto a
+  counterfactual (n, r) size — the autoscaler's simulator round-trip
+  (DESIGN.md §14).
+
+  The export was measured at ``n0`` components each owning ~1/n0 of
+  every corpus; at ``n`` active components each owns ~1/n, so the
+  per-component service time scales by n0/n.  Replica selection serves
+  every shard from the fastest of its ``r`` materialized holders, which
+  trims the measured per-component *excess over the mean* (the
+  imbalance + straggler part — the min over r draws) by 1/r; the mean
+  work itself is irreducible.  The result is a drop-in
+  ``step_ms_per_component`` backend for
+  ``ScatterGatherService(step_backend=...)``, and :meth:`step_model`
+  is the ``step_ms_fn(n, r)`` the analytic `control.Autoscaler` scans.
+  """
+
+  def __init__(self, export, n_components: int, replicas: int = 1,
+               model_budget: int = 8):
+    if n_components < 1 or replicas < 1:
+      raise ValueError(f"fleet size ({n_components}, {replicas}) invalid")
+    self.export = export
+    self.n_components = int(n_components)
+    self.replicas = int(replicas)
+    self.model_budget = int(model_budget)    # operating point of step_model
+
+  def step_ms_per_component(self, budget: int) -> np.ndarray:
+    v0 = np.asarray(self.export.step_ms_per_component(budget), np.float64)
+    total = float(v0.sum())
+    mean = total / self.n_components
+    imbalance = float(v0.max()) / max(total / max(v0.size, 1), 1e-30) - 1.0
+    per = mean * (1.0 + max(imbalance, 0.0) / self.replicas)
+    return np.full(self.n_components, per)
+
+  def step_ms(self, budget: int) -> float:
+    return float(self.step_ms_per_component(budget).max())
+
+  def step_model(self, n_components: int, replicas: int) -> float:
+    """`Autoscaler` hook: predicted step wall at a candidate size (the
+    frontend waits on the slowest component, so the per-component time
+    IS the step wall)."""
+    return ScaledFleetExport(self.export, n_components,
+                             replicas).step_ms(self.model_budget)
+
+
 def _default_concentration(frac: float) -> float:
   """Fig-4-style curve, calibrated to the paper's operating points: the
   synopsis stage alone recovers ~93 % of result accuracy, and the top-40 %

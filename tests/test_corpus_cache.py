@@ -97,41 +97,50 @@ class TestCacheCore:
     exact.publish(t[:8], _arena(), None)
     assert exact.lookup(t)[0] == "miss"
 
-  def _drive(self, rng, n_ops=200, capacity=3, n_corpora=6):
+  def _drive(self, rng, n_ops=200, capacity=3, n_corpora=6, map_count=1):
     """Random admit/retire interleaving; returns nothing — asserts the
-    refcount-conservation and no-live-eviction invariants throughout."""
+    refcount-conservation and no-live-eviction invariants throughout.
+    ``map_count`` is the fleet tier's R replica mappings per admission
+    (DESIGN.md §14): each slot pins the arena R times and releases R at
+    retirement, so one replica's retirement can never free an arena
+    another replica row still reads."""
     cache = cc.CorpusCache(cc.CacheConfig(capacity=capacity))
     pool = [np.arange(i + 1, dtype=np.int32) for i in range(n_corpora)]
     live = []                                    # keys pinned by "slots"
     for _ in range(n_ops):
       published = False
       if live and rng.integers(0, 2):
-        cache.release(live.pop(rng.integers(0, len(live))))   # retire
+        cache.release(live.pop(rng.integers(0, len(live))),   # retire
+                      map_count)
       else:
         t = pool[rng.integers(0, n_corpora)]                  # admit
         kind, e = cache.lookup(t)
         if kind == "hit":
-          cache.acquire(e)
+          cache.acquire(e, map_count)
         else:
           e = cache.publish(t, _arena(int(t.shape[0])), None)
+          if map_count > 1:     # publish holds the first replica mapping
+            cache.acquire(e, map_count - 1)
           published = True
         live.append(e.key)
       # Refcount conservation: each entry's refcount equals exactly the
-      # live slot mappings that hold it; total refs == live slots.
+      # live slot mappings that hold it (x map_count replica rows);
+      # total refs == live slots x map_count.
       expect = {}
       for k in live:
-        expect[k] = expect.get(k, 0) + 1
+        expect[k] = expect.get(k, 0) + map_count
       for k, n in expect.items():
         assert k in cache.entries, "live-ref entry was evicted"
         assert cache.entries[k].refcount == n
-      assert sum(e.refcount for e in cache.entries.values()) == len(live)
+      assert sum(e.refcount for e in cache.entries.values()) \
+          == len(live) * map_count
       # Capacity: eviction runs at publish time, so right after one the
       # cache is either within capacity or wholly pinned (no victims).
       if published and len(cache.entries) > capacity:
         assert all(e.refcount > 0 for e in cache.entries.values())
     # Draining every slot re-converges under capacity.
     for k in live:
-      cache.release(k)
+      cache.release(k, map_count)
     cache.publish(np.full((99,), 7, np.int32), _arena(99), None)
     assert len(cache.entries) <= capacity
 
@@ -139,10 +148,31 @@ class TestCacheCore:
     for seed in range(8):
       self._drive(np.random.default_rng(seed))
 
+  def test_refcount_conservation_replicated(self):
+    # Fleet tier (R > 1): R pins per admission, R releases per retire —
+    # the same conservation law at every interleaving point.
+    for seed in range(6):
+      self._drive(np.random.default_rng(seed),
+                  map_count=2 + seed % 2)          # R in {2, 3}
+    # Partial release of a replicated mapping is a caller bug the cache
+    # must reject, not absorb: releasing MORE pins than an entry holds
+    # raises instead of going negative.
+    cache = cc.CorpusCache(cc.CacheConfig(capacity=2))
+    e = cache.publish(np.arange(3, dtype=np.int32), _arena(), None)
+    cache.acquire(e, 2)                             # R=3 mapping
+    with pytest.raises(ValueError):
+      cache.release(e.key, 4)
+    assert e.refcount == 3                          # reject left it intact
+
   @settings(max_examples=25, deadline=None)
   @given(st.integers(0, 10_000))
   def test_refcount_conservation_hypothesis(self, seed):
     self._drive(np.random.default_rng(seed))
+
+  @settings(max_examples=15, deadline=None)
+  @given(st.integers(0, 10_000))
+  def test_refcount_conservation_replicated_hypothesis(self, seed):
+    self._drive(np.random.default_rng(seed), map_count=2 + seed % 3)
 
   def test_no_eviction_of_live_refs(self):
     cache = cc.CorpusCache(cc.CacheConfig(capacity=2))

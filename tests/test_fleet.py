@@ -1,0 +1,352 @@
+"""Fleet tier tests (DESIGN.md §14): the ("replica", "component") 2-D
+mesh with materialized replica shards.
+
+The load-bearing property: every replica copy is bit-identical to its
+primary shard (the materializing write is pure data movement —
+`kv_cache.replicate_leaf` ring-rotations of ONE scattered arena), and
+the selection-aware gather folds partials in fixed shard order — so the
+step output CANNOT depend on which holder serves each shard.  We pin
+that exactly (`np.array_equal`, not allclose) on the stacked path and,
+in a subprocess with 8 placeholder devices, on the real 2-D shard_map
+execution.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.control import MODE_FULL, MODE_STAGE1
+from repro.dist.topology import (ComponentTopology, plan_2d, select_replica)
+from repro.serve import kv_cache as kvc
+from repro.serve.cluster import ClusterConfig, ClusterStepBackend
+from repro.serve.engine import (CacheConfig, EngineConfig, ServingEngine,
+                                make_requests, run_open_loop)
+from repro.serve.fleet import FleetConfig, FleetStepBackend, \
+    make_fleet_attention
+
+
+# -- 2-D placement laws ------------------------------------------------------
+
+def test_plan_2d_grid_laws():
+  topo = plan_2d(16, 5, 3, skew=0.7)
+  N, R = topo.n_components, topo.replicas
+  grid = topo.shard_grid()                       # (R, N) shard at (r, j)
+  # Row 0 is the identity (the 1-D cluster layout); row r is row 0
+  # rolled right by r.
+  assert list(grid[0]) == list(range(N))
+  for r in range(R):
+    assert np.array_equal(grid[r], np.roll(grid[0], r))
+    # Every row is a full partition: all N shards present once.
+    assert sorted(grid[r]) == list(range(N))
+  # shard_at inverts replica_owner: the r-th copy of shard c lives at
+  # column replica_owner(c, r), and that coordinate holds shard c.
+  for c in range(N):
+    for r in range(R):
+      j = topo.replica_owner(c, r)
+      assert topo.shard_at(r, j) == c
+      assert grid[r, j] == c
+  # The R holders of any shard are R *distinct* components.
+  owners = topo.replica_owners()
+  assert owners.shape == (N, R)
+  for c in range(N):
+    assert len(set(owners[c].tolist())) == R
+
+
+def test_plan_rejects_replicas_over_components():
+  # The --replicas x --cluster composition bug: R > N would wrap ring
+  # copies back onto their own primary.  plan() must reject it BEFORE
+  # any layout is built, naming both CLI flags.
+  with pytest.raises(ValueError, match=r"--replicas <= +--cluster"):
+    ComponentTopology.plan(16, 3, replicas=4)
+  with pytest.raises(ValueError, match="replicas"):
+    plan_2d(16, 2, 5)
+  with pytest.raises(ValueError):
+    plan_2d(16, 2, 0)                            # R >= 1 is a grid dim
+
+
+def test_select_replica_policy():
+  t = np.array([[5.0, 1.0, 2.0],
+                [1.0, 1.0, 9.0]])
+  sel = select_replica(t)
+  assert sel.dtype == np.int32
+  # Fastest holder per shard; exact ties break to the primary (row 0).
+  assert list(sel) == [1, 0, 0]
+  # A dead holder is never selected even when fastest.
+  alive = np.array([[True, True, True],
+                    [False, True, True]])
+  assert list(select_replica(t, alive)) == [0, 0, 0]
+  # A shard with NO live holder is an error, not a silent fallback.
+  alive[:, 2] = False
+  with pytest.raises(ValueError, match="no live holder"):
+    select_replica(t, alive)
+  with pytest.raises(ValueError):
+    select_replica(t[0])                         # must be (R, N)
+
+
+def test_replicate_leaf_materializes_grid():
+  # replicate_leaf's row r must hold, at column j, a BIT-IDENTICAL copy
+  # of primary shard shard_at(r, j) — the data-movement half of the
+  # fleet tier's bit-identity story.
+  topo = plan_2d(12, 4, 3)
+  x = jnp.asarray(np.random.default_rng(0).normal(
+      size=(2, 3, 4, 5)).astype(np.float32))     # component axis 2, N=4
+  out = np.asarray(kvc.replicate_leaf(x, topo.replicas, axis=2))
+  assert out.shape == (2, 3, 3, 4, 5)            # (. . R N .)
+  grid = topo.shard_grid()
+  xn = np.asarray(x)
+  for r in range(topo.replicas):
+    for j in range(topo.n_components):
+      assert np.array_equal(out[:, :, r, j], xn[:, :, grid[r, j]])
+
+
+# -- selection invariance: the gather result cannot depend on fe_replica ----
+
+def _synthetic_fleet_cache(topo, *, B=2, Hkv=2, C=16, D=16, seed=0):
+  """A dense synthetic corpus scattered to the fleet layout: cluster-tier
+  scatter per leaf, then the replica stack — exactly the engine's
+  materializing write, minus the slot axes."""
+  M = topo.m_total
+  ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+  S = M * C
+  cache = {
+      "k": jax.random.normal(ks[0], (B, Hkv, S, D), jnp.float32),
+      "v": jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32),
+      "recent_k": jax.random.normal(ks[2], (B, Hkv, 16, D), jnp.float32),
+      "recent_v": jax.random.normal(ks[3], (B, Hkv, 16, D), jnp.float32),
+      "recent_len": jnp.full((B,), 5, jnp.int32),
+      "counts": jnp.full((B, M), float(C)),
+  }
+  cache["k_syn"] = cache["k"].reshape(B, Hkv, M, C, D).mean(3)
+  cache["v_syn"] = cache["v"].reshape(B, Hkv, M, C, D).mean(3)
+  Mp = topo.m_max
+  out = {k: cache[k] for k in ("recent_k", "recent_v", "recent_len")}
+  for name, unit in (("k", C), ("v", C), ("k_syn", 1), ("v_syn", 1)):
+    parts = []
+    for c in range(topo.n_components):
+      off, cnt = topo.offsets[c] * unit, topo.counts[c] * unit
+      sl = cache[name][:, :, off:off + cnt]
+      if Mp * unit - cnt:
+        sl = jnp.pad(sl, [(0, 0), (0, 0), (0, Mp * unit - cnt), (0, 0)])
+      parts.append(sl)
+    out[name] = kvc.replicate_leaf(jnp.stack(parts, axis=2),
+                                   topo.replicas, axis=2)
+  parts = []
+  for c in range(topo.n_components):
+    sl = cache["counts"][:, topo.offsets[c]:topo.offsets[c]
+                         + topo.counts[c]]
+    if Mp - topo.counts[c]:
+      sl = jnp.pad(sl, [(0, 0), (0, Mp - topo.counts[c])])
+    parts.append(sl)
+  out["counts"] = kvc.replicate_leaf(jnp.stack(parts, axis=1),
+                                     topo.replicas, axis=1)
+  kd = jax.random.normal(ks[4], (B, Hkv, 1, D), jnp.float32)
+  q = jax.random.normal(ks[5], (B, Hkv * 2, D), jnp.float32)
+  return q, out, (kd, kd), C, D
+
+
+@pytest.mark.parametrize("skew,alloc", [(0.0, "mass"), (1.1, "topk")])
+def test_stacked_gather_invariant_to_selection(skew, alloc):
+  """Whatever fe_replica says — including mixed FULL/STAGE1 modes and a
+  skewed padded partition — the stacked fleet gather equals the
+  all-primary gather EXACTLY (np.array_equal, zero ulps)."""
+  topo = plan_2d(16, 4, 3, skew=skew)
+  N, R = topo.n_components, topo.replicas
+  q, csl, self_kv, C, D = _synthetic_fleet_cache(topo, seed=int(skew * 10))
+  attn = make_fleet_attention(topo, alloc=alloc, mesh=None)
+  sm = float(1.0 / np.sqrt(D))
+  mode = np.full((N,), MODE_FULL)
+  mode[1] = MODE_STAGE1
+
+  def run(sel):
+    c = dict(csl)
+    c["fe_mode"] = jnp.asarray(mode, jnp.int32)
+    c["fe_replica"] = jnp.asarray(sel, jnp.int32)
+    out, aux = attn(q, c, i_max=4, cluster_size=C, sm_scale=sm,
+                    self_kv=self_kv, impl="xla")
+    return np.asarray(out), np.asarray(aux["fe_cover"])
+
+  ref_out, ref_cover = run(np.zeros(N, np.int32))
+  rng = np.random.default_rng(7)
+  for _ in range(4):
+    sel = rng.integers(0, R, N).astype(np.int32)
+    got_out, got_cover = run(sel)
+    assert np.array_equal(got_out, ref_out), sel
+    assert np.array_equal(got_cover, ref_cover), sel
+
+
+# -- engine integration ------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet_engine():
+  cfg = get_config("llama3-8b", smoke=True)
+  backend = FleetStepBackend(FleetConfig(
+      n_components=2, replicas=2, seed=0, use_mesh=False))
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=64, max_new_tokens=3, deadline_ms=60.0,
+      policy="accuracytrader", impl="xla"), backend=backend)
+  return eng, backend
+
+
+def test_fleet_engine_end_to_end(fleet_engine):
+  eng, backend = fleet_engine
+  assert backend.replica_mappings == 2
+  assert eng._map_count == 2
+  # Every arena leaf grew the R axis; counts at (nb, na, B, R, N, Mp).
+  assert eng.cache["counts"].shape[3] == 2
+  assert eng.cache["k"].shape[4] == 2
+  s = run_open_loop(eng, rate_per_s=30.0, duration_s=0.4, seed=5)
+  assert s["n"] > 0 and s["n"] == len(eng.completed)
+  for r in eng.completed:
+    assert 0.0 <= r.accuracy <= 1.0
+    assert all(0.0 <= a <= 1.0 for a in r.step_acc)
+  assert backend.predictor.table()
+
+
+def test_fleet_rejects_resilience_knobs():
+  from repro.serve.resilience import FaultSpec
+  cfg = get_config("llama3-8b", smoke=True)
+  with pytest.raises(ValueError, match="non-resilient"):
+    ServingEngine(cfg, EngineConfig(
+        n_slots=1, prompt_len=64, max_new_tokens=2, impl="xla"),
+        backend=FleetStepBackend(FleetConfig(
+            n_components=2, replicas=2, use_mesh=False,
+            faults=FaultSpec(crash_rate=0.1))))
+
+
+def test_fleet_admission_pins_arena_per_replica():
+  """One admission maps the arena onto R replica rows and holds R pins
+  (miss AND hit paths), so retiring one replica's mapping can never free
+  an arena another replica still reads; retirement releases all R."""
+  cfg = get_config("llama3-8b", smoke=True)
+  Cs = cfg.synopsis.cluster_size
+  backend = FleetStepBackend(FleetConfig(
+      n_components=2, replicas=2, seed=0, use_mesh=False))
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=64, max_new_tokens=2, policy="fixed",
+      fixed_budget=1, impl="xla",
+      cache=CacheConfig(capacity=4, delta_unit=Cs)), backend=backend)
+  eng.reset()
+  reqs = make_requests([0.0, 0.0], 64, 2, cfg.vocab, seed=9)
+  reqs[1].prompt = reqs[0].prompt.copy()
+  eng._admit(reqs[0], 0)                     # miss: publish + R-1 extra pins
+  entry = eng.corpus_cache.entries[eng._slot_entry[0]]
+  assert entry.refcount == 2                 # R mappings for one slot
+  eng._admit(reqs[1], 1)                     # hit: R more pins
+  assert entry.refcount == 4
+  # The replicated slot lanes the write produced are bit-identical per
+  # (replica, shard) coordinate to the primary row.
+  topo = backend.topo
+  grid = topo.shard_grid()
+  for leaf in kvc.ARENA_LEAVES:
+    x = np.asarray(eng.cache[leaf])
+    ax = 3 if leaf == "counts" else 4        # replica axis after (nb,na,B[,H])
+    x = np.moveaxis(x, (ax, ax + 1), (0, 1))  # (R, N, ...)
+    assert abs(x).sum() > 0                  # the write really landed
+    for r in range(topo.replicas):
+      for j in range(topo.n_components):
+        assert np.array_equal(x[r, j], x[0, grid[r, j]]), (leaf, r, j)
+  eng._retire(0)                             # releases slot 0's R pins
+  assert entry.refcount == 2
+  eng._retire(1)
+  assert entry.refcount == 0                 # unpinned, evictable
+
+
+def test_fleet_never_worse_than_modelled_hedge():
+  """The deterministic accounting gate, in miniature: under the SAME
+  seeds and draws, the fleet's realized per-step parallel time (every
+  shard at its earliest materialized holder) is <= the cluster tier's
+  modelled-hedge time — and EQUAL when the cluster hedges every shard
+  (deadline ~ 0 forces reissue everywhere; R=2 rows price identically)."""
+  cfg = get_config("llama3-8b", smoke=True)
+
+  def mk(backend):
+    eng = ServingEngine(cfg, EngineConfig(
+        n_slots=1, prompt_len=64, max_new_tokens=2, policy="basic",
+        impl="xla"), backend=backend)
+    return eng, backend
+
+  _, fb = mk(FleetStepBackend(FleetConfig(
+      n_components=2, replicas=2, seed=0, use_mesh=False)))
+  _, cb = mk(ClusterStepBackend(ClusterConfig(
+      n_components=2, replicas=2, seed=0, use_mesh=False)))
+  for deadline, must_equal in ((1e-6, True), (4.0, False)):
+    fb.reseed(1234)
+    cb.reseed(1234)
+    worse = equal = 0
+    for _ in range(32):
+      pf = fb.plan_step(1, deadline)
+      pc = cb.plan_step(1, deadline)
+      af = fb.account(1, 10.0, pf, {}, warming=True)
+      ac = cb.account(1, 10.0, pc, {}, warming=True)
+      assert af["parallel_ms"] <= ac["parallel_ms"] + 1e-9
+      worse += af["parallel_ms"] > ac["parallel_ms"] + 1e-9
+      equal += abs(af["parallel_ms"] - ac["parallel_ms"]) <= 1e-9
+    assert worse == 0
+    if must_equal:                 # all-hedged: identical pricing
+      assert equal == 32
+
+
+# -- shard_map execution (multi-device, subprocess) --------------------------
+
+_FLEET_SHARDED_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.control import MODE_FULL, MODE_STAGE1
+from repro.dist.topology import make_fleet_mesh, plan_2d
+from repro.serve.fleet import make_fleet_attention
+from tests.test_fleet import _synthetic_fleet_cache
+
+topo = plan_2d(16, 4, 2, skew=1.1)       # R=2 x N=4 on 8 devices
+N, R = topo.n_components, topo.replicas
+mesh = make_fleet_mesh(N, R)
+assert mesh is not None
+q, csl, self_kv, C, D = _synthetic_fleet_cache(topo, seed=3)
+sm = float(1.0 / np.sqrt(D))
+mode = np.full((N,), MODE_FULL); mode[2] = MODE_STAGE1
+sharded = make_fleet_attention(topo, alloc="mass", mesh=mesh)
+stacked = make_fleet_attention(topo, alloc="mass", mesh=None)
+
+def run(attn, sel):
+    c = dict(csl)
+    c["fe_mode"] = jnp.asarray(mode, jnp.int32)
+    c["fe_replica"] = jnp.asarray(sel, jnp.int32)
+    out, aux = attn(q, c, i_max=4, cluster_size=C, sm_scale=sm,
+                    self_kv=self_kv, impl="xla")
+    return np.asarray(out), np.asarray(aux["fe_cover"])
+
+rng = np.random.default_rng(11)
+ref_out, ref_cover = run(stacked, np.zeros(N, np.int32))
+err = 0.0
+for _ in range(3):
+    sel = rng.integers(0, R, N).astype(np.int32)
+    got_out, got_cover = run(sharded, sel)
+    err = max(err, float(np.abs(got_out - ref_out).max()),
+              float(np.abs(got_cover - ref_cover).max()))
+print("RESULT:" + json.dumps({"err": err}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_sharded_fleet_equals_stacked_bitwise():
+  """The 2-D shard_map execution (8 placeholder devices = R2 x N4 mesh)
+  must equal the stacked all-primary gather EXACTLY — the replica copies
+  are bit-identical and both paths fold in fixed shard order, so the
+  tolerance is zero, not epsilon."""
+  import json
+  import subprocess
+  import sys
+  env = dict(os.environ)
+  env["PYTHONPATH"] = "src:" + os.path.dirname(os.path.dirname(__file__))
+  p = subprocess.run([sys.executable, "-c", _FLEET_SHARDED_PROG],
+                     capture_output=True, text=True, env=env, timeout=600,
+                     cwd=os.path.dirname(os.path.dirname(__file__)))
+  assert p.returncode == 0, p.stderr[-3000:]
+  line = [l for l in p.stdout.splitlines() if l.startswith("RESULT:")][0]
+  assert json.loads(line[len("RESULT:"):])["err"] == 0.0

@@ -247,3 +247,139 @@ def pallas_vs_xla_sweep(impl: str | None = None) -> Dict[str, float]:
       out[f"fused_{impl}_S{S}_us"] / out[f"fused_xla_S{S}_us"])
   out["pallas_impl"] = impl
   return out
+
+
+def _quant_arenas(S, *, B=4, Hkv=8, G=4, D=128, C=128, qspec="int8+kv",
+                  seed=3):
+  """One corpus, two arenas: the f32 build 5-tuple and the quantized
+  arena dict (identity permutation — rows are already cluster order)."""
+  ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+  q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+  k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+  v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+  perm = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+  f32 = ops.synopsis_build(k, v, perm, cluster_size=C, impl="xla")
+  qa = ops.synopsis_build(k, v, perm, cluster_size=C, impl="xla",
+                          qconfig=qspec)
+  return q, k, v, f32, qa
+
+
+def _rel_dev(a, b):
+  a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+  return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30))
+
+
+def quant_sweep(impl: str | None = None) -> Dict[str, float]:
+  """Quantized synopsis (DESIGN.md §15): predicted HBM-traffic reduction
+  (the roofline accounting that IS the perf claim), the XLA-proxy
+  measured times (honest caveat: the XLA lowering materializes f32
+  dequantized copies, so the measured proxy ratio understates — and can
+  invert — the TPU win; EXPERIMENTS.md §Quantization), accuracy
+  deviation of the quantized arm vs the f32 arm and vs exact attention,
+  and an interpret-mode parity smoke of the actual kernels."""
+  from repro.analysis.roofline import traffic_reduction
+  impl = impl or ("pallas" if jax.default_backend() == "tpu"
+                  else "interpret")
+  B, Hkv, G, D, C, I = 4, 8, 4, 128, 128, 32
+  sm = float(1 / np.sqrt(D))
+  out: Dict[str, float] = {}
+  for S in (4096, 16384):
+    M = S // C
+    q, k, v, f32, qa = _quant_arenas(S, B=B, Hkv=Hkv, G=G, D=D, C=C)
+    k_s, v_s, k_syn, v_syn, counts = f32
+
+    f32_fn = jax.jit(lambda q, k, v, ks_, vs, c: ops.synopsis_attention_fused(
+        q, k, v, ks_, vs, c, i_max=I, sm_scale=sm, impl="xla"))
+    qt_fn = jax.jit(lambda q, a: ops.synopsis_attention_fused(
+        q, a["k"], a["v"], a["k_syn"], a["v_syn"], a["counts"],
+        a["k_syn_scale"], a["v_syn_scale"], a["k_scale"], a["v_scale"],
+        i_max=I, sm_scale=sm, impl="xla"))
+    exact_fn = jax.jit(lambda q, k, v: ops.exact_decode_attention(
+        q, k, v, sm_scale=sm, impl="xla"))
+
+    o_f = f32_fn(q, k_s, v_s, k_syn, v_syn, counts)
+    o_q = qt_fn(q, qa)
+    o_e = exact_fn(q, k, v)
+    out[f"dev_quant_vs_f32_S{S}"] = _rel_dev(o_q, o_f)
+    out[f"dev_f32_vs_exact_S{S}"] = _rel_dev(o_f, o_e)
+    out[f"dev_quant_vs_exact_S{S}"] = _rel_dev(o_q, o_e)
+    # The floor metric: how much FURTHER from exact the quantized arm
+    # lands than the f32 arm at the same budget.  (At partial coverage
+    # the two arms can select different clusters, so quant-vs-f32 drift
+    # alone overstates the loss both arms share vs exact.)
+    out[f"incremental_loss_S{S}"] = (out[f"dev_quant_vs_exact_S{S}"]
+                                     - out[f"dev_f32_vs_exact_S{S}"])
+
+    out[f"fused_f32_S{S}_us"] = _time(
+        f32_fn, q, k_s, v_s, k_syn, v_syn, counts)
+    out[f"fused_int8kv_S{S}_us"] = _time(qt_fn, q, qa)
+    out[f"measured_proxy_ratio_S{S}"] = (
+        out[f"fused_f32_S{S}_us"] / out[f"fused_int8kv_S{S}_us"])
+
+    shape = dict(batch=B, kv_heads=Hkv, m=M, d=D, cluster_size=C, i_max=I)
+    for qspec in ("int8", "int8+kv"):
+      for nb, nm in ((4, "f32"), (2, "bf16")):
+        red = traffic_reduction(qspec, native_bytes=nb, **shape)
+        tag = qspec.replace("+", "_")
+        out[f"pred_stage1_reduction_{tag}_vs_{nm}_S{S}"] = red["stage1"]
+        out[f"pred_total_reduction_{tag}_vs_{nm}_S{S}"] = red["total"]
+
+  # Interpret smoke: the actual build + fused kernels under the Pallas
+  # interpreter at a small shape, vs the XLA quant reference.
+  S_sm, C_sm, I_sm = 512, 64, 8
+  q, k, v, _, qa = _quant_arenas(S_sm, B=1, Hkv=2, G=2, C=C_sm, seed=5)
+  perm = jnp.broadcast_to(jnp.arange(S_sm, dtype=jnp.int32), (1, S_sm))
+  qa_i = ops.synopsis_build(k, v, perm, cluster_size=C_sm, impl=impl,
+                            qconfig="int8+kv")
+  int_diff = max(int(jnp.max(jnp.abs(
+      qa_i[n].astype(jnp.int32) - qa[n].astype(jnp.int32))))
+      for n in ("k", "v", "k_syn", "v_syn"))
+  out["interpret_build_max_int_diff"] = float(int_diff)
+  run = lambda a, im: ops.synopsis_attention_fused(   # noqa: E731
+      q, a["k"], a["v"], a["k_syn"], a["v_syn"], a["counts"],
+      a["k_syn_scale"], a["v_syn_scale"], a["k_scale"], a["v_scale"],
+      i_max=I_sm, sm_scale=sm, impl=im)
+  out["interpret_fused_dev"] = _rel_dev(run(qa_i, impl), run(qa, "xla"))
+  out["quant_impl"] = impl
+
+  # Gates (CI asserts these): the bytes claim uses the CONSERVATIVE
+  # bf16-native baseline; the loss claim is the quantized arm's extra
+  # deviation staying inside the ~7% stage-1 accuracy floor.
+  out["check_pred_reduction_ge_1_8"] = bool(
+      min(out["pred_stage1_reduction_int8_vs_bf16_S4096"],
+          out["pred_stage1_reduction_int8_vs_bf16_S16384"]) >= 1.8)
+  out["check_loss_within_floor"] = bool(
+      max(out["incremental_loss_S4096"],
+          out["incremental_loss_S16384"]) <= 0.07
+      and out["interpret_build_max_int_diff"] == 0
+      and out["interpret_fused_dev"] < 1e-3)
+  return out
+
+
+def quant_serving_arm() -> Dict[str, float]:
+  """The serving-level control experiment: the engine's smoke config run
+  with quant="none" vs "int8" vs "int8+kv" over the same arrivals.  The
+  recorded accuracy_loss_pct is the engine's own exact-vs-served metric;
+  the int8 arm must stay inside the stage-1 floor (~7%)."""
+  import dataclasses
+
+  from repro.configs.registry import get_config
+  from repro.serve.engine import EngineConfig, ServingEngine, make_requests
+
+  cfg = get_config("llama3-8b", smoke=True)
+  ecfg = EngineConfig(n_slots=2, prompt_len=64, max_new_tokens=4,
+                      deadline_ms=60.0, policy="accuracytrader", impl="xla")
+  arrivals = [0.0, 0.001, 0.002, 0.003]
+  out: Dict[str, float] = {}
+  for qspec in ("none", "int8", "int8+kv"):
+    c = dataclasses.replace(
+        cfg, synopsis=dataclasses.replace(cfg.synopsis, quant=qspec))
+    eng = ServingEngine(c, ecfg)
+    summary = eng.run(make_requests(arrivals, 64, 4, c.vocab, seed=7))
+    tag = qspec.replace("+", "_")
+    out[f"engine_{tag}_accuracy_loss_pct"] = summary["accuracy_loss_pct"]
+    out[f"engine_{tag}_p99_ms"] = summary["p99"]
+  out["check_serving_loss_within_floor"] = bool(
+      out["engine_int8_accuracy_loss_pct"] <= 7.0
+      and out["engine_int8_kv_accuracy_loss_pct"] <= 7.0)
+  return out

@@ -134,6 +134,43 @@ def bench_kernels(collect=None):
     collect["impl_ratio"] = pvx
 
 
+def bench_quant(collect=None):
+  """Quantized-synopsis sweep + serving arm (EXPERIMENTS.md
+  §Quantization; DESIGN.md §15).  The headline is the *predicted*
+  stage-1 bytes reduction — the measured XLA-proxy ratio is reported
+  honestly but is not the claim (the proxy materializes f32 dequant
+  copies)."""
+  from benchmarks.kernels_bench import quant_serving_arm, quant_sweep
+  qs = quant_sweep()
+  for S in (4096, 16384):
+    _row(f"kernel_quant_S{S}", qs[f"fused_int8kv_S{S}_us"],
+         f"f32={qs[f'fused_f32_S{S}_us']:.0f}us "
+         f"proxy_ratio={qs[f'measured_proxy_ratio_S{S}']:.2f}x "
+         f"pred_stage1_red_vs_bf16="
+         f"{qs[f'pred_stage1_reduction_int8_vs_bf16_S{S}']:.2f}x "
+         f"pred_stage1_red_vs_f32="
+         f"{qs[f'pred_stage1_reduction_int8_vs_f32_S{S}']:.2f}x "
+         f"inc_loss={qs[f'incremental_loss_S{S}']:.4f}")
+  _row("kernel_quant_parity", 0.0,
+       f"impl={qs['quant_impl']} "
+       f"build_int_diff={qs['interpret_build_max_int_diff']:.0f} "
+       f"fused_dev={qs['interpret_fused_dev']:.2e}")
+  sv = quant_serving_arm()
+  _row("serving_quant", 0.0,
+       f"loss_none={sv['engine_none_accuracy_loss_pct']:.2f}% "
+       f"loss_int8={sv['engine_int8_accuracy_loss_pct']:.2f}% "
+       f"loss_int8_kv={sv['engine_int8_kv_accuracy_loss_pct']:.2f}%")
+  checks = {k: v for k, v in {**qs, **sv}.items()
+            if k.startswith("check_")}
+  _row("quant_checks", 0.0,
+       " ".join(f"{k}={v}" for k, v in sorted(checks.items())))
+  if collect is not None:
+    collect["quant"] = qs
+    collect["quant_serving"] = sv
+  if not all(checks.values()):
+    raise SystemExit(f"quant gates failed: {checks}")
+
+
 def bench_roofline():
   art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
   files = sorted(glob.glob(os.path.join(art, "*__single__*.json")))
@@ -168,6 +205,11 @@ def main() -> None:
   ap.add_argument("--prefill-only", action="store_true",
                   help="run only the prefill + synopsis-build sweeps "
                        "(BENCH_prefill.json baseline)")
+  ap.add_argument("--quant-only", action="store_true",
+                  help="run only the quantized-synopsis sweep + serving "
+                       "arm (DESIGN.md §15) and MERGE the result into "
+                       "--json if the file already exists (re-stamps "
+                       "meta); exits non-zero if a quant gate fails")
   ap.add_argument("--serving-only", action="store_true",
                   help="pass through to benchmarks.serving_bench "
                        "(BENCH_serving.json baseline)")
@@ -222,6 +264,8 @@ def main() -> None:
   collect = {} if args.json else None
   if args.prefill_only:
     bench_prefill(collect)
+  elif args.quant_only:
+    bench_quant(collect)
   else:
     if not args.kernels_only:
       bench_table1_table2()
@@ -230,10 +274,20 @@ def main() -> None:
       bench_fig5_fig6()
     bench_kernels(collect)
     bench_prefill(collect)
+    bench_quant(collect)
     bench_roofline()
   if args.json:
     from benchmarks.common import bench_meta
     meta = bench_meta()
+    if args.quant_only and os.path.exists(args.json):
+      # Standalone regeneration: fold the quant section into the
+      # existing baseline (BENCH_decode.json) instead of clobbering the
+      # kernel sweeps, and re-stamp meta to the producing revision.
+      with open(args.json) as f:
+        prev = json.load(f)
+      prev.update(collect)
+      prev["meta"] = meta
+      collect = {k: v for k, v in prev.items() if k != "meta"}
     with open(args.json, "w") as f:
       json.dump({"meta": meta, **collect}, f, indent=1, sort_keys=True)
     print(f"# wrote {args.json}")

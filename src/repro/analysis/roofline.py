@@ -223,6 +223,82 @@ class Roofline:
     }
 
 
+# -- analytic per-stage synopsis traffic (DESIGN.md §15) ---------------------
+#
+# The decode step's memory floor is what it must stream from HBM each
+# token: stage 1 reads the whole synopsis (k_syn/v_syn + counts), stage 2
+# reads the I selected cluster blocks plus the decrement centroid rows.
+# Quantization shrinks exactly those streams; the per-row / per-block
+# scales ride along as f32 and are charged here so the claimed reduction
+# is honest about its own overhead.
+
+_QUANT_BYTES = {"none": None, "int8": 1, "fp8": 1}
+
+
+def _quant_parts(quant: str):
+  """(bytes-per-element of the quantized leaves or None, sorted_kv)."""
+  q = quant or "none"
+  kind, _, kv = q.partition("+")
+  if kind not in _QUANT_BYTES:
+    raise ValueError(f"unknown quant spec {quant!r}")
+  if kv not in ("", "kv"):
+    raise ValueError(f"unknown quant spec {quant!r}")
+  return _QUANT_BYTES[kind], kv == "kv"
+
+
+def synopsis_traffic(*, batch: int, kv_heads: int, m: int, d: int,
+                     cluster_size: int, i_max: int, native_bytes: int = 4,
+                     quant: str = "none") -> dict:
+  """Per-decode-step HBM bytes read by each synopsis stage.
+
+  ``native_bytes`` is the element size of the unquantized arena (4 for
+  f32, 2 for bf16); ``quant`` is a spec from ``kernels.quant.QSPECS``.
+  Counts and scales are f32.  The query/output traffic is O(B*H*D) —
+  orders below the arena streams — and is omitted from both arms so
+  ratios compare like with like.
+  """
+  qb, sorted_kv = _quant_parts(quant)
+  syn_b = qb if qb is not None else native_bytes
+  kv_b = qb if (qb is not None and sorted_kv) else native_bytes
+  B, Hkv, M, D, C, I = batch, kv_heads, m, d, cluster_size, i_max
+
+  s1 = {
+      "k_syn": B * Hkv * M * D * syn_b,
+      "v_syn": B * Hkv * M * D * syn_b,
+      "counts": B * Hkv * M * 4,
+  }
+  if qb is not None:
+    s1["scales"] = 2 * B * Hkv * M * 4          # k_syn_scale + v_syn_scale
+  s2 = {
+      "k_blocks": B * Hkv * I * C * D * kv_b,
+      "v_blocks": B * Hkv * I * C * D * kv_b,
+      "decrement_rows": 2 * B * Hkv * I * D * syn_b,
+  }
+  if qb is not None:
+    s2["scales"] = 2 * B * Hkv * I * 4          # centroid-row scales
+    if sorted_kv:
+      s2["scales"] += 2 * B * Hkv * I * 4       # per-cluster k/v scales
+  s1["total"] = sum(s1.values())
+  s2["total"] = sum(s2.values())
+  return {"stage1": s1, "stage2": s2,
+          "total": s1["total"] + s2["total"]}
+
+
+def traffic_reduction(quant: str, *, batch: int, kv_heads: int, m: int,
+                      d: int, cluster_size: int, i_max: int,
+                      native_bytes: int = 4) -> dict:
+  """Bytes-read reduction of a quantized arm over the ``quant="none"``
+  arm with the same shapes: {"stage1": x, "stage2": x, "total": x}."""
+  shape = dict(batch=batch, kv_heads=kv_heads, m=m, d=d,
+               cluster_size=cluster_size, i_max=i_max,
+               native_bytes=native_bytes)
+  base = synopsis_traffic(quant="none", **shape)
+  q = synopsis_traffic(quant=quant, **shape)
+  return {k: base[k]["total"] / q[k]["total"] if isinstance(base[k], dict)
+          else base[k] / q[k]
+          for k in ("stage1", "stage2", "total")}
+
+
 def from_compiled(compiled, chips: int,
                   model_flops: Optional[float] = None) -> Roofline:
   cost = compiled.cost_analysis()

@@ -51,8 +51,11 @@ NEG_INF = -1e30
 
 def _kernel(sel_ref, q_ref, k_ref, v_ref, *rest, sm_scale: float,
             cap: Optional[float], num_i: int, num_steps: int,
-            has_dec: bool, has_ext: bool):
+            has_dec: bool, has_ext: bool, has_kq: bool):
   it = iter(rest)
+  ksc_ref = vsc_ref = None
+  if has_kq:                    # quantized sorted KV (DESIGN.md §15)
+    ksc_ref, vsc_ref = next(it), next(it)
   kc_ref = vc_ref = cb_ref = ke_ref = ve_ref = eb_ref = None
   if has_dec:
     kc_ref, vc_ref, cb_ref = next(it), next(it), next(it)
@@ -77,9 +80,15 @@ def _kernel(sel_ref, q_ref, k_ref, v_ref, *rest, sm_scale: float,
 
     k = k_ref[0, 0].astype(jnp.float32)             # (C, D)
     v = v_ref[0, 0].astype(jnp.float32)
-    logits = _cap(jax.lax.dot_general(
+    raw = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * sm_scale, cap)
+        preferred_element_type=jnp.float32)
+    if has_kq:
+      # Per-cluster scalar dequant folded into the logits: this step's
+      # whole (C, D) block shares one scale, so it multiplies through
+      # AFTER the matmul (never a materialized f32 block).
+      raw = raw * ksc_ref[0, 0, 0].astype(jnp.float32)
+    logits = _cap(raw * sm_scale, cap)
     logits = jnp.where(valid, logits, NEG_INF)      # mask padded clusters
 
     m_prev = m_s[:, 0]
@@ -96,8 +105,9 @@ def _kernel(sel_ref, q_ref, k_ref, v_ref, *rest, sm_scale: float,
     p = jnp.exp(logits - m_new[:, None])
     alpha = jnp.exp(m_prev - m_new)
     l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+    pv = p if not has_kq else p * vsc_ref[0, 0, 0].astype(jnp.float32)
     acc_new = acc[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     if has_dec:
       vc = vc_ref[0, 0].astype(jnp.float32)         # (1, D)
       p_c = jnp.exp(s_c - m_new[:, None])           # (G, 1)
@@ -156,6 +166,8 @@ def block_gather_attention(
     extras_k: Optional[jax.Array] = None,     # (B, Hkv, E, D)
     extras_v: Optional[jax.Array] = None,     # (B, Hkv, E, D)
     extras_bias: Optional[jax.Array] = None,  # (B, E) additive log-space
+    kv_k_scale: Optional[jax.Array] = None,   # (B, Hkv, M) per-cluster
+    kv_v_scale: Optional[jax.Array] = None,   # dequant scales (§15)
     interpret: bool = False,
 ):
   """Returns partials (out (B,H,D) f32, m (B,H), l (B,H)).
@@ -163,6 +175,10 @@ def block_gather_attention(
   Plain call: exact attention over the selected cluster blocks.  With the
   fused epilogue inputs it additionally subtracts the selected centroids'
   stage-1 terms and folds in the recent/self extras (see module doc).
+  With ``kv_k_scale``/``kv_v_scale`` the sorted KV is quantized and each
+  grid step's scalar-prefetched index also steers a (1,) scale DMA —
+  dequant multiplies into the logits / the p·v weights in-grid
+  (DESIGN.md §15).
   """
   B, H, D = q.shape
   _, Hkv, S, _ = k.shape
@@ -172,6 +188,7 @@ def block_gather_attention(
   I = selected.shape[-1]
   has_dec = k_sel is not None
   has_ext = extras_k is not None
+  has_kq = kv_k_scale is not None
 
   num_steps = I + (1 if has_ext else 0)
   grid = (B, Hkv, num_steps)
@@ -186,12 +203,23 @@ def block_gather_attention(
   def _sel_row(b, h, j, sel):
     return (b, h, jnp.minimum(j, I - 1), 0)
 
+  def _scale_index(b, h, j, sel):
+    # Same clamp as _kv_index, one scalar per cluster block.
+    jc = jnp.minimum(j, I - 1)
+    return (b, h, jnp.maximum(sel[b, h, jc], 0))
+
   in_specs = [
       pl.BlockSpec((1, G, D), lambda b, h, j, sel: (b, h, 0)),
       pl.BlockSpec((1, 1, C, D), _kv_index),
       pl.BlockSpec((1, 1, C, D), _kv_index),
   ]
   args = [q, k, v]
+  if has_kq:
+    in_specs += [
+        pl.BlockSpec((1, 1, 1), _scale_index),
+        pl.BlockSpec((1, 1, 1), _scale_index),
+    ]
+    args += [kv_k_scale.astype(jnp.float32), kv_v_scale.astype(jnp.float32)]
   if has_dec:
     in_specs += [
         pl.BlockSpec((1, 1, 1, D), _sel_row),
@@ -227,7 +255,7 @@ def block_gather_attention(
   fn = pl.pallas_call(
       functools.partial(_kernel, sm_scale=sm_scale, cap=cap, num_i=I,
                         num_steps=num_steps, has_dec=has_dec,
-                        has_ext=has_ext),
+                        has_ext=has_ext, has_kq=has_kq),
       grid_spec=grid_spec,
       out_shape=[
           jax.ShapeDtypeStruct((B, H, D), jnp.float32),

@@ -38,9 +38,13 @@ from repro.kernels.ref import apply_softcap
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, cb_ref, s_ref, o_ref, m_ref, l_ref,
-            acc, m_s, l_s, *, sm_scale: float, cap: Optional[float],
-            num_m_blocks: int):
+def _kernel(q_ref, k_ref, v_ref, cb_ref, *rest, sm_scale: float,
+            cap: Optional[float], num_m_blocks: int, has_scale: bool):
+  it = iter(rest)
+  ks_ref = vs_ref = None
+  if has_scale:                 # quantized synopsis (DESIGN.md §15)
+    ks_ref, vs_ref = next(it), next(it)
+  s_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = it
   m_idx = pl.program_id(2)
 
   @pl.when(m_idx == 0)
@@ -55,7 +59,13 @@ def _kernel(q_ref, k_ref, v_ref, cb_ref, s_ref, o_ref, m_ref, l_ref,
 
   logits = jax.lax.dot_general(                     # (G, bm) — computed ONCE
       q, k, (((1,), (1,)), ((), ())),
-      preferred_element_type=jnp.float32) * sm_scale
+      preferred_element_type=jnp.float32)
+  if has_scale:
+    # Dequantize in the accumulator: the per-centroid k-scale (>= 0, so
+    # the score ranking is preserved) multiplies the raw logits; k_syn
+    # itself is never materialized in f32.
+    logits = logits * ks_ref[0, 0][None, :].astype(jnp.float32)
+  logits = logits * sm_scale
 
   # Use 1: correlation scores (uncapped — softcap is monotone, ranking
   # unchanged; matches ref.synopsis_score_ref).
@@ -70,8 +80,11 @@ def _kernel(q_ref, k_ref, v_ref, cb_ref, s_ref, o_ref, m_ref, l_ref,
   p = jnp.exp(logits - m_new[:, None])
   alpha = jnp.exp(m_prev - m_new)
   l_new = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+  # v-scale weights p entering the p·v matmul; l stays unscaled (the
+  # softmax weights are scale-free — only the value rows are quantized).
+  pv = p if not has_scale else p * vs_ref[0, 0][None, :].astype(jnp.float32)
   acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
-      p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+      pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
   m_s[:, 0] = m_new
   l_s[:, 0] = l_new
 
@@ -94,6 +107,8 @@ def fused_synopsis_score_attention(
     sm_scale: float = 1.0,
     cap: Optional[float] = None,
     block_m: int = 512,
+    k_scale: Optional[jax.Array] = None,   # (B, Hkv, M) per-centroid-row
+    v_scale: Optional[jax.Array] = None,   # dequant scales (DESIGN.md §15)
     interpret: bool = False,
 ):
   """Returns (scores (B,Hkv,M) f32, o (B,H,D) f32, m (B,H), l (B,H))."""
@@ -101,21 +116,31 @@ def fused_synopsis_score_attention(
   _, Hkv, M, _ = k_syn.shape
   G = H // Hkv
   assert H == Hkv * G and k_syn.shape == v_syn.shape
+  has_scale = k_scale is not None
   block_m = min(block_m, M)
   if M % block_m != 0:          # ragged centroid table: one whole-M tile
     block_m = M
   nm = M // block_m
 
+  in_specs = [
+      pl.BlockSpec((1, G, D), lambda b, h, m: (b, h, 0)),
+      pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+      pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+      pl.BlockSpec((1, block_m), lambda b, h, m: (b, m)),
+  ]
+  args = [q, k_syn, v_syn, cbias.astype(jnp.float32)]
+  if has_scale:
+    in_specs += [
+        pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
+        pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
+    ]
+    args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
   fn = pl.pallas_call(
       functools.partial(_kernel, sm_scale=sm_scale, cap=cap,
-                        num_m_blocks=nm),
+                        num_m_blocks=nm, has_scale=has_scale),
       grid=(B, Hkv, nm),
-      in_specs=[
-          pl.BlockSpec((1, G, D), lambda b, h, m: (b, h, 0)),
-          pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
-          pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
-          pl.BlockSpec((1, block_m), lambda b, h, m: (b, m)),
-      ],
+      in_specs=in_specs,
       out_specs=[
           pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
           pl.BlockSpec((1, G, D), lambda b, h, m: (b, h, 0)),
@@ -136,5 +161,5 @@ def fused_synopsis_score_attention(
       interpret=interpret,
       name="fused_synopsis_score_attention",
   )
-  scores, o, m, l = fn(q, k_syn, v_syn, cbias.astype(jnp.float32))
+  scores, o, m, l = fn(*args)
   return scores, (o, m, l)

@@ -39,6 +39,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant as qt
 from repro.kernels import ref
 from repro.kernels.block_gather_attention import block_gather_attention
 from repro.kernels.flash_decode import flash_decode
@@ -126,7 +127,8 @@ def prefill_attention(
                        interpret=(impl == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("cluster_size", "impl"))
+@functools.partial(
+    jax.jit, static_argnames=("cluster_size", "impl", "qconfig"))
 def synopsis_build(
     k: jax.Array,        # (N, Hkv, S, D) exact cache, flat leading dims
     v: jax.Array,        # (N, Hkv, S, D)
@@ -134,16 +136,25 @@ def synopsis_build(
     *,
     cluster_size: int,
     impl: str = "pallas",
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    qconfig: Optional[str] = None,
+):
   """Permute the cache cluster-contiguous AND aggregate mean centroids in
-  one pass.  Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M)).
+  one pass.  Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M)),
+  or — with a quantizing ``qconfig`` spec (DESIGN.md §15) — the arena
+  dict including the quantized tables + per-block scales, emitted in the
+  same streaming pass.
 
   The Pallas path streams each row through VMEM exactly once
   (scalar-prefetch-steered row DMA); the XLA path keeps the
   take_along_axis -> reshape-mean chain (two passes + gather copies)."""
+  qc = qt.parse_qconfig(qconfig)
   if impl == "xla":
+    if qc.enabled:
+      return ref.synopsis_build_quant_ref(
+          k, v, perm, cluster_size=cluster_size, qc=qc)
     return ref.synopsis_build_ref(k, v, perm, cluster_size=cluster_size)
   return segment_build(k, v, perm, cluster_size=cluster_size,
+                       quant=qc.spec if qc.enabled else None,
                        interpret=(impl == "interpret"))
 
 
@@ -154,7 +165,9 @@ def synopsis_build(
 
 def synopsis_stage1(q, k_syn, v_syn, counts, *, sm_scale: float,
                     cap: Optional[float] = None, impl: str = "pallas",
-                    valid: Optional[jax.Array] = None):
+                    valid: Optional[jax.Array] = None,
+                    syn_scales: Optional[Tuple[jax.Array,
+                                               jax.Array]] = None):
   """One pass over the synopsis: (scores (B,Hkv,M), partials over ALL
   centroids with log-count bias).  Selection masking happens
   decrementally in stage 2.
@@ -163,17 +176,22 @@ def synopsis_stage1(q, k_syn, v_syn, counts, *, sm_scale: float,
   cluster tier pads every component's shard to a common ``m_max``
   (DESIGN.md §9).  Invalid slots get a NEG_INF bias (excluded from the
   stage-1 partial inside the kernel) and NEG_INF scores (never ranked by
-  the frontend's top-k)."""
+  the frontend's top-k).
+
+  ``syn_scales`` = (k_syn_scale, v_syn_scale) (B, Hkv, M) when the
+  synopsis is quantized (DESIGN.md §15); dequant folds into the kernel."""
   cbias = count_bias(counts)
   if valid is not None:
     cbias = jnp.where(valid, cbias, NEG_INF)
+  ks, vs = syn_scales if syn_scales is not None else (None, None)
   if impl == "xla":
     scores, part = ref.fused_synopsis_score_attention_ref(
-        q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap)
+        q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap,
+        k_scale=ks, v_scale=vs)
   else:
     scores, part = fused_synopsis_score_attention(
         q, k_syn, v_syn, cbias, sm_scale=sm_scale, cap=cap,
-        interpret=(impl == "interpret"))
+        k_scale=ks, v_scale=vs, interpret=(impl == "interpret"))
   if valid is not None:
     scores = jnp.where(valid[:, None, :], scores, NEG_INF)
   return scores, part
@@ -184,13 +202,22 @@ def refine_stage2(q, k, v, selected, k_syn, v_syn, counts, *,
                   cap: Optional[float] = None, impl: str = "pallas",
                   extras: Optional[Tuple[jax.Array, jax.Array,
                                          jax.Array]] = None,
-                  valid: Optional[jax.Array] = None):
+                  valid: Optional[jax.Array] = None,
+                  syn_scales: Optional[Tuple[jax.Array,
+                                             jax.Array]] = None,
+                  kv_scales: Optional[Tuple[jax.Array,
+                                            jax.Array]] = None):
   """Selected clusters' original tokens (+), their centroid stage-1 terms
   (-), and the recent/self extras (+) — one fused partial.
 
   ``selected`` may contain -1 padding (skipped).  ``valid`` optionally
   masks entries of ``selected`` that are in-range but not owned (sharded
-  path); centroid rows are gathered here (tiny: I rows, not I*C)."""
+  path); centroid rows are gathered here (tiny: I rows, not I*C).
+
+  Quantized arenas (DESIGN.md §15): ``syn_scales`` dequantizes the I
+  gathered centroid decrement rows here (tiny — outside the kernel);
+  ``kv_scales`` = (k_scale, v_scale) (B, Hkv, M) rides into the kernel,
+  whose scalar-prefetched cluster index steers the per-block scale."""
   B, H, _ = q.shape
   Hkv = k.shape[1]
   sel = selected
@@ -199,20 +226,29 @@ def refine_stage2(q, k, v, selected, k_syn, v_syn, counts, *,
   safe = jnp.maximum(sel, 0)
   k_sel = jnp.take_along_axis(k_syn, safe[..., None], axis=2)
   v_sel = jnp.take_along_axis(v_syn, safe[..., None], axis=2)
+  if syn_scales is not None:
+    ks, vs = syn_scales
+    k_sel = k_sel.astype(jnp.float32) * jnp.take_along_axis(
+        ks.astype(jnp.float32), safe, axis=2)[..., None]
+    v_sel = v_sel.astype(jnp.float32) * jnp.take_along_axis(
+        vs.astype(jnp.float32), safe, axis=2)[..., None]
   cb = count_bias(counts)                                     # (B, M)
   sel_bias = jnp.take_along_axis(
       jnp.broadcast_to(cb[:, None, :], (B, Hkv, cb.shape[-1])), safe,
       axis=2)
   ek, ev, eb = extras if extras is not None else (None, None, None)
+  kq, vq = kv_scales if kv_scales is not None else (None, None)
   if impl == "xla":
     return ref.fused_gather_attention_ref(
         q, k, v, sel, cluster_size=cluster_size, sm_scale=sm_scale,
         cap=cap, k_sel=k_sel, v_sel=v_sel, sel_bias=sel_bias,
-        extras_k=ek, extras_v=ev, extras_bias=eb)
+        extras_k=ek, extras_v=ev, extras_bias=eb,
+        kv_k_scale=kq, kv_v_scale=vq)
   return block_gather_attention(
       q, k, v, sel, cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
       k_sel=k_sel, v_sel=v_sel, sel_bias=sel_bias,
       extras_k=ek, extras_v=ev, extras_bias=eb,
+      kv_k_scale=kq, kv_v_scale=vq,
       interpret=(impl == "interpret"))
 
 
@@ -267,6 +303,10 @@ def synopsis_cache_attention(
     recent_len: Optional[jax.Array] = None,  # (B,)
     self_k: Optional[jax.Array] = None,      # (B, Hkv, 1, D)
     self_v: Optional[jax.Array] = None,
+    k_syn_scale: Optional[jax.Array] = None,  # (B, Hkv, M) — quantized
+    v_syn_scale: Optional[jax.Array] = None,  # synopsis (DESIGN.md §15);
+    kv_k_scale: Optional[jax.Array] = None,   # (B, Hkv, M) — quantized
+    kv_v_scale: Optional[jax.Array] = None,   # sorted KV
     *,
     i_max: int,
     cluster_size: int,
@@ -276,11 +316,16 @@ def synopsis_cache_attention(
 ):
   """End-to-end fused AccuracyTrader decode attention over a serve-step
   cache slice: O(M + i_max*C + R) with k_syn/v_syn read ONCE.  Returns
-  the normalised output (B, H, D) f32."""
+  the normalised output (B, H, D) f32.  All-None scales keep the
+  bit-identical unquantized path."""
   B, H, _ = q.shape
   Hkv, M = k_syn.shape[1], k_syn.shape[2]
+  syn_scales = (None if k_syn_scale is None
+                else (k_syn_scale, v_syn_scale))
+  kv_scales = None if kv_k_scale is None else (kv_k_scale, kv_v_scale)
   scores, p_syn = synopsis_stage1(q, k_syn, v_syn, counts,
-                                  sm_scale=sm_scale, cap=cap, impl=impl)
+                                  sm_scale=sm_scale, cap=cap, impl=impl,
+                                  syn_scales=syn_scales)
   if i_max > 0:
     _, selected = jax.lax.top_k(scores, min(i_max, M))
     selected = selected.astype(jnp.int32)
@@ -290,7 +335,8 @@ def synopsis_cache_attention(
   extras = build_extras(recent_k, recent_v, recent_len, self_kv)
   p_ref = refine_stage2(
       q, k, v, selected, k_syn, v_syn, counts, cluster_size=cluster_size,
-      sm_scale=sm_scale, cap=cap, impl=impl, extras=extras)
+      sm_scale=sm_scale, cap=cap, impl=impl, extras=extras,
+      syn_scales=syn_scales, kv_scales=kv_scales)
   out, _, _ = merge_partials(p_syn, p_ref)
   return out
 
@@ -305,6 +351,10 @@ def synopsis_attention_fused(
     k_syn: jax.Array,
     v_syn: jax.Array,
     counts: jax.Array,
+    k_syn_scale: Optional[jax.Array] = None,   # quantized-arena scales
+    v_syn_scale: Optional[jax.Array] = None,   # (DESIGN.md §15)
+    kv_k_scale: Optional[jax.Array] = None,
+    kv_v_scale: Optional[jax.Array] = None,
     *,
     i_max: int,
     sm_scale: float = 1.0,
@@ -315,13 +365,18 @@ def synopsis_attention_fused(
   synopsis pass + decremental refinement instead of score + masked decode
   + gather + merge."""
   M = k_syn.shape[2]
+  syn_scales = (None if k_syn_scale is None
+                else (k_syn_scale, v_syn_scale))
+  kv_scales = None if kv_k_scale is None else (kv_k_scale, kv_v_scale)
   scores, p_syn = synopsis_stage1(q, k_syn, v_syn, counts,
-                                  sm_scale=sm_scale, impl=impl)
+                                  sm_scale=sm_scale, impl=impl,
+                                  syn_scales=syn_scales)
   _, selected = jax.lax.top_k(scores, min(i_max, M))
   selected = selected.astype(jnp.int32)
   C = k.shape[2] // M
   p_ref = refine_stage2(q, k, v, selected, k_syn, v_syn, counts,
-                        cluster_size=C, sm_scale=sm_scale, impl=impl)
+                        cluster_size=C, sm_scale=sm_scale, impl=impl,
+                        syn_scales=syn_scales, kv_scales=kv_scales)
   out, m, l = merge_partials(p_syn, p_ref)
   if return_diag:
     return out, (scores, selected, m, l)

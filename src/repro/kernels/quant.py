@@ -1,0 +1,155 @@
+"""Quantized synopsis representation (DESIGN.md §15).
+
+The synopsis is *already* a lossy summary of the corpus (per-cluster mean
+centroids), so it tolerates further compression: ``k_syn``/``v_syn`` are
+stored int8 (or fp8-e4m3 where the jax build has the dtype) with one f32
+scale per centroid row, and optionally the sorted corpus KV is stored
+int8 with one f32 scale per C-row cluster block.  The roofline module
+predicts the fused stage-1 scan is HBM-bandwidth-bound, so the byte
+reduction translates near-linearly into stage-1 speedup — see
+``analysis/roofline.py`` and EXPERIMENTS.md §Quantization.
+
+Scale convention (symmetric, zero-point-free):
+
+  scale = amax(block) / qmax        (qmax: int8 -> 127, fp8-e4m3 -> 448)
+  q     = encode(x / scale)         (deterministic round-to-nearest for
+                                     int8 — NOT stochastic: the XLA
+                                     reference and the kernel must agree
+                                     bit-for-bit on the encoded values)
+  x̂     = q.astype(f32) * scale
+
+Dequantization is folded into the attention kernels (never a
+materialized f32 copy of the arena on the Pallas path): the k-scale
+multiplies the logits right after the q·k matmul (valid because the
+per-row scale is >= 0, so ranking by scores is preserved), and the
+v-scale multiplies the softmax weights entering the p·v matmul (the
+softmax denominator ``l`` stays unscaled).  All helpers here are pure
+jnp so the same ``encode_scaled`` traces inside a Pallas kernel and in
+the XLA reference path.
+
+Scale leaves ride the arena (``kv_cache.ARENA_LEAVES``) with uniform
+(..., M) f32 shape — one slot per centroid/cluster — which keeps every
+downstream concat/scatter/replicate rule identical to ``counts``-style
+leaves.  Overhead: 4 bytes per D*qbytes block, ~3% at D=128.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+# spec string -> (kind, quantize sorted KV too?)
+QSPECS = {
+    "none": ("none", False),
+    "int8": ("int8", False),
+    "fp8": ("fp8", False),
+    "int8+kv": ("int8", True),
+    "fp8+kv": ("fp8", True),
+}
+
+# Arena scale leaves introduced by quantization (all (..., M) f32):
+#   k_syn_scale / v_syn_scale — one scale per centroid row,
+#   k_scale / v_scale         — one scale per C-row sorted-KV cluster block.
+SCALE_LEAVES = ("k_syn_scale", "v_syn_scale", "k_scale", "v_scale")
+SYN_SCALE_LEAVES = ("k_syn_scale", "v_syn_scale")
+KV_SCALE_LEAVES = ("k_scale", "v_scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+  """Parsed qconfig: numeric kind x which arenas it covers."""
+  kind: str = "none"           # "none" | "int8" | "fp8"
+  sorted_kv: bool = False      # also quantize the sorted corpus KV
+
+  @property
+  def enabled(self) -> bool:
+    return self.kind != "none"
+
+  @property
+  def spec(self) -> str:
+    if not self.enabled:
+      return "none"
+    return self.kind + ("+kv" if self.sorted_kv else "")
+
+
+def parse_qconfig(spec: Union[None, str, QuantConfig]) -> QuantConfig:
+  """"none"/"int8"/"fp8"/"int8+kv"/"fp8+kv" -> QuantConfig."""
+  if spec is None:
+    return QuantConfig()
+  if isinstance(spec, QuantConfig):
+    return spec
+  if spec not in QSPECS:
+    raise ValueError(f"unknown quant spec {spec!r}; one of {list(QSPECS)}")
+  kind, skv = QSPECS[spec]
+  return QuantConfig(kind=kind, sorted_kv=skv)
+
+
+def fp8_supported() -> bool:
+  return hasattr(jnp, "float8_e4m3fn")
+
+
+def qdtype(kind: str):
+  if kind == "int8":
+    return jnp.int8
+  if kind == "fp8":
+    if not fp8_supported():
+      raise ValueError("fp8 requested but jnp.float8_e4m3fn is unavailable")
+    return jnp.float8_e4m3fn
+  raise ValueError(f"no quantized dtype for kind {kind!r}")
+
+
+def qmax(kind: str) -> float:
+  if kind == "int8":
+    return 127.0
+  if kind == "fp8":
+    return 448.0               # float8_e4m3fn finite max
+  raise ValueError(f"no qmax for kind {kind!r}")
+
+
+def encode_scaled(y: jax.Array, kind: str) -> jax.Array:
+  """Encode already-scaled values y = x/scale into the storage dtype.
+
+  Pure jnp — traces inside Pallas kernels.  int8 uses deterministic
+  round-to-nearest-even (matches the XLA reference exactly on identical
+  inputs); fp8 is a dtype cast (hardware rounding).
+  """
+  if kind == "int8":
+    return jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+  if kind == "fp8":
+    return jnp.clip(y, -qmax(kind), qmax(kind)).astype(qdtype(kind))
+  raise ValueError(f"cannot encode kind {kind!r}")
+
+
+def block_scale(x: jax.Array, kind: str, axis=-1,
+                keepdims: bool = True) -> jax.Array:
+  """Symmetric scale over ``axis``: amax/qmax, 0 for an all-zero block."""
+  amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                 keepdims=keepdims)
+  return amax / qmax(kind)
+
+
+def quantize_rows(x: jax.Array, kind: str,
+                  block: int = 1) -> Tuple[jax.Array, jax.Array]:
+  """Quantize (..., R, D) with one scale per ``block`` rows.
+
+  Returns (q (..., R, D) in the storage dtype, scales (..., R//block) f32).
+  ``block=1`` is the per-centroid-row granularity; ``block=C`` the
+  per-cluster sorted-KV granularity.
+  """
+  *lead, R, D = x.shape
+  assert R % block == 0, (R, block)
+  xb = x.astype(jnp.float32).reshape(*lead, R // block, block * D)
+  scale = block_scale(xb, kind)                      # (..., R//block, 1)
+  inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+  q = encode_scaled(xb * inv, kind).reshape(*lead, R, D)
+  return q, scale[..., 0]
+
+
+def dequantize_rows(q: jax.Array, scales: jax.Array,
+                    block: int = 1) -> jax.Array:
+  """Inverse of :func:`quantize_rows` — f32 (..., R, D)."""
+  *lead, R, D = q.shape
+  s = jnp.repeat(scales.astype(jnp.float32), block, axis=-1)  # (..., R)
+  return q.astype(jnp.float32) * s[..., None]

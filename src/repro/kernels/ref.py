@@ -136,6 +136,45 @@ def synopsis_build_ref(
   return k_sorted, v_sorted, k_syn, v_syn, counts
 
 
+def synopsis_build_quant_ref(
+    k: jax.Array,            # (N, Hkv, S, D) exact cache (flat batch)
+    v: jax.Array,            # (N, Hkv, S, D)
+    perm: jax.Array,         # (N, S) int32 cluster-contiguous permutation
+    *,
+    cluster_size: int,
+    qc,                      # quant.QuantConfig with qc.enabled
+) -> dict:
+  """Quantized-build oracle (DESIGN.md §15): same permute + segment-mean
+  chain, but the centroids are quantized from their *f32* means (the
+  kernel accumulates in f32 and quantizes at the flush — never through a
+  bf16 round-trip) with one scale per centroid row; with ``qc.sorted_kv``
+  the sorted cache is quantized per C-row cluster block too.  Returns
+  the arena dict {k, v, k_syn, v_syn, counts, k_syn_scale, v_syn_scale
+  [, k_scale, v_scale]}."""
+  from repro.kernels import quant
+  N, Hkv, S, D = k.shape
+  C = cluster_size
+  M = S // C
+  idx = jnp.broadcast_to(perm[:, None, :, None], (N, Hkv, S, 1))
+  k_sorted = jnp.take_along_axis(k, idx, axis=2)
+  v_sorted = jnp.take_along_axis(v, idx, axis=2)
+  k_mean = k_sorted.astype(jnp.float32).reshape(N, Hkv, M, C, D).mean(3)
+  v_mean = v_sorted.astype(jnp.float32).reshape(N, Hkv, M, C, D).mean(3)
+  k_syn, ks = quant.quantize_rows(k_mean, qc.kind)
+  v_syn, vs = quant.quantize_rows(v_mean, qc.kind)
+  out = {"k_syn": k_syn, "v_syn": v_syn,
+         "k_syn_scale": ks, "v_syn_scale": vs,
+         "counts": jnp.full((N, M), float(C), jnp.float32)}
+  if qc.sorted_kv:
+    out["k"], out["k_scale"] = quant.quantize_rows(
+        k_sorted, qc.kind, block=C)
+    out["v"], out["v_scale"] = quant.quantize_rows(
+        v_sorted, qc.kind, block=C)
+  else:
+    out["k"], out["v"] = k_sorted, v_sorted
+  return out
+
+
 def synopsis_score_ref(
     q: jax.Array,            # (B, H, D)
     k_syn: jax.Array,        # (B, Hkv, M, D) centroid keys
@@ -197,24 +236,36 @@ def fused_synopsis_score_attention_ref(
     *,
     sm_scale: float = 1.0,
     cap: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,   # (B, Hkv, M) per-centroid scales
+    v_scale: Optional[jax.Array] = None,   # (DESIGN.md §15)
 ) -> Tuple[jax.Array, Partials]:
   """Single-read oracle for the fused score+stage-1 kernel: the centroid
   logits are computed ONCE and reused for both the correlation scores
   (max over the GQA group, uncapped) and the count-biased stage-1
   partials over ALL centroids (the selected-cluster mask is applied
-  decrementally downstream — see fused_gather_attention_ref)."""
+  decrementally downstream — see fused_gather_attention_ref).
+
+  When ``k_scale``/``v_scale`` are given, ``k_syn``/``v_syn`` hold
+  quantized values and dequantization folds into the math exactly where
+  the kernel does it: the k-scale multiplies the logits after the q·k
+  contraction (scale >= 0 keeps the score ranking), the v-scale weights
+  ``p`` entering the p·v contraction (``l`` stays unscaled)."""
   B, H, D = q.shape
   _, Hkv, M, _ = k_syn.shape
   G = H // Hkv
   qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
-  raw = jnp.einsum("bhgd,bhmd->bhgm", qg,
-                   k_syn.astype(jnp.float32)) * sm_scale
+  raw = jnp.einsum("bhgd,bhmd->bhgm", qg, k_syn.astype(jnp.float32))
+  if k_scale is not None:
+    raw = raw * k_scale[:, :, None, :].astype(jnp.float32)
+  raw = raw * sm_scale
   scores = jnp.max(raw, axis=2)                              # (B, Hkv, M)
   logits = _softcap(raw, cap) + cbias[:, None, None, :].astype(jnp.float32)
   m = jnp.maximum(jnp.max(logits, axis=-1), NEG_INF)
   p = jnp.exp(logits - m[..., None])
   l = jnp.sum(p, axis=-1)
-  out = jnp.einsum("bhgs,bhsd->bhgd", p, v_syn.astype(jnp.float32))
+  pv = p if v_scale is None else p * v_scale[:, :, None, :].astype(
+      jnp.float32)
+  out = jnp.einsum("bhgs,bhsd->bhgd", pv, v_syn.astype(jnp.float32))
   out = out / jnp.maximum(l, 1e-30)[..., None]
   return scores, (out.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
 
@@ -234,12 +285,18 @@ def fused_gather_attention_ref(
     extras_k: Optional[jax.Array] = None,     # (B, Hkv, E, D)
     extras_v: Optional[jax.Array] = None,
     extras_bias: Optional[jax.Array] = None,  # (B, E)
+    kv_k_scale: Optional[jax.Array] = None,   # (B, Hkv, M) per-cluster
+    kv_v_scale: Optional[jax.Array] = None,   # scales (DESIGN.md §15)
 ) -> Partials:
   """Oracle for the fused stage-2 epilogue: selected clusters' tokens
   (positive), their centroid stage-1 terms (negative — decremental
   masking), and recent/self extras (positive), in one signed softmax
   accumulation.  The XLA impl of the serving path IS this function (it
-  keeps the materialized gather; only the Pallas path streams blocks)."""
+  keeps the materialized gather; only the Pallas path streams blocks).
+
+  ``kv_k_scale``/``kv_v_scale``: per-cluster-block scales when ``k``/``v``
+  hold the int8 sorted arena — dequant folds into the logits / the p·v
+  weights exactly like the kernel (one scalar per cluster block)."""
   B, H, D = q.shape
   _, Hkv, S, _ = k.shape
   C = cluster_size
@@ -252,8 +309,16 @@ def fused_gather_attention_ref(
   kg = jnp.take_along_axis(k, idx[..., None], axis=2)
   vg = jnp.take_along_axis(v, idx[..., None], axis=2)
   valid = jnp.repeat(selected >= 0, C, axis=-1)               # (B,Hkv,I*C)
-  lt = _softcap(jnp.einsum("bhgd,bhsd->bhgs", qg,
-                           kg.astype(jnp.float32)) * sm_scale, cap)
+  raw = jnp.einsum("bhgd,bhsd->bhgs", qg, kg.astype(jnp.float32))
+  if kv_k_scale is not None:
+    ksc = jnp.take_along_axis(kv_k_scale.astype(jnp.float32),
+                              jnp.maximum(selected, 0), axis=2)  # (B,Hkv,I)
+    raw = raw * jnp.repeat(ksc, C, axis=-1)[:, :, None, :]
+  if kv_v_scale is not None:
+    vsc = jnp.take_along_axis(kv_v_scale.astype(jnp.float32),
+                              jnp.maximum(selected, 0), axis=2)
+    vg = vg.astype(jnp.float32) * jnp.repeat(vsc, C, axis=-1)[..., None]
+  lt = _softcap(raw * sm_scale, cap)
   lt = jnp.where(valid[:, :, None, :], lt, NEG_INF)
 
   pieces = [(lt, vg, 1.0)]

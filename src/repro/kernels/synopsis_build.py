@@ -28,16 +28,31 @@ update).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import quant as qt
 
-def _kernel(perm_ref, k_ref, v_ref, ks_ref, vs_ref, ksyn_ref, vsyn_ref,
-            cnt_ref, kacc, vacc, *, cluster_size: int):
+
+def _kernel(perm_ref, k_ref, v_ref, *rest, cluster_size: int,
+            quant: Optional[str], quant_kv: bool):
+  it = iter(rest)
+  ks_ref, vs_ref, ksyn_ref, vsyn_ref, cnt_ref = (
+      next(it), next(it), next(it), next(it), next(it))
+  kss_ref = vss_ref = kvs_ref = vvs_ref = None
+  if quant:                     # per-centroid synopsis scales (§15)
+    kss_ref, vss_ref = next(it), next(it)
+    if quant_kv:                # per-cluster-block sorted-KV scales
+      kvs_ref, vvs_ref = next(it), next(it)
+  kacc, vacc = next(it), next(it)
+  kblk = vblk = None
+  if quant_kv:                  # buffer the cluster block for one-shot
+    kblk, vblk = next(it), next(it)   # amax + encode at the flush
+
   c = pl.program_id(3)
 
   @pl.when(c == 0)
@@ -47,20 +62,40 @@ def _kernel(perm_ref, k_ref, v_ref, ks_ref, vs_ref, ksyn_ref, vsyn_ref,
 
   krow = k_ref[0, 0].astype(jnp.float32)              # (1, D)
   vrow = v_ref[0, 0].astype(jnp.float32)
-  ks_ref[0, 0] = krow.astype(ks_ref.dtype)            # permuted cache row
-  vs_ref[0, 0] = vrow.astype(vs_ref.dtype)
+  if quant_kv:
+    kblk[pl.ds(c, 1), :] = krow
+    vblk[pl.ds(c, 1), :] = vrow
+  else:
+    ks_ref[0, 0] = krow.astype(ks_ref.dtype)          # permuted cache row
+    vs_ref[0, 0] = vrow.astype(vs_ref.dtype)
   kacc[...] += krow
   vacc[...] += vrow
+
+  def _q(x, s_ref, o_ref):
+    # Quantize from the f32 accumulator/block: scale = amax/qmax, the
+    # encode is the same deterministic round the XLA reference uses.
+    scale = jnp.max(jnp.abs(x)) / qt.qmax(quant)
+    s_ref[0, 0, 0] = scale
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    o_ref[0, 0] = qt.encode_scaled(x * inv, quant)
 
   @pl.when(c == cluster_size - 1)
   def _flush():
     inv = jnp.float32(1.0 / cluster_size)
-    ksyn_ref[0, 0] = (kacc[...] * inv).astype(ksyn_ref.dtype)
-    vsyn_ref[0, 0] = (vacc[...] * inv).astype(vsyn_ref.dtype)
+    if quant:
+      _q(kacc[...] * inv, kss_ref, ksyn_ref)
+      _q(vacc[...] * inv, vss_ref, vsyn_ref)
+    else:
+      ksyn_ref[0, 0] = (kacc[...] * inv).astype(ksyn_ref.dtype)
+      vsyn_ref[0, 0] = (vacc[...] * inv).astype(vsyn_ref.dtype)
+    if quant_kv:
+      _q(kblk[...], kvs_ref, ks_ref)
+      _q(vblk[...], vvs_ref, vs_ref)
     cnt_ref[0, 0, 0] = jnp.float32(cluster_size)
 
 
-@functools.partial(jax.jit, static_argnames=("cluster_size", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("cluster_size", "quant", "interpret"))
 def segment_build(
     k: jax.Array,          # (N, Hkv, S, D) exact cache, flat leading dims
     v: jax.Array,          # (N, Hkv, S, D)
@@ -69,16 +104,61 @@ def segment_build(
                            # [m*C, (m+1)*C)
     *,
     cluster_size: int,
+    quant: Optional[str] = None,   # qconfig spec ("int8", "int8+kv", ...)
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-  """Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M) f32)."""
+) -> Union[Tuple[jax.Array, ...], dict]:
+  """Returns (k_sorted, v_sorted, k_syn, v_syn, counts (N, M) f32).
+
+  With ``quant`` the same streaming pass also emits the quantized arenas
+  + scales (DESIGN.md §15) and returns the arena dict instead: centroids
+  are quantized from the f32 accumulator at each cluster's flush (one
+  scale per centroid row); with the ``+kv`` specs the sorted cache block
+  is buffered in VMEM and quantized whole at the flush (one scale per
+  cluster block), so no f32 sorted copy ever lands in HBM."""
   N, Hkv, S, D = k.shape
   C = cluster_size
   assert S % C == 0, (S, C)
   M = S // C
+  qc = qt.parse_qconfig(quant)
+  qdt = qt.qdtype(qc.kind) if qc.enabled else None
 
   def _src(n, h, m, c, perm):
     return (n, h, perm[n, m * C + c], 0)
+
+  _syn = lambda n, h, m, c, perm: (n, h, m, 0)
+  _scl = lambda n, h, m, c, perm: (n, h, m)
+  if qc.sorted_kv:
+    # Whole-cluster block output, written once at the flush.
+    sorted_spec = pl.BlockSpec((1, 1, C, D), _syn)
+  else:
+    sorted_spec = pl.BlockSpec(
+        (1, 1, 1, D), lambda n, h, m, c, perm: (n, h, m * C + c, 0))
+
+  out_specs = [
+      sorted_spec,
+      sorted_spec,
+      pl.BlockSpec((1, 1, 1, D), _syn),
+      pl.BlockSpec((1, 1, 1, D), _syn),
+      pl.BlockSpec((1, 1, 1), _scl),
+  ]
+  out_shape = [
+      jax.ShapeDtypeStruct((N, Hkv, S, D), qdt if qc.sorted_kv else k.dtype),
+      jax.ShapeDtypeStruct((N, Hkv, S, D), qdt if qc.sorted_kv else v.dtype),
+      jax.ShapeDtypeStruct((N, Hkv, M, D), qdt if qc.enabled else k.dtype),
+      jax.ShapeDtypeStruct((N, Hkv, M, D), qdt if qc.enabled else v.dtype),
+      jax.ShapeDtypeStruct((N, Hkv, M), jnp.float32),
+  ]
+  scratch = [
+      pltpu.VMEM((1, D), jnp.float32),
+      pltpu.VMEM((1, D), jnp.float32),
+  ]
+  if qc.enabled:
+    out_specs += [pl.BlockSpec((1, 1, 1), _scl)] * 2
+    out_shape += [jax.ShapeDtypeStruct((N, Hkv, M), jnp.float32)] * 2
+    if qc.sorted_kv:
+      out_specs += [pl.BlockSpec((1, 1, 1), _scl)] * 2
+      out_shape += [jax.ShapeDtypeStruct((N, Hkv, M), jnp.float32)] * 2
+      scratch += [pltpu.VMEM((C, D), jnp.float32)] * 2
 
   grid_spec = pltpu.PrefetchScalarGridSpec(
       num_scalar_prefetch=1,
@@ -87,32 +167,25 @@ def segment_build(
           pl.BlockSpec((1, 1, 1, D), _src),
           pl.BlockSpec((1, 1, 1, D), _src),
       ],
-      out_specs=[
-          pl.BlockSpec((1, 1, 1, D),
-                       lambda n, h, m, c, perm: (n, h, m * C + c, 0)),
-          pl.BlockSpec((1, 1, 1, D),
-                       lambda n, h, m, c, perm: (n, h, m * C + c, 0)),
-          pl.BlockSpec((1, 1, 1, D), lambda n, h, m, c, perm: (n, h, m, 0)),
-          pl.BlockSpec((1, 1, 1, D), lambda n, h, m, c, perm: (n, h, m, 0)),
-          pl.BlockSpec((1, 1, 1), lambda n, h, m, c, perm: (n, h, m)),
-      ],
-      scratch_shapes=[
-          pltpu.VMEM((1, D), jnp.float32),
-          pltpu.VMEM((1, D), jnp.float32),
-      ],
+      out_specs=out_specs,
+      scratch_shapes=scratch,
   )
   fn = pl.pallas_call(
-      functools.partial(_kernel, cluster_size=C),
+      functools.partial(_kernel, cluster_size=C,
+                        quant=qc.kind if qc.enabled else None,
+                        quant_kv=qc.sorted_kv),
       grid_spec=grid_spec,
-      out_shape=[
-          jax.ShapeDtypeStruct((N, Hkv, S, D), k.dtype),
-          jax.ShapeDtypeStruct((N, Hkv, S, D), v.dtype),
-          jax.ShapeDtypeStruct((N, Hkv, M, D), k.dtype),
-          jax.ShapeDtypeStruct((N, Hkv, M, D), v.dtype),
-          jax.ShapeDtypeStruct((N, Hkv, M), jnp.float32),
-      ],
+      out_shape=out_shape,
       interpret=interpret,
       name="segment_build",
   )
-  ks, vs, ksyn, vsyn, cnt = fn(perm.astype(jnp.int32), k, v)
-  return ks, vs, ksyn, vsyn, cnt[:, 0]
+  outs = fn(perm.astype(jnp.int32), k, v)
+  ks, vs, ksyn, vsyn, cnt = outs[:5]
+  if not qc.enabled:
+    return ks, vs, ksyn, vsyn, cnt[:, 0]
+  res = {"k": ks, "v": vs, "k_syn": ksyn, "v_syn": vsyn,
+         "counts": cnt[:, 0],
+         "k_syn_scale": outs[5], "v_syn_scale": outs[6]}
+  if qc.sorted_kv:
+    res["k_scale"], res["v_scale"] = outs[7], outs[8]
+  return res

@@ -37,6 +37,17 @@ import argparse
 import time
 
 
+def _apply_quant(cfg, quant: str):
+  """Swap the synopsis quantization spec into the model config
+  (DESIGN.md §15).  "none" returns cfg unchanged — the bit-identical
+  control arm."""
+  if not quant or quant == "none":
+    return cfg
+  import dataclasses
+  return dataclasses.replace(
+      cfg, synopsis=dataclasses.replace(cfg.synopsis, quant=quant))
+
+
 def _engine_main(args):
   """Continuous-batching engine over an arrival trace (DESIGN.md §8);
   with ``--cluster N`` the decode steps run the multi-component
@@ -50,6 +61,7 @@ def _engine_main(args):
   from repro.serving.workload import CF_RATES, hour_rate
 
   cfg = get_config(args.arch, smoke=args.smoke)
+  cfg = _apply_quant(cfg, args.quant)
   C = cfg.synopsis.cluster_size
   prompt_len = max(C, (args.prompt_len // C) * C)
   max_new = min(args.tokens, cfg.synopsis.recent)
@@ -341,6 +353,14 @@ def main():
                        "with Zipf popularity instead of fresh random "
                        "prompts (the workload the corpus cache serves); "
                        "0 = unique corpora")
+  ap.add_argument("--quant", default="none",
+                  choices=["none", "int8", "fp8", "int8+kv", "fp8+kv"],
+                  help="quantize the synopsis arena (DESIGN.md §15): "
+                       "int8/fp8 centroids with per-centroid scales; the "
+                       "'+kv' variants also store the sorted corpus KV "
+                       "quantized with per-cluster-block scales — scales "
+                       "ride into the stage-1/stage-2 kernels, no f32 "
+                       "copies; none = bit-identical control arm")
   ap.add_argument("--json", default=None, metavar="PATH",
                   help="write the --engine sweep results as JSON")
   args = ap.parse_args()
@@ -375,6 +395,7 @@ def main():
   from repro.serve.serve_step import make_serve_step
 
   cfg = get_config(args.arch, smoke=args.smoke)
+  cfg = _apply_quant(cfg, args.quant)
   key = jax.random.PRNGKey(0)
   params, _ = cm.split(tf.init_model(key, cfg))
   params = jax.tree.map(lambda p: p.astype(cfg.dtype), params)

@@ -102,6 +102,11 @@ class SynopsisConfig:
   # kernel suite on TPU and the XLA reference path elsewhere; "interpret"
   # runs the Pallas kernels under the interpreter (CPU validation).
   impl: str = "auto"              # "auto" | "pallas" | "xla" | "interpret"
+  # Quantized synopsis (DESIGN.md §15): "none" keeps the bit-identical
+  # f32/native arena; "int8"/"fp8" quantize k_syn/v_syn with per-centroid
+  # scales; the "+kv" variants also quantize the sorted corpus KV with
+  # per-cluster-block scales.
+  quant: str = "none"             # "none"|"int8"|"fp8"|"int8+kv"|"fp8+kv"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -277,11 +277,18 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
   fe_mode = csl["fe_mode"]
   N, Mp = k_syn.shape[2], k_syn.shape[3]
 
+  def _slice_scales(names, c):
+    # Quantized-arena dequant scales (§15) per component, when present.
+    if names[0] not in csl:
+      return None
+    return tuple(csl[n][:, :, c] for n in names)
+
   scs, psyns = [], []
   for c in range(N):
     sc_c, p_c = ops.synopsis_stage1(
         q, k_syn[:, :, c], v_syn[:, :, c], counts[:, c],
-        sm_scale=sm_scale, cap=cap, impl=impl, valid=counts[:, c] > 0)
+        sm_scale=sm_scale, cap=cap, impl=impl, valid=counts[:, c] > 0,
+        syn_scales=_slice_scales(("k_syn_scale", "v_syn_scale"), c))
     scs.append(sc_c)
     psyns.append(p_c)
   sc_all = jnp.stack(scs, axis=2)                         # (B, Hkv, N, Mp)
@@ -306,7 +313,9 @@ def _cluster_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
       p_ref = ops.refine_stage2(
           q, k[:, :, c], v[:, :, c], sel, k_syn[:, :, c], v_syn[:, :, c],
           counts[:, c], cluster_size=cluster_size, sm_scale=sm_scale,
-          cap=cap, impl=impl)
+          cap=cap, impl=impl,
+          syn_scales=_slice_scales(("k_syn_scale", "v_syn_scale"), c),
+          kv_scales=_slice_scales(("k_scale", "v_scale"), c))
       p_full = ops.merge_partials(psyns[c], p_ref)
       cover.append(jnp.mean(jnp.sum((sel >= 0).astype(jnp.float32), -1)))
     contrib = _pick_mode(fe_mode[c], p_full, psyns[c])
@@ -340,6 +349,9 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
   specs = {"k": corpus, "v": corpus, "k_syn": corpus, "v_syn": corpus,
            "counts": P(None, "component", None),
            "fe_mode": P("component")}
+  for name in ("k_syn_scale", "v_syn_scale", "k_scale", "v_scale"):
+    if name in csl:          # quantized arena (§15)
+      specs[name] = P(None, None, "component", None)
   for name in ("recent_k", "recent_v"):
     if name in csl:
       specs[name] = P(None, None, None, None)
@@ -357,10 +369,15 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
       ks_l, vs_l = cache["k_syn"][:, :, 0], cache["v_syn"][:, :, 0]
       counts_l = cache["counts"][:, 0]
       mode_l = cache["fe_mode"][0]
+      syn_scales = (None if "k_syn_scale" not in cache else
+                    (cache["k_syn_scale"][:, :, 0],
+                     cache["v_syn_scale"][:, :, 0]))
+      kv_scales = (None if "k_scale" not in cache else
+                   (cache["k_scale"][:, :, 0], cache["v_scale"][:, :, 0]))
 
       sc_l, p_syn = ops.synopsis_stage1(
           q, ks_l, vs_l, counts_l, sm_scale=sm_scale, cap=cap, impl=impl,
-          valid=counts_l > 0)
+          valid=counts_l > 0, syn_scales=syn_scales)
       sc = jax.lax.all_gather(sc_l, "component", axis=2, tiled=True)
       B, Hkv = sc.shape[:2]
       sc_all = sc.reshape(B, Hkv, N, Mp)
@@ -391,7 +408,7 @@ def _cluster_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
         p_ref = ops.refine_stage2(
             q, k_l, v_l, sel, ks_l, vs_l, counts_l,
             cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
-            impl=impl)
+            impl=impl, syn_scales=syn_scales, kv_scales=kv_scales)
         p_full = ops.merge_partials(p_syn, p_ref)
         cover_l = jnp.mean(
             jnp.sum((sel >= 0).astype(jnp.float32), -1))[None]
@@ -589,6 +606,9 @@ class ClusterStepBackend:
                               base["k_syn"].dtype)
     base["v_syn"] = jnp.zeros_like(base["k_syn"])
     base["counts"] = jnp.zeros((nb, na, B, N, Mp), jnp.float32)
+    for name in ("k_syn_scale", "v_syn_scale", "k_scale", "v_scale"):
+      if name in base:       # quantized arena (§15): component layout too
+        base[name] = jnp.zeros((nb, na, B, Hkv, N, Mp), jnp.float32)
     return base
 
   def _scatter(self, syn: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
@@ -618,6 +638,8 @@ class ClusterStepBackend:
     # (tests/test_cluster.py).
     out = dict(syn)
     for name in kvc.ARENA_LEAVES:
+      if name not in syn:    # scale leaves exist only under quantization
+        continue
       if name == "counts":
         out[name] = split(syn[name], axis=3, unit=1)
       else:
@@ -636,6 +658,8 @@ class ClusterStepBackend:
         # Per-slot routing: slot s's cluster range r lands on component
         # (r + s) % N, spreading skewed ranges across components.
         for name in kvc.ARENA_LEAVES:
+          if name not in sub:
+            continue
           sub[name] = jnp.roll(sub[name], slot,
                                axis=3 if name == "counts" else 4)
       return kvc.write_slot(cache, sub, slot, bx)

@@ -98,9 +98,12 @@ def corpus_fingerprint(cfg, impl: str, prompt_len: int, seed: int) -> str:
   under different weights (seed), kernel impls, cluster shapes or slot
   geometry must not collide."""
   sc = cfg.synopsis
+  # The quantization spec changes the arena's leaf dtypes and contents
+  # (DESIGN.md §15) — int8 and f32 arenas for the same tokens must not
+  # alias in the content-addressed store.
   return (f"{cfg.name}|dt={np.dtype(cfg.dtype).name if cfg.dtype is not None else cfg.dtype}"
           f"|C={sc.cluster_size}|R={sc.recent}|impl={impl}"
-          f"|S={prompt_len}|seed={seed}")
+          f"|S={prompt_len}|seed={seed}|q={getattr(sc, 'quant', 'none')}")
 
 
 def supports_delta(cfg) -> bool:

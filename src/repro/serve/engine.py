@@ -256,7 +256,14 @@ class ServingEngine:
         ecfg.cache,
         fingerprint=ccache.corpus_fingerprint(cfg, self.impl,
                                               ecfg.prompt_len, ecfg.seed))
-    self._delta_ok = ccache.supports_delta(cfg)
+    from repro.kernels.quant import parse_qconfig  # noqa: PLC0415
+    # Delta replay re-attends over the cached corpus k/v; the "+kv"
+    # quantized arenas store those rows as int8 blocks whose scales are
+    # cluster-granular, so the extension path would need a dequantized
+    # materialization — disable extends and take plain hits/misses.
+    self._delta_ok = (ccache.supports_delta(cfg)
+                      and not parse_qconfig(
+                          getattr(cfg.synopsis, "quant", "none")).sorted_kv)
     self._slot_entry: List[Optional[str]] = [None] * ecfg.n_slots
     # Fleet tier (DESIGN.md §14): one admission maps the arena onto R
     # replica rows and each mapping holds its own pin, so retiring one

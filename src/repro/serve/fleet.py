@@ -143,7 +143,10 @@ def _fleet_stacked(q, csl, topo, alloc, *, i_max, cluster_size, sm_scale,
   N = topo.n_components
   rows, cols = _select_lanes(csl["fe_replica"], N)
   flat = {kk: vv for kk, vv in csl.items() if kk != "fe_replica"}
-  for name in ("k", "v", "k_syn", "v_syn"):
+  for name in ("k", "v", "k_syn", "v_syn", "k_syn_scale", "v_syn_scale",
+               "k_scale", "v_scale"):
+    if name not in csl:
+      continue
     # Advanced indices at adjacent axes (replica, component) collapse to
     # one shard axis in shard order: entry c is shard c read from lane
     # (sel[c], (c + sel[c]) % N).
@@ -170,6 +173,9 @@ def _fleet_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
   specs = {"k": corpus, "v": corpus, "k_syn": corpus, "v_syn": corpus,
            "counts": P(None, "replica", "component", None),
            "fe_mode": P(), "fe_replica": P()}
+  for name in ("k_syn_scale", "v_syn_scale", "k_scale", "v_scale"):
+    if name in csl:
+      specs[name] = P(None, None, "replica", "component", None)
   for name in ("recent_k", "recent_v"):
     if name in csl:
       specs[name] = P(None, None, None, None)
@@ -186,6 +192,10 @@ def _fleet_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
       k_l, v_l = cache["k"][:, :, 0, 0], cache["v"][:, :, 0, 0]
       ks_l, vs_l = cache["k_syn"][:, :, 0, 0], cache["v_syn"][:, :, 0, 0]
       counts_l = cache["counts"][:, 0, 0]
+      syn_scales = None if "k_syn_scale" not in cache else (
+          cache["k_syn_scale"][:, :, 0, 0], cache["v_syn_scale"][:, :, 0, 0])
+      kv_scales = None if "k_scale" not in cache else (
+          cache["k_scale"][:, :, 0, 0], cache["v_scale"][:, :, 0, 0])
       mode = cache["fe_mode"]                       # (N,) replicated
       sel_arr = cache["fe_replica"]                 # (N,) replicated
       # The shard this lane holds: column j of row r is shard (j - r) % N.
@@ -193,7 +203,7 @@ def _fleet_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
 
       sc_l, p_syn = ops.synopsis_stage1(
           q, ks_l, vs_l, counts_l, sm_scale=sm_scale, cap=cap, impl=impl,
-          valid=counts_l > 0)
+          valid=counts_l > 0, syn_scales=syn_scales)
       # Scores within a row cover all N shards (a row is a rotation of
       # the full partition), in mesh-column order; rotate back to shard
       # order so every lane sees the same sc_all — copies are
@@ -224,7 +234,7 @@ def _fleet_sharded(q, csl, topo, alloc, mesh, *, i_max, cluster_size,
         p_ref = ops.refine_stage2(
             q, k_l, v_l, sel, ks_l, vs_l, counts_l,
             cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
-            impl=impl)
+            impl=impl, syn_scales=syn_scales, kv_scales=kv_scales)
         p_full = ops.merge_partials(p_syn, p_ref)
         cover_l = jnp.mean(
             jnp.sum((sel >= 0).astype(jnp.float32), -1))[None]
@@ -330,6 +340,8 @@ class FleetStepBackend(ClusterStepBackend):
     base = super().zeros_cache()
     R = self.topo.replicas
     for name in kvc.ARENA_LEAVES:
+      if name not in base:
+        continue
       x = base[name]
       ax = 3 if name == "counts" else 4
       base[name] = jnp.zeros(x.shape[:ax] + (R,) + x.shape[ax:], x.dtype)
@@ -347,6 +359,8 @@ class FleetStepBackend(ClusterStepBackend):
       # copies — pure data movement, bit-identical per copy.
       sub = self._scatter(syn)
       for name in kvc.ARENA_LEAVES:
+        if name not in sub:
+          continue
         ax = 3 if name == "counts" else 4
         if rotate:
           sub[name] = jnp.roll(sub[name], slot, axis=ax)

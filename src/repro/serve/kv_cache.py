@@ -39,11 +39,16 @@ KV_AXES = ("layers", None, "batch", "kv_heads", "kv_seq", None)
 # PRIVATE_LEAVES hold per-request decode state (the recent ring, the
 # position, SSM/cross state): the copy-on-write half, always written
 # fresh per slot and never aliased.
-ARENA_LEAVES = ("k", "v", "k_syn", "v_syn", "counts")
+ARENA_LEAVES = ("k", "v", "k_syn", "v_syn", "counts",
+                # Quantized-arena dequant scales (DESIGN.md §15) — pure
+                # functions of the corpus like the tables they scale,
+                # present only when cfg.synopsis.quant != "none".
+                "k_syn_scale", "v_syn_scale", "k_scale", "v_scale")
 PRIVATE_LEAVES = ("recent_k", "recent_v", "recent_len", "pos",
                   "conv_state", "ssd_state", "cross_k", "cross_v")
 SYN_AXES = KV_AXES
 COUNT_AXES = ("layers", None, "batch", "kv_seq")
+SCALE_AXES = ("layers", None, "batch", "kv_heads", "kv_seq")
 RECENT_AXES = ("layers", None, "batch", "kv_heads", None, None)
 SSM_CONV_AXES = ("layers", None, "batch", None, "ssm_heads")
 SSM_STATE_AXES = ("layers", None, "batch", "ssm_heads", None, "ssm_state")
@@ -83,11 +88,25 @@ def cache_struct(cfg: cm.ModelConfig, B: int, S: int, *,
       assert S % C == 0, (S, C)
       M = S // C
       R = sc.recent
-      out["k"] = ((nb, na, B, Hkv, S, Dk), dt, KV_AXES)
-      out["v"] = ((nb, na, B, Hkv, S, Dk), dt, KV_AXES)
-      out["k_syn"] = ((nb, na, B, Hkv, M, Dk), dt, SYN_AXES)
-      out["v_syn"] = ((nb, na, B, Hkv, M, Dk), dt, SYN_AXES)
+      # Quantized synopsis (DESIGN.md §15): the centroid tables (and,
+      # with "+kv", the sorted corpus KV) store the low-precision dtype
+      # plus per-block f32 scale leaves shaped like one scalar per
+      # centroid/cluster.
+      from repro.kernels.quant import parse_qconfig, qdtype
+      qc = parse_qconfig(getattr(sc, "quant", "none"))
+      syn_dt = qdtype(qc.kind) if qc.enabled else dt
+      kv_dt = qdtype(qc.kind) if qc.enabled and qc.sorted_kv else dt
+      out["k"] = ((nb, na, B, Hkv, S, Dk), kv_dt, KV_AXES)
+      out["v"] = ((nb, na, B, Hkv, S, Dk), kv_dt, KV_AXES)
+      out["k_syn"] = ((nb, na, B, Hkv, M, Dk), syn_dt, SYN_AXES)
+      out["v_syn"] = ((nb, na, B, Hkv, M, Dk), syn_dt, SYN_AXES)
       out["counts"] = ((nb, na, B, M), jnp.float32, COUNT_AXES)
+      if qc.enabled:
+        out["k_syn_scale"] = ((nb, na, B, Hkv, M), jnp.float32, SCALE_AXES)
+        out["v_syn_scale"] = ((nb, na, B, Hkv, M), jnp.float32, SCALE_AXES)
+        if qc.sorted_kv:
+          out["k_scale"] = ((nb, na, B, Hkv, M), jnp.float32, SCALE_AXES)
+          out["v_scale"] = ((nb, na, B, Hkv, M), jnp.float32, SCALE_AXES)
       out["recent_k"] = ((nb, na, B, Hkv, R, Dk), dt, RECENT_AXES)
       out["recent_v"] = ((nb, na, B, Hkv, R, Dk), dt, RECENT_AXES)
       out["recent_len"] = ((B,), jnp.int32, ("batch",))

@@ -81,12 +81,17 @@ def synopsis_decode_attention(
     self_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
     impl: str = "xla",
 ):
-  """AccuracyTrader Algorithm 1 on a KV cache; returns (B, H, Dv)."""
+  """AccuracyTrader Algorithm 1 on a KV cache; returns (B, H, Dv).
+
+  Quantized-arena scale leaves (DESIGN.md §15) ride along when present
+  in the cache slice; absent they keep the bit-identical f32 path."""
   self_k, self_v = self_kv if self_kv is not None else (None, None)
   return ops.synopsis_cache_attention(
       q, cache["k"], cache["v"], cache["k_syn"], cache["v_syn"],
       cache["counts"], cache.get("recent_k"), cache.get("recent_v"),
       cache.get("recent_len"), self_k, self_v,
+      cache.get("k_syn_scale"), cache.get("v_syn_scale"),
+      cache.get("k_scale"), cache.get("v_scale"),
       i_max=i_max, cluster_size=cluster_size, sm_scale=sm_scale, cap=cap,
       impl=impl)
 
@@ -147,6 +152,9 @@ def sharded_synopsis_attention(
   kv_spec = P(bspec, None, axes, None)
   specs = {"k": kv_spec, "v": kv_spec, "k_syn": kv_spec, "v_syn": kv_spec,
            "counts": P(bspec, axes)}
+  for name in ("k_syn_scale", "v_syn_scale", "k_scale", "v_scale"):
+    if name in cache:        # quantized arena (§15): shard like counts
+      specs[name] = P(bspec, None, axes)
   for name in ("recent_k", "recent_v"):
     if name in cache:
       specs[name] = P(bspec, None, None, None)
@@ -166,11 +174,16 @@ def sharded_synopsis_attention(
         sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
       k_syn = cache["k_syn"]
 
+      syn_scales = (None if "k_syn_scale" not in cache else
+                    (cache["k_syn_scale"], cache["v_syn_scale"]))
+      kv_scales = (None if "k_scale" not in cache else
+                   (cache["k_scale"], cache["v_scale"]))
+
       # Stage 1 (fused): local scores + local count-biased partials in
       # one pass; then one small all-gather for the global ranking.
       sc_local, p_syn = ops.synopsis_stage1(
           q, k_syn, cache["v_syn"], cache["counts"], sm_scale=sm_scale,
-          cap=cap, impl=impl)
+          cap=cap, impl=impl, syn_scales=syn_scales)
       sc = sc_local
       for a in reversed(axes):
         sc = jax.lax.all_gather(sc, a, axis=2, tiled=True)   # (B,Hkv,M)
@@ -194,7 +207,8 @@ def sharded_synopsis_attention(
       p_ref = ops.refine_stage2(
           q, cache["k"], cache["v"], sel_local, k_syn, cache["v_syn"],
           cache["counts"], cluster_size=cluster_size, sm_scale=sm_scale,
-          cap=cap, impl=impl, extras=extras)
+          cap=cap, impl=impl, extras=extras, syn_scales=syn_scales,
+          kv_scales=kv_scales)
       part = ops.merge_partials(p_syn, p_ref)
 
       # Compose shard partials (the paper's result composer).

@@ -25,7 +25,14 @@ import jax.numpy as jnp
 
 from repro.core import cluster as cl
 from repro.kernels import ops
+from repro.kernels import quant as qt
 from repro.models import common as cm
+
+
+def _qspec(cfg: cm.ModelConfig) -> Optional[str]:
+  """cfg -> synopsis_build qconfig spec (None when unquantized)."""
+  qc = qt.parse_qconfig(getattr(cfg.synopsis, "quant", "none"))
+  return qc.spec if qc.enabled else None
 
 
 def _cluster_perm(keys_flat: jax.Array, num_clusters: int,
@@ -57,22 +64,31 @@ def build(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
                                            method))(feats)
 
   N = nb * na * B
-  k_sorted, v_sorted, k_syn, v_syn, counts = ops.synopsis_build(
+  qspec = _qspec(cfg)
+  built = ops.synopsis_build(
       k.reshape(N, Hkv, S, D), v.reshape(N, Hkv, S, D),
-      perms.reshape(N, S).astype(jnp.int32), cluster_size=C, impl=impl)
+      perms.reshape(N, S).astype(jnp.int32), cluster_size=C, impl=impl,
+      qconfig=qspec)
+  if qspec is None:
+    k_sorted, v_sorted, k_syn, v_syn, counts = built
+    built = {"k": k_sorted, "v": v_sorted, "k_syn": k_syn,
+             "v_syn": v_syn, "counts": counts}
   R = cfg.synopsis.recent
 
   out = {
-      "k": k_sorted.reshape(nb, na, B, Hkv, S, D),
-      "v": v_sorted.reshape(nb, na, B, Hkv, S, D),
-      "k_syn": k_syn.reshape(nb, na, B, Hkv, M, D),
-      "v_syn": v_syn.reshape(nb, na, B, Hkv, M, D),
-      "counts": counts.reshape(nb, na, B, M),
+      "k": built["k"].reshape(nb, na, B, Hkv, S, D),
+      "v": built["v"].reshape(nb, na, B, Hkv, S, D),
+      "k_syn": built["k_syn"].reshape(nb, na, B, Hkv, M, D),
+      "v_syn": built["v_syn"].reshape(nb, na, B, Hkv, M, D),
+      "counts": built["counts"].reshape(nb, na, B, M),
       "recent_k": jnp.zeros((nb, na, B, Hkv, R, D), k.dtype),
       "recent_v": jnp.zeros((nb, na, B, Hkv, R, D), v.dtype),
       "recent_len": jnp.zeros((B,), jnp.int32),
       "pos": cache["pos"],
   }
+  for name in qt.SCALE_LEAVES:
+    if name in built:
+      out[name] = built[name].reshape(nb, na, B, Hkv, M)
   for extra in ("cross_k", "cross_v", "conv_state", "ssd_state"):
     if extra in cache:
       out[extra] = cache[extra]
@@ -127,23 +143,41 @@ def absorb_recent(cache: Dict[str, jax.Array], cfg: cm.ModelConfig,
   nb, na, B, Hkv, _, D = cache["recent_k"].shape
 
   rk, rv = cache["recent_k"], cache["recent_v"]
-  k = jnp.concatenate([cache["k"], rk], axis=4)
-  v = jnp.concatenate([cache["v"], rv], axis=4)
   N = nb * na * B
   ident = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32), (N, R))
-  _, _, k_new, v_new, cnt_new = ops.synopsis_build(
+  qspec = _qspec(cfg)
+  built = ops.synopsis_build(
       rk.reshape(N, Hkv, R, D), rv.reshape(N, Hkv, R, D), ident,
-      cluster_size=C, impl=impl)
+      cluster_size=C, impl=impl, qconfig=qspec)
+  if qspec is None:
+    _, _, k_new, v_new, cnt_new = built
+    built = {"k_syn": k_new, "v_syn": v_new, "counts": cnt_new,
+             "k": rk.reshape(N, Hkv, R, D), "v": rv.reshape(N, Hkv, R, D)}
+  # The identity-permuted sorted output == the ring rows (quantized under
+  # the "+kv" specs), so concatenating the build's output covers both.
+  k = jnp.concatenate(
+      [cache["k"], built["k"].reshape(nb, na, B, Hkv, R, D).astype(
+          cache["k"].dtype)], axis=4)
+  v = jnp.concatenate(
+      [cache["v"], built["v"].reshape(nb, na, B, Hkv, R, D).astype(
+          cache["v"].dtype)], axis=4)
   k_syn = jnp.concatenate(
-      [cache["k_syn"], k_new.reshape(nb, na, B, Hkv, newM, D)], axis=4)
+      [cache["k_syn"],
+       built["k_syn"].reshape(nb, na, B, Hkv, newM, D)], axis=4)
   v_syn = jnp.concatenate(
-      [cache["v_syn"], v_new.reshape(nb, na, B, Hkv, newM, D)], axis=4)
+      [cache["v_syn"],
+       built["v_syn"].reshape(nb, na, B, Hkv, newM, D)], axis=4)
   counts = jnp.concatenate(
-      [cache["counts"], cnt_new.reshape(nb, na, B, newM)], axis=3)
-  return {**cache, "k": k, "v": v, "k_syn": k_syn, "v_syn": v_syn,
-          "counts": counts,
-          "recent_k": jnp.zeros_like(rk), "recent_v": jnp.zeros_like(rv),
-          "recent_len": jnp.zeros_like(cache["recent_len"])}
+      [cache["counts"], built["counts"].reshape(nb, na, B, newM)], axis=3)
+  out = {**cache, "k": k, "v": v, "k_syn": k_syn, "v_syn": v_syn,
+         "counts": counts,
+         "recent_k": jnp.zeros_like(rk), "recent_v": jnp.zeros_like(rv),
+         "recent_len": jnp.zeros_like(cache["recent_len"])}
+  for name in qt.SCALE_LEAVES:
+    if name in cache:
+      out[name] = jnp.concatenate(
+          [cache[name], built[name].reshape(nb, na, B, Hkv, newM)], axis=4)
+  return out
 
 
 def extend_synopsis(arena: Dict[str, jax.Array], ext_k: jax.Array,
@@ -173,20 +207,34 @@ def extend_synopsis(arena: Dict[str, jax.Array], ext_k: jax.Array,
   perms = jax.vmap(lambda f: _cluster_perm(f.astype(jnp.float32), newM,
                                            method))(feats)
   N = nb * na * B
-  k_sorted, v_sorted, k_new, v_new, cnt_new = ops.synopsis_build(
+  qspec = _qspec(cfg)
+  built = ops.synopsis_build(
       ext_k.reshape(N, Hkv, E, D), ext_v.reshape(N, Hkv, E, D),
-      perms.reshape(N, E).astype(jnp.int32), cluster_size=C, impl=impl)
-  return {**arena,
-          "k": jnp.concatenate(
-              [arena["k"], k_sorted.reshape(nb, na, B, Hkv, E, D)], axis=4),
-          "v": jnp.concatenate(
-              [arena["v"], v_sorted.reshape(nb, na, B, Hkv, E, D)], axis=4),
-          "k_syn": jnp.concatenate(
-              [arena["k_syn"], k_new.reshape(nb, na, B, Hkv, newM, D)],
-              axis=4),
-          "v_syn": jnp.concatenate(
-              [arena["v_syn"], v_new.reshape(nb, na, B, Hkv, newM, D)],
-              axis=4),
-          "counts": jnp.concatenate(
-              [arena["counts"], cnt_new.reshape(nb, na, B, newM)], axis=3),
-          "pos": arena["pos"] + E}
+      perms.reshape(N, E).astype(jnp.int32), cluster_size=C, impl=impl,
+      qconfig=qspec)
+  if qspec is None:
+    k_sorted, v_sorted, k_new, v_new, cnt_new = built
+    built = {"k": k_sorted, "v": v_sorted, "k_syn": k_new,
+             "v_syn": v_new, "counts": cnt_new}
+  out = {**arena,
+         "k": jnp.concatenate(
+             [arena["k"], built["k"].reshape(nb, na, B, Hkv, E, D).astype(
+                 arena["k"].dtype)], axis=4),
+         "v": jnp.concatenate(
+             [arena["v"], built["v"].reshape(nb, na, B, Hkv, E, D).astype(
+                 arena["v"].dtype)], axis=4),
+         "k_syn": jnp.concatenate(
+             [arena["k_syn"],
+              built["k_syn"].reshape(nb, na, B, Hkv, newM, D)], axis=4),
+         "v_syn": jnp.concatenate(
+             [arena["v_syn"],
+              built["v_syn"].reshape(nb, na, B, Hkv, newM, D)], axis=4),
+         "counts": jnp.concatenate(
+             [arena["counts"], built["counts"].reshape(nb, na, B, newM)],
+             axis=3),
+         "pos": arena["pos"] + E}
+  for name in qt.SCALE_LEAVES:
+    if name in arena:
+      out[name] = jnp.concatenate(
+          [arena[name], built[name].reshape(nb, na, B, Hkv, newM)], axis=4)
+  return out

@@ -261,6 +261,8 @@ class TestDeltaReplay:
     got = skv.extend_synopsis(arena, k_new, v_new, cfg, impl="xla")
     want = skv.extend_synopsis(arena, ref_k, ref_v, cfg, impl="xla")
     for name in kvc.ARENA_LEAVES:
+      if name not in got:            # scale leaves: quantized arenas only
+        continue
       err = float(jnp.max(jnp.abs(got[name].astype(jnp.float32)
                                   - want[name].astype(jnp.float32))))
       assert err < 1e-5, (name, err)

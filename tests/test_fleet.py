@@ -241,6 +241,8 @@ def test_fleet_admission_pins_arena_per_replica():
   topo = backend.topo
   grid = topo.shard_grid()
   for leaf in kvc.ARENA_LEAVES:
+    if leaf not in eng.cache:        # scale leaves: quantized arenas only
+      continue
     x = np.asarray(eng.cache[leaf])
     ax = 3 if leaf == "counts" else 4        # replica axis after (nb,na,B[,H])
     x = np.moveaxis(x, (ax, ax + 1), (0, 1))  # (R, N, ...)

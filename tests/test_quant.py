@@ -1,0 +1,311 @@
+"""Quantized synopsis tests (DESIGN.md §15): round-trip error bounds,
+bit-exact interpret-vs-XLA build parity (deterministic round-to-nearest
+— no stochastic rounding precisely so distinct lowerings agree on the
+encoded integers), quantized stage-1/stage-2 kernel parity including
+selected=-1 pads, the e2e fused deviation bound at full refinement
+coverage, the cache-struct/arena plumbing of the scale leaves, corpus
+fingerprint separation, the engine accuracy floor, and fleet R=2
+refcount conservation with a quantized arena.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.kernels import ops, quant, ref
+from repro.serve import corpus_cache as cc
+from repro.serve import kv_cache as kvc
+from repro.serve.engine import (CacheConfig, EngineConfig, ServingEngine,
+                                make_requests)
+
+
+def _quant_cfg(cfg, spec):
+  return dataclasses.replace(
+      cfg, synopsis=dataclasses.replace(cfg.synopsis, quant=spec))
+
+
+# -- quant.py core -----------------------------------------------------------
+
+def test_parse_qconfig_specs():
+  qc = quant.parse_qconfig(None)
+  assert qc.kind == "none" and not qc.enabled and not qc.sorted_kv
+  assert quant.parse_qconfig("none") == qc
+  qc = quant.parse_qconfig("int8")
+  assert qc.kind == "int8" and qc.enabled and not qc.sorted_kv
+  assert qc.spec == "int8"
+  qc = quant.parse_qconfig("int8+kv")
+  assert qc.kind == "int8" and qc.enabled and qc.sorted_kv
+  assert qc.spec == "int8+kv"
+  # Idempotent on QuantConfig, and exhaustive over QSPECS.
+  assert quant.parse_qconfig(qc) == qc
+  for spec in quant.QSPECS:
+    assert quant.parse_qconfig(spec).spec == spec
+  with pytest.raises(ValueError, match="quant"):
+    quant.parse_qconfig("int4")
+
+
+def test_roundtrip_bound_int8():
+  rng = np.random.default_rng(0)
+  x = jnp.asarray(rng.normal(size=(3, 5, 8, 64)).astype(np.float32) * 7)
+  q, s = quant.quantize_rows(x, "int8")
+  assert q.dtype == jnp.int8 and s.shape == x.shape[:-1]
+  back = quant.dequantize_rows(q, s)
+  # Symmetric absmax round-to-nearest: per-element error <= scale/2.
+  err = np.abs(np.asarray(back) - np.asarray(x))
+  bound = np.asarray(s)[..., None] * 0.5 + 1e-6
+  assert (err <= bound).all()
+  # Block quantization (one scale per C-row block) with C rows.
+  qb, sb = quant.quantize_rows(x, "int8", block=4)
+  assert sb.shape == x.shape[:-2] + (x.shape[-2] // 4,)
+  backb = quant.dequantize_rows(qb, sb, block=4)
+  sb_rows = np.repeat(np.asarray(sb), 4, axis=-1)
+  errb = np.abs(np.asarray(backb) - np.asarray(x))
+  assert (errb <= sb_rows[..., None] * 0.5 + 1e-6).all()
+
+
+def test_roundtrip_zero_rows_exact():
+  x = jnp.zeros((2, 4, 16), jnp.float32)
+  q, s = quant.quantize_rows(x, "int8")
+  assert not np.asarray(q).any() and not np.asarray(s).any()
+  assert not np.asarray(quant.dequantize_rows(q, s)).any()
+
+
+@pytest.mark.skipif(not quant.fp8_supported(), reason="no fp8 dtype")
+def test_roundtrip_bound_fp8():
+  rng = np.random.default_rng(1)
+  x = jnp.asarray(rng.normal(size=(2, 8, 32)).astype(np.float32))
+  q, s = quant.quantize_rows(x, "fp8")
+  assert q.dtype == quant.qdtype("fp8")
+  back = quant.dequantize_rows(q, s)
+  # fp8-e4m3 keeps ~3 mantissa bits: relative row error well under 10%.
+  dev = (np.linalg.norm(np.asarray(back) - np.asarray(x))
+         / np.linalg.norm(np.asarray(x)))
+  assert dev < 0.1, dev
+
+
+# -- kernel parity -----------------------------------------------------------
+
+def _toy(S=256, B=2, Hkv=2, G=2, D=64, C=32, seed=0):
+  ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+  q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+  k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+  v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+  perm = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+  return q, k, v, perm
+
+
+def test_build_quant_parity_interpret_vs_xla():
+  """The interpret-mode segment-build kernel and the XLA reference must
+  encode BIT-IDENTICAL integers (deterministic rounding), with scales
+  equal to float roundoff."""
+  q, k, v, perm = _toy()
+  a_x = ops.synopsis_build(k, v, perm, cluster_size=32, impl="xla",
+                           qconfig="int8+kv")
+  a_i = ops.synopsis_build(k, v, perm, cluster_size=32, impl="interpret",
+                           qconfig="int8+kv")
+  assert set(a_x) == set(a_i)
+  for name in ("k", "v", "k_syn", "v_syn"):
+    assert a_x[name].dtype == jnp.int8
+    assert np.array_equal(np.asarray(a_x[name]), np.asarray(a_i[name])), name
+  for name in quant.SCALE_LEAVES:
+    np.testing.assert_allclose(np.asarray(a_x[name]), np.asarray(a_i[name]),
+                               atol=1e-6, err_msg=name)
+  # counts identical, and the syn-only spec emits no KV scales.
+  np.testing.assert_allclose(np.asarray(a_x["counts"]),
+                             np.asarray(a_i["counts"]))
+  a_syn = ops.synopsis_build(k, v, perm, cluster_size=32, impl="xla",
+                             qconfig="int8")
+  assert "k_scale" not in a_syn and a_syn["k"].dtype == jnp.float32
+
+
+def test_stage_kernels_quant_parity_with_pads():
+  """Quantized stage-1 + stage-2 interpret-vs-XLA parity, with a
+  selection that includes -1 pads (the budget under-fill case) and
+  non-uniform counts driving the count bias."""
+  q, k, v, perm = _toy(seed=3)
+  arena = ops.synopsis_build(k, v, perm, cluster_size=32, impl="xla",
+                             qconfig="int8+kv")
+  B, Hkv, M = arena["k_syn"].shape[:3]
+  counts = arena["counts"] + jnp.arange(M, dtype=jnp.float32)[None]
+  sm = float(1 / np.sqrt(q.shape[-1]))
+  syn_scales = (arena["k_syn_scale"], arena["v_syn_scale"])
+  kv_scales = (arena["k_scale"], arena["v_scale"])
+
+  outs = {}
+  for impl in ("xla", "interpret"):
+    sc, p1 = ops.synopsis_stage1(q, arena["k_syn"], arena["v_syn"], counts,
+                                 sm_scale=sm, impl=impl,
+                                 syn_scales=syn_scales)
+    sel = jnp.tile(jnp.asarray([[3, 0, 5, -1, -1]], jnp.int32)[None],
+                   (B, Hkv, 1))
+    p2 = ops.refine_stage2(q, arena["k"], arena["v"], sel, arena["k_syn"],
+                           arena["v_syn"], counts, cluster_size=32,
+                           sm_scale=sm, impl=impl, syn_scales=syn_scales,
+                           kv_scales=kv_scales)
+    out, _, _ = ops.merge_partials(p1, p2)
+    outs[impl] = (np.asarray(sc), np.asarray(out))
+  np.testing.assert_allclose(outs["xla"][0], outs["interpret"][0],
+                             atol=2e-5, rtol=1e-5)
+  np.testing.assert_allclose(outs["xla"][1], outs["interpret"][1],
+                             atol=2e-5, rtol=1e-5)
+
+
+def test_fused_e2e_quant_deviation_bound():
+  """At full refinement coverage (i_max = M) the quantized arm's output
+  deviation vs the f32 arm is pure rounding noise — inside the ~7%
+  stage-1 floor with a wide margin."""
+  q, k, v, perm = _toy(S=512, seed=7)
+  C, M = 32, 512 // 32
+  sm = float(1 / np.sqrt(q.shape[-1]))
+  k_s, v_s, k_syn, v_syn, counts = ops.synopsis_build(
+      k, v, perm, cluster_size=C, impl="xla")
+  arena = ops.synopsis_build(k, v, perm, cluster_size=C, impl="xla",
+                             qconfig="int8+kv")
+  o_f = ops.synopsis_attention_fused(q, k_s, v_s, k_syn, v_syn, counts,
+                                     i_max=M, sm_scale=sm, impl="xla")
+  o_q = ops.synopsis_attention_fused(
+      q, arena["k"], arena["v"], arena["k_syn"], arena["v_syn"],
+      arena["counts"], arena["k_syn_scale"], arena["v_syn_scale"],
+      arena["k_scale"], arena["v_scale"], i_max=M, sm_scale=sm, impl="xla")
+  dev = (np.linalg.norm(np.asarray(o_q) - np.asarray(o_f))
+         / np.linalg.norm(np.asarray(o_f)))
+  assert dev < 0.07, dev
+  # Control arm: all-None scales are the pre-quantization code path.
+  o_n = ops.synopsis_attention_fused(q, k_s, v_s, k_syn, v_syn, counts,
+                                     None, None, None, None,
+                                     i_max=M, sm_scale=sm, impl="xla")
+  assert np.array_equal(np.asarray(o_n), np.asarray(o_f))
+
+
+def test_quant_ref_matches_plain_ref_when_unscaled():
+  """Passing all-ones scales through the scale-aware reference must
+  reproduce the unscaled reference exactly (the dequant hooks are
+  multiplicative identities)."""
+  q, k, v, perm = _toy(seed=11)
+  k_s, v_s, k_syn, v_syn, counts = ops.synopsis_build(
+      k, v, perm, cluster_size=32, impl="xla")
+  B, Hkv, M = k_syn.shape[:3]
+  ones = jnp.ones((B, Hkv, M), jnp.float32)
+  sm = 0.125
+  base = ref.fused_synopsis_score_attention_ref(
+      q, k_syn, v_syn, jnp.log(jnp.maximum(counts, 1.0)), sm_scale=sm)
+  scaled = ref.fused_synopsis_score_attention_ref(
+      q, k_syn, v_syn, jnp.log(jnp.maximum(counts, 1.0)), sm_scale=sm,
+      k_scale=ones, v_scale=ones)
+  for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(scaled)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- serve-layer plumbing ----------------------------------------------------
+
+def test_cache_struct_quant_leaves():
+  cfg = get_config("llama3-8b", smoke=True)
+  S = 2 * cfg.synopsis.cluster_size
+  base = kvc.cache_struct(cfg, 2, S, synopsis=True)
+  assert "k_syn_scale" not in base
+  st = kvc.cache_struct(_quant_cfg(cfg, "int8"), 2, S, synopsis=True)
+  assert st["k_syn"][1] == jnp.int8 and st["v_syn"][1] == jnp.int8
+  assert st["k"][1] == cfg.dtype          # syn-only: corpus KV native
+  assert st["k_syn_scale"][1] == jnp.float32 and "k_scale" not in st
+  assert st["k_syn_scale"][0] == st["k_syn"][0][:-1]
+  stkv = kvc.cache_struct(_quant_cfg(cfg, "int8+kv"), 2, S, synopsis=True)
+  assert stkv["k"][1] == jnp.int8
+  assert stkv["k_scale"][0] == stkv["k_syn_scale"][0]
+  # arena_nbytes counts whatever scale leaves are present.
+  arena = {name: jnp.zeros(st[name][0], st[name][1])
+           for name in kvc.ARENA_LEAVES if name in st}
+  per_scale = int(np.prod(st["k_syn_scale"][0])) * 4
+  base_arena = {name: jnp.zeros(base[name][0], base[name][1])
+                for name in kvc.ARENA_LEAVES if name in base}
+  assert (kvc.arena_nbytes(arena) - 2 * per_scale
+          < kvc.arena_nbytes(base_arena))
+
+
+def test_corpus_fingerprint_separates_quant():
+  cfg = get_config("llama3-8b", smoke=True)
+  fps = {spec: cc.corpus_fingerprint(_quant_cfg(cfg, spec), "xla", 64, 0)
+         for spec in ("none", "int8", "int8+kv")}
+  assert len(set(fps.values())) == 3, fps
+  # Same tokens under different quant specs must hash to different keys.
+  t = np.arange(16, dtype=np.int32)
+  keys = {cc.corpus_key(t, fp) for fp in fps.values()}
+  assert len(keys) == 3
+
+
+def test_engine_quant_accuracy_floor():
+  """The e2e serving contract: int8 and int8+kv arms run the same smoke
+  trace as quant=none and keep the engine's own exact-vs-served accuracy
+  loss inside the ~7% stage-1 floor."""
+  cfg = get_config("llama3-8b", smoke=True)
+  ecfg = EngineConfig(n_slots=2, prompt_len=64, max_new_tokens=4,
+                      deadline_ms=60.0, policy="accuracytrader", impl="xla")
+  loss = {}
+  for spec in ("none", "int8", "int8+kv"):
+    eng = ServingEngine(_quant_cfg(cfg, spec), ecfg)
+    s = eng.run(make_requests([0.0, 0.001, 0.002, 0.003], 64, 4,
+                              cfg.vocab, seed=7))
+    assert len(eng.completed) == 4
+    assert all(len(r.tokens) == 1 + 4 for r in eng.completed)
+    loss[spec] = s["accuracy_loss_pct"]
+  assert loss["int8"] <= loss["none"] + 7.0, loss
+  assert loss["int8+kv"] <= loss["none"] + 7.0, loss
+
+
+def test_engine_quant_kv_disables_delta_replay():
+  cfg = get_config("llama3-8b", smoke=True)
+  Cs = cfg.synopsis.cluster_size
+  ecfg = EngineConfig(n_slots=2, prompt_len=64, max_new_tokens=2,
+                      impl="xla", cache=CacheConfig(capacity=4,
+                                                    delta_unit=Cs))
+  assert ServingEngine(_quant_cfg(cfg, "int8"), ecfg)._delta_ok
+  assert not ServingEngine(_quant_cfg(cfg, "int8+kv"), ecfg)._delta_ok
+
+
+def test_fleet_quant_refcount_and_replication():
+  """Mirror of test_fleet_admission_pins_arena_per_replica with an
+  int8+kv arena: R pins per admission conserve across hit/retire, and
+  every replica lane — quantized tables AND scale leaves — stays
+  bit-identical to its primary shard."""
+  from repro.serve.fleet import FleetConfig, FleetStepBackend
+  cfg = _quant_cfg(get_config("llama3-8b", smoke=True), "int8+kv")
+  Cs = cfg.synopsis.cluster_size
+  backend = FleetStepBackend(FleetConfig(
+      n_components=2, replicas=2, seed=0, use_mesh=False))
+  eng = ServingEngine(cfg, EngineConfig(
+      n_slots=2, prompt_len=64, max_new_tokens=2, policy="fixed",
+      fixed_budget=1, impl="xla",
+      cache=CacheConfig(capacity=4, delta_unit=Cs)), backend=backend)
+  eng.reset()
+  reqs = make_requests([0.0, 0.0], 64, 2, cfg.vocab, seed=9)
+  reqs[1].prompt = reqs[0].prompt.copy()
+  eng._admit(reqs[0], 0)
+  entry = eng.corpus_cache.entries[eng._slot_entry[0]]
+  assert entry.refcount == 2
+  # The published arena carries the quantized dtypes + scale leaves.
+  assert entry.arena["k_syn"].dtype == jnp.int8
+  for name in quant.SCALE_LEAVES:
+    assert name in entry.arena, name
+  eng._admit(reqs[1], 1)
+  assert entry.refcount == 4
+  topo = backend.topo
+  grid = topo.shard_grid()
+  seen_scale = 0
+  for leaf in kvc.ARENA_LEAVES:
+    if leaf not in eng.cache:
+      continue
+    seen_scale += leaf in quant.SCALE_LEAVES
+    x = np.asarray(eng.cache[leaf])
+    ax = 3 if leaf == "counts" else 4
+    x = np.moveaxis(x, (ax, ax + 1), (0, 1))
+    assert np.abs(x.astype(np.float64)).sum() > 0, leaf
+    for r in range(topo.replicas):
+      for j in range(topo.n_components):
+        assert np.array_equal(x[r, j], x[0, grid[r, j]]), (leaf, r, j)
+  assert seen_scale == len(quant.SCALE_LEAVES)
+  eng._retire(0)
+  assert entry.refcount == 2
+  eng._retire(1)
+  assert entry.refcount == 0
